@@ -1,0 +1,249 @@
+"""Analytic per-device cost model — exact trip counts for §Roofline.
+
+XLA's ``cost_analysis()`` counts each ``while`` body **once**, so any
+scanned model (ours scans layer groups, query blocks and SSD chunks)
+under-reports FLOPs/bytes by ~the trip count.  This module reconstructs
+the executed cost analytically from the config, shape and sharding rules
+— the same formulas one writes on the napkin before hillclimbing — and is
+validated against ``cost_analysis`` on unrolled small configs
+(tests/test_roofline.py).
+
+Conventions:
+  * FLOPs: 2·M·N·K per matmul; blockwise-causal attention counts the full
+    computed span (masked work is still executed — honesty over flattery);
+  * training multiplier: fwd + remat-fwd + bwd = 4× layer matmul FLOPs
+    (nothing_saveable policy), logits 3× (no remat at top level);
+  * HBM bytes: parameter traffic (fwd/remat/bwd reads, grad+opt r/w),
+    activation traffic per layer (c_act·T·d), attention score traffic,
+    logits and decode-cache traffic;
+  * collectives (baseline sharding): per-layer FSDP all-gathers over
+    ``data``, per-layer TP all-reduces of activations over ``model``,
+    grad reduce-scatter over ``data``, cross-pod grad all-reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import (FFN_DENSE, FFN_MOE, FFN_NONE, MIXER_ATTN,
+                                MIXER_ATTN_LOCAL, MIXER_SSM, MIXER_XATTN,
+                                ArchConfig, InputShape)
+from repro.models.moe import capacity
+
+Q_BLOCK = 512
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass
+class MeshInfo:
+    pods: int
+    data: int
+    model: int
+
+    @property
+    def devices(self) -> int:
+        return self.pods * self.data * self.model
+
+    @property
+    def dp(self) -> int:
+        return self.pods * self.data
+
+
+def mesh_info(mesh_kind: str) -> MeshInfo:
+    return MeshInfo(2, 16, 16) if mesh_kind == "multi" else \
+        MeshInfo(1, 16, 16)
+
+
+def _div(num: float, shard: int, enabled: bool) -> float:
+    return num / shard if enabled else num
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward FLOPs (global across devices)
+# ---------------------------------------------------------------------------
+def attn_fwd_flops(cfg: ArchConfig, tokens: float, span: float) -> Dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.resolved_num_heads, cfg.num_kv_heads
+    proj = 2.0 * tokens * d * hd * (2 * h + 2 * kv)
+    attn = 2.0 * tokens * span * h * hd * 2
+    return {"proj": proj, "attn": attn}
+
+
+def mlp_fwd_flops(cfg: ArchConfig, tokens: float) -> float:
+    return 6.0 * tokens * cfg.d_model * cfg.d_ff
+
+
+def moe_fwd_flops(cfg: ArchConfig, batch: float, seq: float) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    tokens = batch * seq
+    c = capacity(cfg, int(seq))
+    router = 2.0 * tokens * d * e
+    dispatch = 2.0 * batch * seq * e * c * d * 2     # dispatch + combine
+    expert = 6.0 * batch * e * c * d * f
+    return {"router": router, "dispatch": dispatch, "expert": expert}
+
+
+def ssm_fwd_flops(cfg: ArchConfig, tokens: float, decode: bool) -> Dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.ssm_heads
+    q = cfg.ssm_chunk
+    proj = 2.0 * tokens * d * (2 * di + 2 * n + h) + 2.0 * tokens * di * d
+    conv = 2.0 * tokens * (di + 2 * n) * cfg.ssm_conv_width
+    if decode:
+        scan = 6.0 * tokens * di * n            # state update + readout
+    else:
+        scan = 2.0 * tokens * q * (n + di) + 4.0 * tokens * n * di
+    return {"proj": proj, "conv": conv, "scan": scan}
+
+
+def cell_cost(cfg: ArchConfig, shape: InputShape, mesh_kind: str,
+              rules_table: Dict) -> Dict:
+    """Per-device analytic cost for one dry-run cell."""
+    mi = mesh_info(mesh_kind)
+    b, s = shape.global_batch, shape.seq_len
+    decode = shape.kind == "decode"
+    seq_eff = 1 if decode else s
+    tokens = float(b * seq_eff)
+    t = rules_table
+
+    heads_tp = mi.model if t.get("q_heads") else 1
+    mlp_tp = mi.model if t.get("mlp") else 1
+    moe_tp = mi.model if (t.get("experts") or t.get("expert_mlp")) else 1
+    ssm_tp = mi.model if t.get("ssm_inner") else 1
+    vocab_tp = mi.model if t.get("vocab") else 1
+    dp = mi.dp if t.get("act_batch") else (
+        mi.data if t.get("act_batch") is not None else 1)
+
+    flops = 0.0
+    layer_param_bytes = 0.0
+    tp_allreduce_per_layer = 0.0   # activation bytes all-reduced over model
+    pattern = cfg.pattern()
+    g = cfg.num_groups()
+    d = cfg.d_model
+    t_loc = tokens / max(dp, 1)
+
+    for spec in pattern:
+        lf = 0.0
+        if spec.mixer in (MIXER_ATTN, MIXER_ATTN_LOCAL, MIXER_XATTN):
+            window = cfg.sliding_window if spec.mixer == MIXER_ATTN_LOCAL \
+                else 0
+            if spec.mixer == MIXER_XATTN:
+                span = cfg.num_image_tokens
+            elif decode:
+                span = min(s, window) if window else s
+            else:
+                span = min(window + Q_BLOCK, s) if window else s
+            af = attn_fwd_flops(cfg, tokens, span)
+            lf += af["proj"] / heads_tp + af["attn"] / heads_tp
+            hd = cfg.resolved_head_dim
+            layer_param_bytes += d * hd * (2 * cfg.num_heads
+                                           + 2 * cfg.num_kv_heads) * BF16
+            tp_allreduce_per_layer += t_loc * d * BF16
+        elif spec.mixer == MIXER_SSM:
+            sf = ssm_fwd_flops(cfg, tokens, decode)
+            lf += sum(sf.values()) / ssm_tp
+            di, n = cfg.d_inner, cfg.ssm_state
+            layer_param_bytes += (2 * d * di + 2 * d * n + d * cfg.ssm_heads
+                                  + di * d) * BF16
+            tp_allreduce_per_layer += t_loc * d * BF16
+        if spec.ffn == FFN_DENSE:
+            lf += mlp_fwd_flops(cfg, tokens) / mlp_tp
+            layer_param_bytes += 3 * d * cfg.d_ff * BF16
+            tp_allreduce_per_layer += t_loc * d * BF16
+        elif spec.ffn == FFN_MOE:
+            mf = moe_fwd_flops(cfg, float(b), float(seq_eff))
+            lf += mf["router"] + (mf["dispatch"] + mf["expert"]) / moe_tp
+            layer_param_bytes += (cfg.num_experts * 3 * d * cfg.d_ff) * BF16
+            tp_allreduce_per_layer += t_loc * d * BF16
+        flops += lf
+    flops *= g                                            # all layers
+    logits = 2.0 * tokens * d * cfg.vocab_size / vocab_tp
+    fwd_mult, logit_mult = (4.0, 3.0) if shape.kind == "train" else (1.0, 1.0)
+    total_flops = flops * fwd_mult + logits * logit_mult
+    flops_per_dev = total_flops / (dp * 1.0)
+    # note: TP divisors already applied per-op; dp divides the token dim.
+
+    # ---- HBM bytes per device ------------------------------------------------
+    params_local = cfg.param_count() * BF16 / (mi.data * mi.model)
+    stack_params_local = layer_param_bytes * g / (mi.data * mi.model)
+    c_act = 14.0 if shape.kind == "train" else 4.0
+    act_bytes = g * len(pattern) * c_act * t_loc * d * BF16 / 1.0
+    attn_traffic = 0.0
+    cache_bytes = 0.0
+    for spec in pattern:
+        if spec.mixer in (MIXER_ATTN, MIXER_ATTN_LOCAL):
+            window = cfg.sliding_window if spec.mixer == MIXER_ATTN_LOCAL \
+                else 0
+            span = (min(s, window) if window else s) if decode else \
+                (min(window + Q_BLOCK, s) if window else s)
+            hl = cfg.resolved_num_heads / heads_tp
+            attn_traffic += 2.0 * t_loc * span * hl * F32 \
+                * (3 if shape.kind == "train" else 1)
+            if decode:
+                cache_bytes += (b / max(dp, 1)) * span * cfg.num_kv_heads \
+                    * cfg.resolved_head_dim * 2 * BF16 / \
+                    (mi.model if t.get("cache_seq") else 1) * 2
+        elif spec.mixer == MIXER_SSM and decode:
+            cache_bytes += (b / max(dp, 1)) * cfg.ssm_heads * cfg.ssm_state \
+                * cfg.ssm_headdim * F32 * 2 / ssm_tp
+    attn_traffic *= g
+    cache_bytes *= g
+    logits_bytes = t_loc * cfg.vocab_size / vocab_tp * F32 * \
+        (3 if shape.kind == "train" else 1)
+    if shape.kind == "train":
+        mo = 2 * BF16 if cfg.param_count() > 30e9 else 2 * F32
+        weight_traffic = stack_params_local * 3 + \
+            params_local * (2 + 2) + cfg.param_count() / \
+            (mi.data * mi.model) * mo * 2
+    else:
+        weight_traffic = stack_params_local + params_local
+    hbm_per_dev = weight_traffic + act_bytes + attn_traffic + \
+        logits_bytes + cache_bytes
+
+    # ---- collective bytes per device ----------------------------------------
+    # train/prefill: weights are gathered per layer over `data` (FSDP);
+    # decode: activations are tiny, so XLA keeps weights D-sharded and
+    # all-reduces matmul *outputs* over `data` instead — no weight gathers.
+    tp_ar = 2.0 * tp_allreduce_per_layer * g * \
+        (mi.model - 1) / mi.model * (3 if shape.kind == "train" else 1)
+    if not t.get("mlp") and not t.get("ssm_inner") and not t.get("experts") \
+            and not t.get("expert_mlp"):
+        tp_ar = 0.0
+    grad_rs = 0.0
+    pod_ar = 0.0
+    if shape.kind == "decode":
+        coll = 0.0
+        data_ar = 2.0 * tp_allreduce_per_layer * g * \
+            (mi.data - 1) / mi.data
+    else:
+        fsdp_gathers = 2.0 if shape.kind == "train" else 1.0
+        coll = (layer_param_bytes * g / mi.model) * fsdp_gathers \
+            * (mi.data - 1) / mi.data
+        data_ar = 0.0
+    if shape.kind == "train":
+        grad_rs = (cfg.param_count() * BF16 / mi.model) * \
+            (mi.data - 1) / mi.data
+        if mi.pods > 1:
+            pod_ar = 2.0 * cfg.param_count() * BF16 / \
+                (mi.data * mi.model) * (mi.pods - 1) / mi.pods
+    coll_per_dev = coll + tp_ar + grad_rs + pod_ar + data_ar
+
+    return {
+        "flops_per_dev": flops_per_dev,
+        "hbm_bytes_per_dev": hbm_per_dev,
+        "collective_bytes_per_dev": coll_per_dev,
+        "breakdown": {
+            "layer_flops": flops * fwd_mult / dp,
+            "logit_flops": logits * logit_mult / dp,
+            "weight_traffic": weight_traffic,
+            "act_bytes": act_bytes,
+            "attn_traffic": attn_traffic,
+            "cache_bytes": cache_bytes,
+            "fsdp_gather": coll,
+            "tp_allreduce": tp_ar,
+            "data_allreduce": data_ar,
+            "grad_reduce_scatter": grad_rs,
+            "pod_allreduce": pod_ar,
+        },
+    }

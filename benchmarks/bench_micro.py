@@ -1,0 +1,60 @@
+"""Micro-benchmarks of federation hot paths (cache ops, checksum, DES)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import (CacheServer, Coord, Payload, Topology, fnv1a64,
+                        build_osg_federation)
+
+
+def _time(fn, n: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(verbose: bool = False):
+    topo = Topology()
+    topo.add_site("s")
+    node = topo.add_node("c", Coord("s"), 1e10)
+    cache = CacheServer("c", node, capacity_bytes=1 << 30)
+    payload = Payload.from_bytes(b"x" * 65536)
+    i = [0]
+
+    def admit():
+        cache.admit("/f", i[0], payload)
+        i[0] += 1
+
+    t_admit = _time(admit, 2000)
+    t_lookup = _time(lambda: cache.lookup("/f", i[0] - 1), 5000)
+    data = b"q" * 65536
+    t_fnv = _time(lambda: fnv1a64(data), 20)
+
+    # DES event throughput: many flows through one shared uplink.
+    from repro.core import FluidFlowSim
+    fed = build_osg_federation()
+    sim = FluidFlowSim(fed.topology, fed.net)
+
+    def proc(w):
+        yield sim.flow(fed.client("nebraska", w).node.name,
+                       fed.origins[0].node.name, 1e8, streams=4)
+
+    for w in range(100):
+        sim.spawn(proc(w))
+    t0 = time.perf_counter()
+    sim.run()
+    des_wall = time.perf_counter() - t0
+    flows_per_s = sim.completed_flows / des_wall
+    if verbose:
+        print(f"  cache.admit {t_admit:.1f} us, lookup {t_lookup:.2f} us, "
+              f"fnv1a64(64KB) {t_fnv:.0f} us, DES {flows_per_s:.0f} flows/s")
+    return [("micro.cache_admit", t_admit, "64KB_chunks"),
+            ("micro.cache_lookup", t_lookup, "lru_hit"),
+            ("micro.fnv1a64_64k", t_fnv, "pure_python_oracle"),
+            ("micro.des_flows", 1e6 / flows_per_s, "contended_uplink")]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(verbose=True):
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,150 @@
+"""§Roofline — three-term roofline per (arch × shape × mesh).
+
+  compute_s    = FLOPs_per_device / peak_FLOPs          (197 TF bf16)
+  memory_s     = HBM_bytes_per_device / HBM_bw           (819 GB/s)
+  collective_s = collective_bytes_per_device / link_bw   (50 GB/s ICI)
+
+Two sources, reported side by side:
+  * **analytic** (primary) — ``analytic_cost.cell_cost``: exact trip
+    counts for the scanned stacks (XLA's cost_analysis counts each while
+    body once — a known limitation — so scanned models under-report by
+    ~num_layers; validated against cost_analysis on unrolled configs in
+    tests/test_roofline.py);
+  * **measured** — cost_analysis() FLOPs (body-once) and HLO-parsed
+    collective bytes with loop-depth attribution: collectives inside the
+    group scan are multiplied by the scan trip count.
+
+The dominant analytic term is the bottleneck; useful-compute ratio =
+MODEL_FLOPS / analytic FLOPs exposes remat/dispatch/masking waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import types
+from pathlib import Path
+
+from repro.configs.base import SHAPES, get_config
+from repro.sharding.rules import make_rules
+
+from . import analytic_cost
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+ARTIFACTS = Path(__file__).parent / "artifacts"
+DRYRUN = ARTIFACTS / "dryrun"
+
+
+def model_flops_per_dev(rec: dict) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode), per device."""
+    n = rec["active_params"]
+    if rec["kind"] == "train":
+        total = 6.0 * n * rec["global_batch"] * rec["seq_len"]
+    elif rec["kind"] == "prefill":
+        total = 2.0 * n * rec["global_batch"] * rec["seq_len"]
+    else:
+        total = 2.0 * n * rec["global_batch"]
+    return total / rec["devices"]
+
+
+def _stub_mesh(rec: dict):
+    return types.SimpleNamespace(shape=dict(rec["mesh_shape"]))
+
+
+def measured_collective_bytes(rec: dict) -> float:
+    g = rec.get("scan_groups", 1)
+    total = 0.0
+    for kind, v in rec["collectives"].items():
+        total += v["bytes"] * (g if kind.endswith("@loop") else 1)
+    return total
+
+
+def analyse(rec: dict) -> dict:
+    import dataclasses
+    cfg = get_config(rec["arch"])
+    # the artifact records the padding it was *compiled* with (0 for
+    # pre-padding artifacts) — never inherit the config default here
+    cfg = dataclasses.replace(cfg, padded_heads=rec.get("pad_heads", 0))
+    shape = SHAPES[rec["shape"]]
+    rules = make_rules(cfg, _stub_mesh(rec),
+                       global_batch=shape.global_batch)
+    ac = analytic_cost.cell_cost(cfg, shape, rec["mesh"], rules.table)
+    meas_coll = measured_collective_bytes(rec)
+    terms = {
+        "compute": ac["flops_per_dev"] / PEAK_FLOPS,
+        "memory": ac["hbm_bytes_per_dev"] / HBM_BW,
+        # collective term: HLO-parsed wire bytes (loop-depth attributed) —
+        # the compiled truth; the analytic estimate is kept for comparison.
+        "collective": meas_coll / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_dev(rec)
+    useful = mf / ac["flops_per_dev"] if ac["flops_per_dev"] else 0.0
+    total = sum(terms.values())
+    # Roofline fraction: what share of a perfectly-overlapped step the
+    # dominant resource accounts for (higher = closer to that roofline).
+    frac = terms[dominant] / total if total else 0.0
+    return {
+        "cell": f'{rec["arch"]}|{rec["shape"]}|{rec["mesh"]}',
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        **{f"{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "roofline_fraction": frac,
+        "useful_compute_ratio": useful,
+        "measured_flops_bodyonce": rec["cost"]["flops"],
+        "measured_collective_bytes": meas_coll,
+        "analytic_collective_s":
+            ac["collective_bytes_per_dev"] / LINK_BW,
+        "peak_gib": rec["memory"]["peak_bytes"] / 2 ** 30,
+        "breakdown": ac["breakdown"],
+        "advice": advice(dominant, useful),
+    }
+
+
+def advice(dominant: str, useful: float) -> str:
+    if dominant == "compute" and useful < 0.5:
+        return ("compute-bound, <50% useful FLOPs: cut remat recompute / "
+                "MoE dispatch / masked-attention waste")
+    if dominant == "compute":
+        return "compute-bound: raise per-step batch or quantize matmuls"
+    if dominant == "memory":
+        return ("memory-bound: fuse elementwise chains, raise arithmetic "
+                "intensity, shrink optimizer/cache traffic")
+    return ("collective-bound: reshard to cut FSDP gathers, overlap "
+            "collectives with compute, compress gradients")
+
+
+def load_records(tag: str = ""):
+    recs = []
+    for f in sorted(glob.glob(str(DRYRUN / "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("tag", "") == tag:
+            recs.append(rec)
+    return recs
+
+
+def run(verbose: bool = False, tag: str = ""):
+    recs = load_records(tag)
+    rows = [analyse(r) for r in recs]
+    (ARTIFACTS / "roofline.json").write_text(json.dumps(rows, indent=1))
+    if verbose:
+        print(f'  {"cell":46s} {"compute":>9s} {"memory":>9s} '
+              f'{"collect":>9s} dom  {"useful":>6s} {"peakGiB":>8s}')
+        for r in sorted(rows, key=lambda r: r["cell"]):
+            print(f'  {r["cell"]:46s} {r["compute_s"]:9.4f} '
+                  f'{r["memory_s"]:9.4f} {r["collective_s"]:9.4f} '
+                  f'{r["dominant"][:4]:4s} {r["useful_compute_ratio"]:6.2f} '
+                  f'{r["peak_gib"]:8.2f}')
+    n_comp = sum(1 for r in rows if r["dominant"] == "compute")
+    n_mem = sum(1 for r in rows if r["dominant"] == "memory")
+    n_coll = sum(1 for r in rows if r["dominant"] == "collective")
+    return [("roofline.cells", 0.0,
+             f"n={len(rows)}_compute={n_comp}_mem={n_mem}_coll={n_coll}")]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(verbose=True):
+        print(f"{name},{us:.1f},{derived}")

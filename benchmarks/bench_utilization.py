@@ -1,0 +1,70 @@
+"""Paper Table 1 + Fig. 4 — federation utilisation via the monitoring
+pipeline.
+
+Replays a production-shaped workload (Table-2 file sizes, Table-1
+experiment byte mix, Zipf-popular working sets) through the *functional*
+federation.  Every transfer emits user-login/file-open/file-close records;
+the collector joins them and the aggregator produces the usage-by-
+experiment table (Table 1) and time-bucketed series (Fig. 4).  The ranking
+of experiments must reproduce the input mix — closing the loop on §3.2's
+monitoring design.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import (USAGE_BY_EXPERIMENT, build_osg_federation,
+                        generate_workload)
+
+ARTIFACTS = Path(__file__).parent / "artifacts"
+
+
+def run(n_requests: int = 300, verbose: bool = False):
+    fed = build_osg_federation()
+    origin = fed.origins[0]
+    sites = [s.name for s in fed.sites]
+    trace = generate_workload(sites, n_requests, duration=7 * 86400.0,
+                              seed=3, working_set=16)
+    published = set()
+    for req in trace:
+        if req.path not in published:
+            origin.put_object(req.path, min(req.size, 64 * 2 ** 20))
+            published.add(req.path)
+    clients = {}
+    for req in trace:
+        key = (req.site, req.worker % 4)
+        if key not in clients:
+            clients[key] = fed.client(req.site, req.worker % 4,
+                                      cvmfs=False)
+        client = clients[key]
+        client.now = req.time
+        client.copy(req.path)
+
+    table = fed.aggregator.usage_table()
+    series = fed.aggregator.time_series()
+    ARTIFACTS.mkdir(exist_ok=True, parents=True)
+    (ARTIFACTS / "utilization.json").write_text(json.dumps({
+        "usage_table": table, "time_series": series,
+        "records": fed.aggregator.records,
+        "input_mix": USAGE_BY_EXPERIMENT}, indent=1))
+    if verbose:
+        print("  rank  experiment                      bytes")
+        for i, (exp, b) in enumerate(table[:9]):
+            print(f"  {i + 1:>4d}  {exp:<28s} {b / 1e12:8.3f} TB")
+        print(f"  monitoring records: {fed.aggregator.records}, "
+              f"unjoined: {fed.monitor.unjoined}")
+    # Rank agreement with the input mix (top experiment must match).
+    input_rank = sorted(USAGE_BY_EXPERIMENT, key=USAGE_BY_EXPERIMENT.get,
+                        reverse=True)
+    ours_rank = [e for e, _ in table]
+    agree = sum(1 for a, b in zip(input_rank[:5], ours_rank[:5]) if a == b)
+    return [("utilization.monitoring_pipeline", 0.0,
+             f"records={fed.aggregator.records}"),
+            ("utilization.top5_rank_agreement", 0.0, f"{agree}/5"),
+            ("utilization.time_buckets", 0.0, f"{len(series)}")]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(verbose=True):
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure + fleet benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_proxy_vs_stash   paper Table 3 + Figs 6–8 (4-download protocol)
+  bench_wan_offload      paper Fig. 5 (Syracuse WAN collapse)
+  bench_utilization      paper Table 1 + Fig. 4 (monitoring pipeline)
+  bench_restart_storm    fleet: checkpoint fan-in through pod caches
+  bench_loader           fleet: federated training-data path
+  bench_micro            federation hot-path micro-benchmarks
+  bench_roofline         §Roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> int:
+    from . import (bench_loader, bench_micro, bench_proxy_vs_stash,
+                   bench_restart_storm, bench_roofline, bench_utilization,
+                   bench_wan_offload)
+    modules = [bench_proxy_vs_stash, bench_wan_offload, bench_utilization,
+               bench_restart_storm, bench_loader, bench_micro,
+               bench_roofline]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in modules:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{mod.__name__},ERROR,{type(e).__name__}:{e}",
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

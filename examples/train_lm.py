@@ -1,0 +1,73 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps,
+fed by the federation, with checkpoint/restart fault tolerance.
+
+The full production path in miniature: synthetic token shards published to
+the origin → per-pod caches → CVMFS-style chunk reads → FederatedDataLoader
+→ jitted train step → write-back checkpoints → injected failure at step 60
+→ automatic restore + exact replay.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--arch qwen2-7b]
+"""
+import argparse
+import dataclasses
+import time
+
+from repro.configs import get_config
+from repro.core import build_fleet_federation
+from repro.data import DatasetSpec, FederatedDataLoader, SyntheticTokens
+from repro.train import (AdamWConfig, FailureInjector, FederatedCheckpointer,
+                         Trainer)
+
+
+def hundred_m_config(arch: str):
+    """Scale the chosen architecture family to ~100M params."""
+    base = get_config(arch, smoke=True)
+    return dataclasses.replace(
+        base, name=f"{arch}-100m", num_layers=max(4, len(base.pattern()) * 2),
+        d_model=512, num_heads=8, num_kv_heads=4 if base.num_kv_heads else 0,
+        head_dim=64 if base.num_heads else 0,
+        d_ff=2048 if base.d_ff else 0, vocab_size=32_768,
+        ssm_state=base.ssm_state and 64, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = hundred_m_config(args.arch)
+    print(f"config: {cfg.name}: {cfg.param_count() / 1e6:.0f}M params")
+
+    fed = build_fleet_federation(num_pods=2, hosts_per_pod=8)
+    spec = DatasetSpec("train-demo", vocab_size=cfg.vocab_size,
+                       tokens_per_shard=1 << 18, num_shards=32)
+    SyntheticTokens(spec).publish(fed.origins[0])
+    loader = FederatedDataLoader(fed.client("pod0", 0), spec,
+                                 global_batch=args.batch, seq_len=args.seq)
+    ck = FederatedCheckpointer("train-demo", fed.writeback("pod0/cache"),
+                               fed.client("pod0", 1))
+    trainer = Trainer(cfg, loader,
+                      AdamWConfig(lr=3e-3, warmup_steps=20,
+                                  total_steps=args.steps),
+                      checkpointer=ck, checkpoint_every=50)
+
+    t0 = time.time()
+    report = trainer.run(args.steps,
+                         failure=FailureInjector(fail_at=[60]))
+    dt = time.time() - t0
+    print(f"ran {report.steps_run} steps in {dt:.1f}s "
+          f"({report.steps_run / dt:.1f} steps/s)")
+    print(f"loss {report.losses[0]:.3f} → {report.final_loss:.3f}")
+    print(f"restarts: {report.restarts} (restored from checkpoint at "
+          f"{report.restored_from})")
+    print(f"data-plane cache hit rate: {report.cache_hit_rate:.2f}")
+    print(f"origin egress: {fed.origins[0].stats.egress_bytes / 1e6:.1f} MB "
+          f"for {loader.stats.bytes_fetched / 1e6:.1f} MB consumed")
+    assert report.final_loss < report.losses[0], "loss must improve"
+
+
+if __name__ == "__main__":
+    main()

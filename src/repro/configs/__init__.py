@@ -1,0 +1,6 @@
+"""Architecture configs: one module per assigned architecture."""
+from .base import (ArchConfig, InputShape, SHAPES, get_config, list_archs,
+                   shapes_for)
+
+__all__ = ["ArchConfig", "InputShape", "SHAPES", "get_config", "list_archs",
+           "shapes_for"]

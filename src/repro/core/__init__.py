@@ -1,0 +1,34 @@
+"""StashCache — the paper's contribution as a composable library.
+
+A distributed caching federation: data origins, redirectors, caches and
+clients (paper §3), plus the site-HTTP-proxy baseline it is evaluated
+against (§4.1), the monitoring pipeline (§3.2), write-back caching (§6
+future work) and a fluid-flow discrete-event simulator for contended-
+network evaluation.  ``repro.data`` builds the JAX training data pipeline
+on top of this package; ``repro.train.checkpoint`` uses it for
+restart-storm checkpoint distribution.
+"""
+from .cache import CacheServer, CacheStats
+from .chunk import (DEFAULT_CHUNK_SIZE, ChunkRef, ObjectMeta, Payload,
+                    chunk_object, fnv1a64, synthetic_object)
+from .client import LocalCache, StashClient
+from .federation import (Federation, SiteSpec, build_fleet_federation,
+                         build_osg_federation, OSG_SITE_PROFILES)
+from .indexer import Catalog, Indexer
+from .monitoring import (FileClose, FileOpen, MessageBus, MonitorCollector,
+                         TransferRecord, UsageAggregator, UserLogin,
+                         experiment_of)
+from .namespace import Namespace
+from .origin import ChunkStore, Origin
+from .proxy import HTTPProxy
+from .redirector import Redirector, RedirectorPair
+from .simulator import (DownloadResult, FluidFlowSim, direct_download,
+                        proxy_download, stash_download)
+from .topology import BandwidthProfile, Coord, GeoIPService, Link, Node, Topology
+from .transfer import NetworkModel, TransferStats
+from .workload import (FILESIZE_PERCENTILES, PAPER_TABLE3, PROBE_10GB,
+                       USAGE_BY_EXPERIMENT, AccessRequest, PercentileSampler,
+                       evaluation_fileset, generate_workload)
+from .writeback import WritebackCache
+
+__all__ = [n for n in dir() if not n.startswith("_")]

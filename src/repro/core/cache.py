@@ -1,0 +1,219 @@
+"""StashCache cache servers (paper §3).
+
+Regional caches capture client data requests, check local storage, and on a
+miss locate the data via the redirector and pull it from the origin before
+serving the client.  Space is transient: the server may reclaim (evict) any
+resident chunk without breaking workflows — that is the property that makes
+opportunistic *storage* viable as a *cache*.
+
+Design split:
+  * pure state-machine methods (``lookup`` / ``admit`` / ``evict_until``)
+    are reused verbatim by the discrete-event simulator, which supplies its
+    own timing/contention; and
+  * the networked path (``get_chunk`` / ``fetch_object``) uses the
+    uncontended :class:`~repro.core.transfer.NetworkModel` and emits
+    monitoring packets, serving the functional data loader.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import OrderedDict
+from typing import Dict, Optional, Set, Tuple
+
+from .chunk import ObjectMeta, Payload
+from .monitoring import FileClose, FileOpen, MonitorCollector, UserLogin
+from .redirector import RedirectorPair
+from .topology import Node
+from .transfer import NetworkModel, TransferStats
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_served: int = 0
+    bytes_from_origin: int = 0
+    bytes_evicted: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class CacheServer:
+    """An LRU, chunk-granular cache server."""
+
+    _ids = itertools.count(1)
+
+    def __init__(self, name: str, node: Node, capacity_bytes: int,
+                 redirectors: Optional[RedirectorPair] = None,
+                 net: Optional[NetworkModel] = None,
+                 monitor: Optional[MonitorCollector] = None,
+                 mem_object_max: float = 4e9,
+                 disk_bw: float = 0.0) -> None:
+        self.name = name
+        self.node = node
+        self.capacity_bytes = capacity_bytes
+        self.mem_object_max = mem_object_max
+        self.disk_bw = disk_bw
+        self.redirectors = redirectors
+        self.net = net
+        self.monitor = monitor
+        self.available = True  # failure injection point
+        # (path, chunk_index) -> Payload, in LRU order (front = coldest).
+        self._lru: "OrderedDict[Tuple[str, int], Payload]" = OrderedDict()
+        self._pinned: Set[Tuple[str, int]] = set()
+        self._metas: Dict[str, ObjectMeta] = {}
+        self.usage_bytes = 0
+        self.stats = CacheStats()
+        self._file_ids = itertools.count(1)
+        self._user_ids = itertools.count(1)
+
+    # ------------------------------------------------------------------
+    # Pure cache state machine (shared with the simulator)
+    # ------------------------------------------------------------------
+    def lookup(self, path: str, index: int) -> Optional[Payload]:
+        key = (path, index)
+        payload = self._lru.get(key)
+        if payload is None:
+            self.stats.misses += 1
+            return None
+        self._lru.move_to_end(key)
+        self.stats.hits += 1
+        return payload
+
+    def resident(self, path: str, index: int) -> bool:
+        """Peek without perturbing LRU order or counters."""
+        return (path, index) in self._lru
+
+    def object_resident(self, meta: ObjectMeta) -> bool:
+        return all(self.resident(meta.path, i) for i in range(meta.num_chunks))
+
+    def admit(self, path: str, index: int, payload: Payload) -> None:
+        """Insert a chunk, evicting LRU chunks to make room.  In-flight
+        (pinned) chunks are never evicted."""
+        key = (path, index)
+        if key in self._lru:
+            self._lru.move_to_end(key)
+            return
+        self.evict_until(payload.size)
+        self._lru[key] = payload
+        self.usage_bytes += payload.size
+
+    def evict_until(self, incoming: int) -> None:
+        while self.usage_bytes + incoming > self.capacity_bytes and self._lru:
+            victim = next((k for k in self._lru if k not in self._pinned), None)
+            if victim is None:
+                break  # everything pinned; over-commit rather than deadlock
+            payload = self._lru.pop(victim)
+            self.usage_bytes -= payload.size
+            self.stats.evictions += 1
+            self.stats.bytes_evicted += payload.size
+
+    def serve_rate_cap(self, object_size: int) -> float:
+        """xrootd disk caches stream large objects at disk speed."""
+        if self.disk_bw and object_size > self.mem_object_max:
+            return self.disk_bw
+        return 0.0
+
+    def pin(self, path: str, index: int) -> None:
+        self._pinned.add((path, index))
+
+    def unpin(self, path: str, index: int) -> None:
+        self._pinned.discard((path, index))
+
+    def drop(self, path: str, index: int) -> None:
+        payload = self._lru.pop((path, index), None)
+        if payload is not None:
+            self.usage_bytes -= payload.size
+
+    def corrupt(self, path: str, index: int) -> None:
+        """Bit-flip a resident chunk (integrity tests)."""
+        key = (path, index)
+        if key in self._lru:
+            self._lru[key] = self._lru[key].corrupted()
+
+    # ------------------------------------------------------------------
+    # Networked path (functional federation)
+    # ------------------------------------------------------------------
+    def locate_meta(self, path: str) -> Optional[ObjectMeta]:
+        if path in self._metas:
+            return self._metas[path]
+        origin = self.redirectors.locate(path) if self.redirectors else None
+        if origin is None:
+            return None
+        meta = origin.meta(path)
+        self._metas[path] = meta
+        return meta
+
+    def get_chunk(self, client_node: str, path: str, index: int,
+                  streams: int = 1) -> Tuple[Optional[Payload], TransferStats]:
+        """Serve one chunk to a client; on miss, locate + pull from origin.
+
+        Time accounting covers: (miss only) redirector RPC + origin→cache
+        transfer, then cache→client transfer.
+        """
+        if not self.available:
+            raise ConnectionError(f"cache {self.name} unavailable")
+        stats = TransferStats(source=self.name)
+        payload = self.lookup(path, index)
+        if payload is None:
+            origin = self.redirectors.locate(path) if self.redirectors else None
+            if origin is None:
+                return None, stats
+            # redirector round-trip, then chunk pull over the WAN/DCN.
+            redirector_node = self.redirectors.members[0].node.name
+            stats.seconds += self.net.rpc_time(self.node.name, redirector_node)
+            self.pin(path, index)
+            try:
+                payload = origin.read_chunk(path, index)
+                stats.seconds += self.net.transfer_time(
+                    origin.node.name, self.node.name, payload.size,
+                    streams=max(streams, 4))
+                stats.bytes_from_origin = 0  # tracked on CacheStats below
+                self.stats.bytes_from_origin += payload.size
+                self.admit(path, index, payload)
+            finally:
+                self.unpin(path, index)
+            stats.cache_misses += 1
+        else:
+            stats.cache_hits += 1
+        # cache → client hop (disk-bound for large objects).
+        meta = self._metas.get(path)
+        obj_size = meta.size if meta is not None else payload.size
+        stats.seconds += self.net.transfer_time(
+            self.node.name, client_node, payload.size, streams=streams,
+            rate_cap=self.serve_rate_cap(obj_size))
+        stats.bytes += payload.size
+        stats.chunks += 1
+        self.stats.bytes_served += payload.size
+        return payload, stats
+
+    # ------------------------------------------------------------------
+    # Monitoring hooks (paper §3.2)
+    # ------------------------------------------------------------------
+    def open_session(self, client_host: str, protocol: str, now: float,
+                     ipv6: bool = False) -> int:
+        user_id = next(self._user_ids)
+        if self.monitor:
+            self.monitor.user_login(UserLogin(self.name, user_id, client_host,
+                                              protocol, ipv6, now))
+        return user_id
+
+    def open_file(self, user_id: int, meta: ObjectMeta, now: float) -> int:
+        file_id = next(self._file_ids)
+        if self.monitor:
+            self.monitor.file_open(FileOpen(self.name, file_id, user_id,
+                                            meta.path, meta.size, now))
+        return file_id
+
+    def close_file(self, file_id: int, bytes_read: int, n_ops: int,
+                   now: float, cache_hit: Optional[bool] = None,
+                   bytes_written: int = 0) -> None:
+        if self.monitor:
+            self.monitor.file_close(
+                FileClose(self.name, file_id, bytes_read, bytes_written,
+                          n_ops, now), cache_hit=cache_hit)

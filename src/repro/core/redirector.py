@@ -1,0 +1,99 @@
+"""Redirectors — the data-discovery service (paper §3).
+
+Caches query the redirector for the location of data; the redirector polls
+its subscribed origins and returns the hostname of the one that holds the
+path.  StashCache runs *two* redirectors in a round-robin, high-availability
+configuration; ``RedirectorPair`` reproduces that: requests alternate
+between the two, and a dead redirector is skipped transparently.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from .namespace import Namespace
+from .origin import Origin
+from .topology import Node
+
+
+@dataclasses.dataclass
+class RedirectorStats:
+    locate_requests: int = 0
+    origin_polls: int = 0
+    not_found: int = 0
+
+
+class Redirector:
+    """A single redirector instance."""
+
+    def __init__(self, name: str, node: Node) -> None:
+        self.name = name
+        self.node = node
+        self.namespace = Namespace()
+        self.origins: Dict[str, Origin] = {}
+        self.stats = RedirectorStats()
+        self.available = True  # failure injection point
+
+    def subscribe(self, origin: Origin) -> None:
+        """Origins subscribe to the redirector (paper §3)."""
+        self.origins[origin.name] = origin
+        for prefix in origin.exports:
+            self.namespace.register(prefix, origin.name)
+
+    def locate(self, path: str) -> Optional[Origin]:
+        """Find the origin that holds ``path``.
+
+        The namespace gives the candidate by longest-prefix match; the
+        redirector then *asks the origin* whether it really has the file
+        (the paper's query-the-origins step), falling back to polling all
+        subscribed origins if the prefix owner denies it.
+        """
+        if not self.available:
+            raise ConnectionError(f"redirector {self.name} unavailable")
+        self.stats.locate_requests += 1
+        owner = self.namespace.resolve(path)
+        if owner is not None:
+            self.stats.origin_polls += 1
+            origin = self.origins[owner]
+            if origin.has(path):
+                return origin
+        for origin in self.origins.values():
+            if origin.name == owner:
+                continue
+            self.stats.origin_polls += 1
+            if origin.has(path):
+                return origin
+        self.stats.not_found += 1
+        return None
+
+
+class RedirectorPair:
+    """Two redirectors in round-robin, high-availability configuration."""
+
+    def __init__(self, primary: Redirector, secondary: Redirector) -> None:
+        self.members = [primary, secondary]
+        self._next = 0
+        self.failovers = 0
+
+    def subscribe(self, origin: Origin) -> None:
+        for r in self.members:
+            r.subscribe(origin)
+
+    def locate(self, path: str) -> Optional[Origin]:
+        for attempt in range(len(self.members)):
+            r = self.members[self._next % len(self.members)]
+            self._next += 1
+            if not r.available:
+                self.failovers += 1
+                continue
+            return r.locate(path)
+        raise ConnectionError("all redirectors unavailable")
+
+    @property
+    def stats(self) -> RedirectorStats:
+        agg = RedirectorStats()
+        for r in self.members:
+            agg.locate_requests += r.stats.locate_requests
+            agg.origin_polls += r.stats.origin_polls
+            agg.not_found += r.stats.not_found
+        return agg

@@ -1,0 +1,323 @@
+"""Discrete-event, fluid-flow network simulator.
+
+The paper's evaluation runs on a *contended* production network ("we have
+no visibility into the resource contention of the network, caches, proxies,
+or origin server").  To reproduce Table 3 / Figs 5–8 — and to project the
+federation to a 1000+-node fleet — we simulate transfers as fluid flows
+over shared links with **max-min fair sharing** plus a per-flow cap of
+``streams × (tcp_window / rtt)`` (the same per-stream model as
+:class:`~repro.core.transfer.NetworkModel`, so the functional path and the
+simulator agree in the uncontended limit).
+
+Scenario logic is written as generator coroutines: ``yield sim.delay(s)``
+(RPCs, GeoIP lookups) and ``yield sim.flow(src, dst, nbytes, streams)``
+(bulk transfers).  Cache/proxy *state machines* are the very same objects
+used by the functional federation — only timing differs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, Generator, List, Optional, Tuple
+
+from .cache import CacheServer
+from .chunk import ObjectMeta, Payload
+from .proxy import HTTPProxy
+from .topology import Link, Topology
+from .transfer import NetworkModel
+
+
+class _Waitable:
+    pass
+
+
+@dataclasses.dataclass
+class _Delay(_Waitable):
+    seconds: float
+
+
+class Event(_Waitable):
+    """One-shot condition (collapsed-forwarding waits, barriers...)."""
+
+    def __init__(self, sim: "FluidFlowSim") -> None:
+        self._sim = sim
+        self.is_set = False
+        self._waiters: List["_Proc"] = []
+
+    def set(self) -> None:
+        self.is_set = True
+        for proc in self._waiters:
+            self._sim._schedule(self._sim.t,
+                                lambda p=proc: self._sim._step(p, None))
+        self._waiters.clear()
+
+
+class Flow(_Waitable):
+    _ids = itertools.count()
+
+    def __init__(self, src: str, dst: str, nbytes: float, streams: int,
+                 links: List[Link], cap: float) -> None:
+        self.id = next(Flow._ids)
+        self.src, self.dst = src, dst
+        self.remaining = float(max(nbytes, 1.0))
+        self.nbytes = nbytes
+        self.streams = streams
+        self.links = links
+        self.cap = cap            # streams × per-stream TCP ceiling
+        self.rate = 0.0
+        self.started_at: float = 0.0
+        self.finished_at: Optional[float] = None
+        self.waiter: Optional["_Proc"] = None
+
+
+class _Proc:
+    def __init__(self, gen: Generator, on_exit: Optional[Callable] = None):
+        self.gen = gen
+        self.on_exit = on_exit
+
+
+class FluidFlowSim:
+    """Event loop + max-min fair bandwidth allocation."""
+
+    def __init__(self, topology: Topology,
+                 net: Optional[NetworkModel] = None) -> None:
+        self.topology = topology
+        self.net = net or NetworkModel(topology)
+        self.t = 0.0
+        self._eventq: List[Tuple[float, int, Callable]] = []
+        self._eid = itertools.count()
+        self.active: List[Flow] = []
+        self.completed_flows = 0
+        self.link_bytes: Dict[str, float] = {}
+
+    # -- coroutine API -------------------------------------------------------
+    def delay(self, seconds: float) -> _Delay:
+        return _Delay(max(0.0, seconds))
+
+    def event(self) -> Event:
+        return Event(self)
+
+    def flow(self, src: str, dst: str, nbytes: float,
+             streams: int = 1, rate_cap: float = 0.0) -> Flow:
+        links = self.topology.path(src, dst)
+        rtt = self.topology.rtt(src, dst)
+        cap = max(1, streams) * self.net.per_stream_cap(rtt)
+        if rate_cap:
+            cap = min(cap, rate_cap)
+        return Flow(src, dst, nbytes, streams, links, cap)
+
+    def spawn(self, gen: Generator, at: Optional[float] = None,
+              on_exit: Optional[Callable] = None) -> None:
+        proc = _Proc(gen, on_exit)
+        self._schedule(self.t if at is None else at,
+                       lambda: self._step(proc, None))
+
+    def _schedule(self, t: float, fn: Callable) -> None:
+        heapq.heappush(self._eventq, (t, next(self._eid), fn))
+
+    def _step(self, proc: _Proc, value) -> None:
+        try:
+            waitable = proc.gen.send(value)
+        except StopIteration:
+            if proc.on_exit:
+                proc.on_exit(self.t)
+            return
+        if isinstance(waitable, _Delay):
+            self._schedule(self.t + waitable.seconds,
+                           lambda: self._step(proc, None))
+        elif isinstance(waitable, Flow):
+            waitable.waiter = proc
+            waitable.started_at = self.t
+            self.active.append(waitable)
+        elif isinstance(waitable, Event):
+            if waitable.is_set:
+                self._schedule(self.t, lambda: self._step(proc, None))
+            else:
+                waitable._waiters.append(proc)
+        else:  # pragma: no cover - defensive
+            raise TypeError(f"cannot wait on {waitable!r}")
+
+    # -- max-min fair allocation ----------------------------------------------
+    def _reallocate(self) -> None:
+        unfixed = set(range(len(self.active)))
+        cap_left: Dict[int, float] = {}
+        link_flows: Dict[int, List[int]] = {}
+        links: Dict[int, Link] = {}
+        for fi in unfixed:
+            for link in self.active[fi].links:
+                lid = id(link)
+                links[lid] = link
+                cap_left.setdefault(lid, link.bandwidth)
+                link_flows.setdefault(lid, []).append(fi)
+        for f in self.active:
+            f.rate = 0.0
+        while unfixed:
+            # Most-constrained link's equal share.
+            best_share, best_lid = float("inf"), None
+            for lid, flows in link_flows.items():
+                n = sum(1 for fi in flows if fi in unfixed)
+                if n == 0:
+                    continue
+                share = cap_left[lid] / n
+                if share < best_share:
+                    best_share, best_lid = share, lid
+            # Flows whose own TCP cap binds before the link share.
+            capped = [fi for fi in unfixed if self.active[fi].cap < best_share]
+            if capped:
+                for fi in capped:
+                    f = self.active[fi]
+                    f.rate = f.cap
+                    unfixed.discard(fi)
+                    for link in f.links:
+                        cap_left[id(link)] = max(
+                            0.0, cap_left[id(link)] - f.rate)
+                continue
+            if best_lid is None:
+                for fi in unfixed:
+                    self.active[fi].rate = self.active[fi].cap
+                break
+            fixed_now = [fi for fi in link_flows[best_lid] if fi in unfixed]
+            for fi in fixed_now:
+                f = self.active[fi]
+                f.rate = best_share
+                unfixed.discard(fi)
+                for link in f.links:
+                    if id(link) != best_lid:
+                        cap_left[id(link)] = max(
+                            0.0, cap_left[id(link)] - f.rate)
+            cap_left[best_lid] = 0.0
+
+    # -- event loop -------------------------------------------------------------
+    def run(self, until: Optional[float] = None) -> float:
+        while self._eventq or self.active:
+            self._reallocate()
+            t_finish, winner = float("inf"), None
+            for f in self.active:
+                tf = self.t + (f.remaining / f.rate if f.rate > 0
+                               else float("inf"))
+                if tf < t_finish:
+                    t_finish, winner = tf, f
+            t_event = self._eventq[0][0] if self._eventq else float("inf")
+            t_next = min(t_finish, t_event)
+            if until is not None and t_next > until:
+                self._advance(until - self.t)
+                self.t = until
+                return self.t
+            if t_next is float("inf"):
+                break
+            self._advance(t_next - self.t)
+            self.t = t_next
+            if t_finish <= t_event and winner is not None:
+                winner.remaining = 0.0
+                winner.finished_at = self.t
+                self.active.remove(winner)
+                self.completed_flows += 1
+                if winner.waiter is not None:
+                    self._step(winner.waiter, winner)
+            else:
+                _, _, fn = heapq.heappop(self._eventq)
+                fn()
+        return self.t
+
+    def _advance(self, dt: float) -> None:
+        if dt <= 0:
+            return
+        for f in self.active:
+            moved = f.rate * dt
+            f.remaining = max(0.0, f.remaining - moved)
+            for link in f.links:
+                self.link_bytes[link.name] = \
+                    self.link_bytes.get(link.name, 0.0) + moved
+
+
+# ---------------------------------------------------------------------------
+# Paper scenarios (used by benchmarks/bench_proxy_vs_stash.py etc.)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class DownloadResult:
+    path: str
+    size: int
+    method: str
+    seconds: float = 0.0
+    cache_hit: bool = False
+    start: float = 0.0
+
+
+def stash_download(sim: FluidFlowSim, client_node: str, cache: CacheServer,
+                   origin_node: str, redirector_node: str, meta: ObjectMeta,
+                   geoip_latency: float, streams: int = 8,
+                   result: Optional[DownloadResult] = None) -> Generator:
+    """stashcp against the nearest cache: GeoIP lookup → (miss: redirector
+    RPC + origin→cache pull, with collapsed forwarding — concurrent
+    requests for an in-flight chunk wait rather than re-pull) →
+    cache→client multi-stream transfer."""
+    t0 = sim.t
+    yield sim.delay(geoip_latency)
+    if not hasattr(cache, "_sim_inflight"):
+        cache._sim_inflight = {}
+    refs = meta.chunk_refs()
+    missing, wait_for = [], []
+    for r in refs:
+        key = (meta.path, r.index)
+        if cache.resident(meta.path, r.index):
+            cache.lookup(meta.path, r.index)          # counts the hit
+        elif key in cache._sim_inflight:
+            wait_for.append(cache._sim_inflight[key])  # collapsed forwarding
+        else:
+            cache.stats.misses += 1
+            cache._sim_inflight[key] = sim.event()
+            missing.append(r)
+    if missing:
+        yield sim.delay(sim.net.rpc_time(cache.node.name, redirector_node))
+        miss_bytes = sum(r.length for r in missing)
+        yield sim.flow(origin_node, cache.node.name, miss_bytes, streams=4)
+        cache.stats.bytes_from_origin += miss_bytes
+        for r in missing:
+            cache.admit(meta.path, r.index,
+                        Payload.synthetic(r.length, meta.path, r.index))
+            ev = cache._sim_inflight.pop((meta.path, r.index), None)
+            if ev is not None:
+                ev.set()
+    for ev in wait_for:
+        yield ev
+        cache.stats.hits += 1  # served from cache once the pull lands
+    yield sim.flow(cache.node.name, client_node, meta.size, streams=streams,
+                   rate_cap=cache.serve_rate_cap(meta.size))
+    cache.stats.bytes_served += meta.size
+    if result is not None:
+        result.seconds = sim.t - t0
+        result.cache_hit = not missing
+        result.start = t0
+
+
+def proxy_download(sim: FluidFlowSim, client_node: str, proxy: HTTPProxy,
+                   origin_node: str, meta: ObjectMeta,
+                   result: Optional[DownloadResult] = None) -> Generator:
+    """curl via the site squid: zero discovery cost, single-stream HTTP,
+    whole-object granularity, TTL + size-cap admission."""
+    t0 = sim.t
+    entry = proxy.lookup(meta.path, sim.t)
+    if entry is None:
+        yield sim.flow(origin_node, proxy.node.name, meta.size, streams=1)
+        proxy.stats.bytes_from_origin += meta.size
+        proxy.admit(meta.path, meta.size, sim.t)
+    yield sim.flow(proxy.node.name, client_node, meta.size, streams=1,
+                   rate_cap=proxy.serve_rate_cap(meta.size))
+    proxy.stats.bytes_served += meta.size
+    if result is not None:
+        result.seconds = sim.t - t0
+        result.cache_hit = entry is not None
+        result.start = t0
+
+
+def direct_download(sim: FluidFlowSim, client_node: str, origin_node: str,
+                    meta: ObjectMeta, streams: int = 1,
+                    result: Optional[DownloadResult] = None) -> Generator:
+    """No caching layer at all: every worker pulls from the origin (the
+    WAN-saturating counterfactual behind paper Fig. 5)."""
+    t0 = sim.t
+    yield sim.flow(origin_node, client_node, meta.size, streams=streams)
+    if result is not None:
+        result.seconds = sim.t - t0
+        result.start = t0

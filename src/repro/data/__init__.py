@@ -1,0 +1,6 @@
+"""Data pipeline: federation-backed token shards + loader."""
+from .dataset import DatasetSpec, SyntheticTokens, decode_tokens
+from .loader import FederatedDataLoader, LoaderStats
+
+__all__ = ["DatasetSpec", "SyntheticTokens", "decode_tokens",
+           "FederatedDataLoader", "LoaderStats"]

@@ -1,0 +1,163 @@
+"""FederatedDataLoader — the paper's data path feeding a JAX train loop.
+
+Each training step needs ``(global_batch × seq_len)`` tokens.  The loader
+maps ``step → (shard, offset)`` deterministically (restart-safe: resuming
+at step k re-reads exactly the right slice), fetches the covering chunks
+from the *nearest pod cache* via the CVMFS-style client (partial reads —
+only the chunks overlapping the slice move), and assembles the batch.
+
+Fleet behaviours layered on the paper's client:
+  * **prefetch** — a sliding window of future steps is fetched eagerly so
+    the accelerator never waits on the federation (double buffering);
+  * **straggler mitigation / hedging** — if the nearest cache is down or
+    a fetch estimate exceeds ``hedge_after`` × the median, the fetch is
+    retried against the next-nearest cache (the client's failover chain);
+  * **locality accounting** — per-step TransferStats feed the monitoring
+    pipeline, so cache hit rates during training are observable exactly
+    like paper Fig. 4.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.client import StashClient
+from ..core.transfer import TransferStats
+from .dataset import DatasetSpec, TOKEN_DTYPE, decode_tokens
+
+
+@dataclasses.dataclass
+class LoaderStats:
+    steps: int = 0
+    bytes_fetched: int = 0
+    fetch_seconds: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    hedged: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.cache_hits + self.cache_misses
+        return self.cache_hits / tot if tot else 0.0
+
+
+class FederatedDataLoader:
+    """Deterministic step→tokens mapping over federation shard objects."""
+
+    def __init__(self, client: StashClient, spec: DatasetSpec,
+                 global_batch: int, seq_len: int,
+                 rank: int = 0, world: int = 1,
+                 prefetch: int = 2,
+                 hedge_after: float = 4.0) -> None:
+        self.client = client
+        self.spec = spec
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.rank = rank
+        self.world = world
+        self.prefetch_depth = prefetch
+        self.hedge_after = hedge_after
+        self.stats = LoaderStats()
+        self._buffer: Dict[int, np.ndarray] = {}
+        self._fetch_times: Deque[float] = collections.deque(maxlen=32)
+
+    # -- step → data mapping -------------------------------------------------
+    @property
+    def tokens_per_step(self) -> int:
+        # +1 token so labels are inputs shifted by one.
+        per_rank_rows = self.global_batch // self.world
+        return per_rank_rows * (self.seq_len + 1)
+
+    def slices_for_step(self, step: int) -> List[Tuple[int, int, int]]:
+        """[(shard_idx, token_offset, token_count)] covering this step's
+        slice for this rank (deterministic, restart-safe)."""
+        need = self.tokens_per_step
+        start_tok = (step * self.global_batch // self.world
+                     * (self.seq_len + 1)
+                     + self.rank * need)
+        out = []
+        while need > 0:
+            pos = start_tok % (self.spec.tokens_per_shard
+                               * self.spec.num_shards)
+            shard = pos // self.spec.tokens_per_shard
+            off = pos % self.spec.tokens_per_shard
+            take = min(need, self.spec.tokens_per_shard - off)
+            out.append((shard, off, take))
+            start_tok += take
+            need -= take
+        return out
+
+    # -- fetching -----------------------------------------------------------
+    def _fetch_slice(self, shard: int, tok_off: int,
+                     tok_count: int) -> np.ndarray:
+        path = self.spec.shard_path(shard)
+        byte_off = tok_off * TOKEN_DTYPE().itemsize
+        byte_len = tok_count * TOKEN_DTYPE().itemsize
+        local_before = self.client.stats.local_hits
+        raw, st = self.client.read(path, offset=byte_off, length=byte_len)
+        self._account(st)
+        # the worker-local (CVMFS) cache is the best hit of all
+        self.stats.cache_hits += self.client.stats.local_hits - local_before
+        # Hedge: if this fetch is a straggler vs the recent median,
+        # retry against the next-nearest cache and take the fast copy.
+        if self._fetch_times and st.seconds > self.hedge_after * \
+                float(np.median(self._fetch_times)):
+            self.stats.hedged += 1
+            self.client.stats.hedged_fetches = getattr(
+                self.client.stats, "hedged_fetches", 0) + 1
+            primary = self.client.geoip.nearest(
+                self.client.node.name, list(self.client.caches))[0]
+            backup = self.client.caches.get(primary)
+            if backup is not None:
+                backup_was = backup.available
+                backup.available = False       # force next-nearest
+                try:
+                    raw2, st2 = self.client.read(path, offset=byte_off,
+                                                 length=byte_len)
+                    self._account(st2)
+                    if st2.seconds < st.seconds and raw2 is not None:
+                        raw = raw2
+                finally:
+                    backup.available = backup_was
+        self._fetch_times.append(st.seconds)
+        return decode_tokens(raw)
+
+    def _account(self, st: TransferStats) -> None:
+        self.stats.bytes_fetched += st.bytes
+        self.stats.fetch_seconds += st.seconds
+        self.stats.cache_hits += st.cache_hits
+        self.stats.cache_misses += st.cache_misses
+
+    def fetch_step(self, step: int) -> np.ndarray:
+        if step in self._buffer:
+            return self._buffer.pop(step)
+        parts = [self._fetch_slice(*s) for s in self.slices_for_step(step)]
+        flat = np.concatenate(parts)
+        rows = self.global_batch // self.world
+        return flat.reshape(rows, self.seq_len + 1)
+
+    def prefetch(self, next_step: int) -> None:
+        for s in range(next_step, next_step + self.prefetch_depth):
+            if s not in self._buffer:
+                parts = [self._fetch_slice(*sl)
+                         for sl in self.slices_for_step(s)]
+                rows = self.global_batch // self.world
+                self._buffer[s] = np.concatenate(parts).reshape(
+                    rows, self.seq_len + 1)
+
+    # -- the train-loop interface ----------------------------------------------
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        arr = self.fetch_step(step)
+        self.stats.steps += 1
+        self.prefetch(step + 1)
+        return {"tokens": arr[:, :-1].astype(np.int32),
+                "labels": arr[:, 1:].astype(np.int32)}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

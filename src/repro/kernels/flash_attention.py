@@ -1,0 +1,126 @@
+"""Flash attention (causal / sliding-window GQA) as a Pallas TPU kernel.
+
+Canonical online-softmax tiling: grid (batch, q_heads, n_q_blocks,
+n_kv_blocks) with the innermost (kv) dimension executed sequentially per
+core, carrying running max / denominator / accumulator in VMEM scratch.
+BlockSpecs keep one (q_block × head_dim) query tile and one (kv_block ×
+head_dim) KV tile resident; KV heads are indexed by ``h // group`` so GQA
+never materialises repeated KV in HBM.  Block sizes default to MXU-aligned
+(128) multiples.
+
+This replaces the jnp blockwise path (``repro.models.attention``) on real
+TPUs; correctness is validated in interpret mode against
+``repro.kernels.ref.attention_ref`` across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  q_block: int, kv_block: int, n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # (qb, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (kb, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = qi * q_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (q_block, kv_block), 0)
+    cols = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (q_block, kv_block), 1)
+    mask = jnp.ones((q_block, kv_block), jnp.bool_)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    # fully-masked rows (early q rows in windowed blocks): avoid inf-inf
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom[:, None]) \
+            .astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0,
+                    q_block: int = 128, kv_block: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, S, KV, hd) → (B, S, H, hd)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, s)
+    n_q = -(-s // q_block)
+    n_kv = -(-s // kv_block)
+    if s % q_block or s % kv_block:
+        pad_to = max(n_q * q_block, n_kv * kv_block)
+        q = jnp.pad(q, ((0, 0), (0, pad_to - s), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_to - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_to - s), (0, 0), (0, 0)))
+        n_q = pad_to // q_block
+        n_kv = pad_to // kv_block
+    grid = (b, h, n_q, n_kv)
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / hd ** 0.5, causal=causal, window=window,
+        softcap=softcap, q_block=q_block, kv_block=kv_block, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, 1, hd),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, kv_block, 1, hd),
+                         lambda bi, hi, qi, ki, g=group:
+                         (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, kv_block, 1, hd),
+                         lambda bi, hi, qi, ki, g=group:
+                         (bi, ki, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, 1, hd),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s]

@@ -1,0 +1,46 @@
+"""Backend-dispatching wrappers: Pallas on TPU, jnp oracle elsewhere.
+
+Model code calls these; the dry-run (CPU backend, 512 fake host devices)
+and CPU tests automatically take the jnp path, real TPUs take the kernel.
+Set ``FORCE_INTERPRET=True`` (tests do) to run the kernel bodies in
+interpret mode on CPU for correctness validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .chunk_checksum import chunk_checksum as _checksum_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .ssd_scan import ssd_intra as _ssd_pallas
+
+FORCE_INTERPRET = False
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    if _on_tpu() or FORCE_INTERPRET:
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             softcap=softcap,
+                             interpret=not _on_tpu())
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+
+
+def chunk_checksum(data, block: int = 1024):
+    if _on_tpu() or FORCE_INTERPRET:
+        return _checksum_pallas(data, block, interpret=not _on_tpu())
+    return ref.poly_digest_ref(data, block)[0]
+
+
+def ssd_intra(x, dt, cum, b_in, c_in):
+    if _on_tpu() or FORCE_INTERPRET:
+        return _ssd_pallas(x, dt, cum, b_in, c_in,
+                           interpret=not _on_tpu())
+    return ref.ssd_intra_ref(x, dt, cum, b_in, c_in)

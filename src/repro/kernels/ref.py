@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FNV_PRIME = 0x01000193
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0) -> jax.Array:
+    """O(S²) GQA attention. q: (B,S,H,hd); k/v: (B,S,KV,hd)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / hd ** 0.5
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= j > i - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def poly_digest_ref(data: jax.Array, block: int = 1024) -> jax.Array:
+    """Blockwise degree-weighted polynomial hash (uint32 wraparound)."""
+    flat = data.reshape(-1).astype(jnp.uint32)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+
+    def powers(n):
+        def step(c, _):
+            return c * jnp.uint32(FNV_PRIME), c
+        _, ps = jax.lax.scan(step, jnp.uint32(1), None, length=n)
+        return ps[::-1]
+
+    w = powers(block)
+    digests = jnp.sum(blocks * w[None, :], axis=1, dtype=jnp.uint32)
+    wb = powers(digests.shape[0])
+    return jnp.sum(digests * wb, dtype=jnp.uint32), digests
+
+
+def ssd_intra_ref(x, dt, cum, b_in, c_in):
+    """Intra-chunk SSD oracle.
+
+    x: (B,NC,Q,H,P); dt/cum: (B,NC,Q,H); b_in/c_in: (B,NC,Q,N)."""
+    q = x.shape[2]
+    scores = jnp.einsum("bcqn,bckn->bcqk", c_in.astype(jnp.float32),
+                        b_in.astype(jnp.float32))
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    m = jnp.where(mask[None, None, :, :, None],
+                  scores[..., None] * decay, 0.0)
+    m = m * dt[:, :, None, :, :]
+    return jnp.einsum("bcqkh,bckhp->bcqhp", m,
+                      x.astype(jnp.float32)).astype(x.dtype)

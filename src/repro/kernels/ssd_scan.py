@@ -1,0 +1,72 @@
+"""Mamba2 SSD intra-chunk kernel (Pallas TPU).
+
+The quadratic half of the SSD decomposition (DESIGN.md §6): for each
+(batch, chunk, head) tile, compute
+
+    Y[i] = Σ_{j≤i} (C_i·B_j) · exp(cum_i − cum_j) · Δ_j · x_j
+
+as two MXU matmuls ((Q×N)@(N×Q) scores, masked-decay weighting, then
+(Q×Q)@(Q×P)) entirely in VMEM — the systolic-array port of the CUDA
+chunk-scan in the Mamba2 reference.  The O(L/Q) inter-chunk recurrence
+stays a lax.scan (tiny state, latency-bound, not kernel-worthy).
+
+Oracle: ``repro.kernels.ref.ssd_intra_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)         # (Q,)
+    cum = cum_ref[0, 0, :, 0].astype(jnp.float32)       # (Q,)
+    bb = b_ref[0, 0, :, :].astype(jnp.float32)          # (Q, N)
+    cc = c_ref[0, 0, :, :].astype(jnp.float32)          # (Q, N)
+    q = x.shape[0]
+    scores = jax.lax.dot_general(cc, bb, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    m = jnp.where(cols <= rows, scores * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(m, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_intra(x: jax.Array, dt: jax.Array, cum: jax.Array,
+              b_in: jax.Array, c_in: jax.Array,
+              interpret: bool = False) -> jax.Array:
+    """Intra-chunk SSD output.
+
+    x: (B, NC, Q, H, P); dt, cum: (B, NC, Q, H); b_in, c_in: (B, NC, Q, N)
+    → (B, NC, Q, H, P)
+    """
+    bsz, nc, q, h, p = x.shape
+    n = b_in.shape[-1]
+    grid = (bsz, nc, h)
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p),
+                         lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, 1),
+                         lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, q, 1),
+                         lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, q, n),
+                         lambda bi, ci, hi: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, q, n),
+                         lambda bi, ci, hi: (bi, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q, 1, p),
+                               lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, dt, cum, b_in, c_in)

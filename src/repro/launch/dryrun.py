@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces a JSON artifact with:
+  * ``memory_analysis`` — per-device bytes (proves the cell fits HBM),
+  * ``cost_analysis``   — HLO FLOPs / bytes accessed (§Roofline numerators),
+  * ``collectives``     — per-op-kind operand bytes parsed from the
+    compiled HLO (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), the collective-roofline numerator.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+      --shape train_4k --mesh single --out benchmarks/artifacts/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, get_config, list_archs, shapes_for
+from ..sharding.rules import make_rules
+from ..train.optimizer import AdamWConfig
+from ..train.step import (build_decode_step, build_prefill_step,
+                          build_train_step)
+from .mesh import make_production_mesh
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "artifacts" / "dryrun"
+
+# Moment precision per arch size (DESIGN.md §5): ≥30 B params → bf16
+# moments so optimizer state fits a 16 GB/chip single pod.
+def opt_config_for(cfg) -> AdamWConfig:
+    big = cfg.param_count() > 30e9
+    return AdamWConfig(moment_dtype="bfloat16" if big else "float32")
+
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str):
+    """Per-device wire bytes of every collective in the compiled HLO.
+
+    Operand types are not printed inline in compiled HLO text, so bytes are
+    derived from the *result* shape with a per-kind wire model (ring
+    algorithms, g = replica-group size):
+      all-gather: recv ≈ result·(g−1)/g            (result is the gathered buf)
+      all-reduce: send+recv ≈ 2·result·(g−1)/g
+      reduce-scatter: send ≈ result·(g−1)          (result is the scattered buf)
+      all-to-all / collective-permute: ≈ result.
+    ``depth`` counts "while/body" frames in the op's metadata — collectives
+    at depth ≥ 1 execute once per scan iteration, so the roofline multiplies
+    them by the model's group-scan trip count (§Roofline methodology).
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        result = _shape_bytes(dtype, dims)
+        g = 2
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = max(int(gm.group(2)), 1)
+        if kind == "all-gather":
+            wire = result * (g - 1) // max(g, 1)
+        elif kind == "all-reduce":
+            wire = 2 * result * (g - 1) // max(g, 1)
+        elif kind == "reduce-scatter":
+            wire = result * (g - 1)
+        else:
+            wire = result
+        depth = line.count("while/body")
+        key = f"{kind}@loop" if depth else kind
+        rec = out.setdefault(key, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += wire
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, microbatches: int = 1,
+               overrides=None, pad_heads: int = 0):
+    cfg = get_config(arch)
+    if pad_heads:
+        cfg = dataclasses.replace(cfg, padded_heads=pad_heads)
+    shape = SHAPES[shape_name]
+    rules = make_rules(cfg, mesh, global_batch=shape.global_batch,
+                       overrides=overrides)
+    if shape.kind == "train":
+        art = build_train_step(cfg, rules, opt_config_for(cfg),
+                               shape.global_batch, shape.seq_len,
+                               microbatches=microbatches)
+    elif shape.kind == "prefill":
+        art = build_prefill_step(cfg, rules, shape.global_batch,
+                                 shape.seq_len)
+    else:
+        art = build_decode_step(cfg, rules, shape.global_batch,
+                                shape.seq_len)
+    return cfg, shape, art
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: Path = ARTIFACT_DIR, microbatches: int = 1,
+             overrides=None, tag: str = "", pad_heads: int = 0) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    with mesh:
+        cfg, shape, art = build_cell(arch, shape_name, mesh, microbatches,
+                                     overrides, pad_heads)
+        jitted = jax.jit(art.fn, donate_argnums=art.donate_argnums,
+                         out_shardings=art.out_shardings)
+        lowered = jitted.lower(*art.abstract_inputs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = parse_collectives(compiled.as_text())
+    n_dev = mesh.size
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape),
+        "tag": tag,
+        "kind": shape.kind,
+        "global_batch": shape.global_batch,
+        "seq_len": shape.seq_len,
+        "microbatches": microbatches,
+        "devices": n_dev,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "scan_groups": cfg.num_groups() * max(microbatches, 1),
+        "pad_heads": cfg.padded_heads,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+        "cost": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+            "transcendentals": cost.get("transcendentals", 0.0),
+        },
+        "collectives": coll,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{arch}_{shape_name}_{mesh_kind}" + (f"_{tag}" if tag else "")
+    (out_dir / f"{name}.json").write_text(json.dumps(record, indent=1))
+    return record
+
+
+def all_cells():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            for mesh_kind in ("single", "multi"):
+                yield arch, shape.name, mesh_kind
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--pad-heads", type=int, default=0)
+    ap.add_argument("--override", default="",
+                    help="sharding overrides: k=v,k=v (v: mesh axis, "
+                         "'none', or '+'-joined tuple)")
+    ap.add_argument("--out", default=str(ARTIFACT_DIR))
+    args = ap.parse_args(argv)
+    out = Path(args.out)
+
+    cells = list(all_cells()) if args.all else \
+        [(args.arch, args.shape, args.mesh)]
+    failures = 0
+    for arch, shape, mesh_kind in cells:
+        name = f"{arch}_{shape}_{mesh_kind}"
+        if args.skip_existing and (out / f"{name}.json").exists():
+            print(f"SKIP {name}", flush=True)
+            continue
+        try:
+            overrides = None
+            if args.override:
+                overrides = {}
+                for kv in args.override.split(","):
+                    k, v = kv.split("=")
+                    overrides[k] = None if v == "none" else \
+                        (tuple(v.split("+")) if "+" in v else v)
+            rec = run_cell(arch, shape, mesh_kind, out,
+                           microbatches=args.microbatches, tag=args.tag,
+                           overrides=overrides, pad_heads=args.pad_heads)
+            peak = rec["memory"]["peak_bytes"] / 2 ** 30
+            print(f"OK   {name}: peak={peak:.2f} GiB/dev "
+                  f"flops={rec['cost']['flops']:.3e} "
+                  f"compile={rec['compile_s']}s", flush=True)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"FAIL {name}: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16×16 = 256 chips (v5e pod).
+Multi-pod: 2×16×16 = 512 chips, ``pod`` as the outermost (DCN) axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """A tiny mesh over however many local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,7 @@
+"""Model zoo: config-driven decoder LMs (dense / MoE / SSM / hybrid /
+cross-attention) with grouped-scan stacks and KV/SSM decode caches."""
+from .model import (decode_step, forward, forward_with_cache,
+                    init_decode_cache, init_lm, init_lm_abstract, lm_loss)
+
+__all__ = ["decode_step", "forward", "forward_with_cache",
+           "init_decode_cache", "init_lm", "init_lm_abstract", "lm_loss"]

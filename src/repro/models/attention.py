@@ -1,0 +1,259 @@
+"""Attention: GQA (full / sliding-window / cross), train + decode paths.
+
+TPU/GSPMD-idiomatic choices:
+  * the full-sequence path is *blockwise over query blocks* (lax.scan) so
+    per-layer logit buffers stay O(S·q_block) instead of O(S²) — the jnp
+    analogue of flash attention; the Pallas kernel
+    (``repro.kernels.flash_attention``) replaces it on real TPUs;
+  * KV heads are **repeated to the query-head count** for the train path:
+    the grouped-GQA reshape (H → KV×G) defeats GSPMD sharding propagation
+    whenever KV doesn't divide the model axis (true for most assigned
+    archs, kv=8 on a 16-wide axis), while a repeat of replicated KV onto
+    the sharded H dim is a local slice.  The KV *cache* still stores
+    unrepeated heads — the GQA memory saving is preserved where it
+    matters;
+  * sliding-window layers slice a static ``window + q_block`` KV span per
+    query block, so SWA costs O(S·W) not O(S²) — this is what makes
+    mixtral/gemma2 ``long_500k``-capable;
+  * decode uses a ring-buffer KV cache for windowed layers (cache size
+    min(S, window)) and dense caches for global layers, sharded over the
+    sequence dim so arbitrary head counts distribute (softmax over the
+    sharded seq dim becomes an XLA-managed cross-shard reduction).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import apply_rope, dense_init, softcap, zeros_init
+
+NEG_INF = -2.0 ** 30
+
+
+def init_attention(key: jax.Array, cfg: ArchConfig, cross: bool = False,
+                   dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.resolved_num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    p["wq"], s["wq"] = dense_init(ks[0], (d, h, hd),
+                                  ("embed", "q_heads", "head_dim"),
+                                  dtype=dtype)
+    if cfg.padded_heads:
+        # zero the pad rows: structurally inactive heads at init
+        mask = (jnp.arange(h) < cfg.num_heads).astype(p["wq"].dtype)
+        p["wq"] = p["wq"] * mask[None, :, None]
+    p["wk"], s["wk"] = dense_init(ks[1], (d, kv, hd),
+                                  ("embed", "kv_heads", "head_dim"),
+                                  dtype=dtype)
+    p["wv"], s["wv"] = dense_init(ks[2], (d, kv, hd),
+                                  ("embed", "kv_heads", "head_dim"),
+                                  dtype=dtype)
+    p["wo"], s["wo"] = dense_init(ks[3], (h, hd, d),
+                                  ("q_heads", "head_dim", "embed"),
+                                  dtype=dtype)
+    if cfg.padded_heads:
+        mask = (jnp.arange(h) < cfg.num_heads).astype(p["wo"].dtype)
+        p["wo"] = p["wo"] * mask[:, None, None]
+    if cfg.qkv_bias:
+        p["bq"], s["bq"] = zeros_init((h, hd), ("q_heads", "head_dim"), dtype)
+        p["bk"], s["bk"] = zeros_init((kv, hd), ("kv_heads", "head_dim"), dtype)
+        p["bv"], s["bv"] = zeros_init((kv, hd), ("kv_heads", "head_dim"), dtype)
+    if cross:
+        # Llama-3.2-Vision style gated cross-attention.
+        p["gate"], s["gate"] = zeros_init((), (), dtype)
+    return p, s
+
+
+def _project_qkv(p, x, kv_src, cfg: ArchConfig, positions, kv_positions,
+                 rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", kv_src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_src, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    return jnp.repeat(k, groups, axis=2) if groups > 1 else k
+
+
+# ---------------------------------------------------------------------------
+# Grouped (unrepeated) score helpers — decode path
+# ---------------------------------------------------------------------------
+def _gqa_scores(q, k, softcap_val: float):
+    """q: (B,S,H,hd), k: (B,T,KV,hd) → scores (B, KV, G, S, T)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / (hd ** 0.5)
+    return softcap(scores, softcap_val)
+
+
+def _gqa_out(probs, v):
+    """probs: (B,KV,G,S,T), v: (B,T,KV,hd) → (B,S,H,hd)."""
+    b, kvh, g, s, t = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, kvh * g, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence (train / prefill) path
+# ---------------------------------------------------------------------------
+def attention_forward(p, x: jax.Array, cfg: ArchConfig,
+                      positions: jax.Array,
+                      window: int = 0,
+                      cross_states: Optional[jax.Array] = None,
+                      q_block: int = 512) -> jax.Array:
+    """Blockwise causal (optionally windowed) self-attention, or full
+    cross-attention when ``cross_states`` is given."""
+    hd = cfg.resolved_head_dim
+    if cross_states is not None:
+        t = cross_states.shape[1]
+        kv_pos = jnp.arange(t)[None, :]
+        q, k, v = _project_qkv(p, x, cross_states.astype(x.dtype), cfg,
+                               positions, kv_pos, rope=False)
+        g = q.shape[2] // k.shape[2]
+        k, v = _repeat_kv(k, g), _repeat_kv(v, g)
+        scores = softcap(jnp.einsum("bshd,bthd->bhst", q, k) / hd ** 0.5,
+                         cfg.attn_logit_softcap)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        return jnp.tanh(p["gate"]) * out if "gate" in p else out
+
+    q, k, v = _project_qkv(p, x, x, cfg, positions, positions, rope=True)
+    b, s, h, _ = q.shape
+    g = h // k.shape[2]
+    k, v = _repeat_kv(k, g), _repeat_kv(v, g)
+    qb = min(q_block, s)
+    n_blocks = -(-s // qb)
+    pad = n_blocks * qb - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qs = q.reshape(b, n_blocks, qb, h, hd).transpose(1, 0, 2, 3, 4)
+
+    if window and window < s:
+        span = min(window + qb, s)   # static KV span per query block
+
+        def qblock(carry, inp):
+            blk_idx, qblk = inp
+            start = jnp.maximum(blk_idx * qb + qb - span, 0)
+            kslc = jax.lax.dynamic_slice_in_dim(k, start, span, 1)
+            vslc = jax.lax.dynamic_slice_in_dim(v, start, span, 1)
+            qpos = blk_idx * qb + jnp.arange(qb)
+            kpos = start + jnp.arange(span)
+            scores = softcap(
+                jnp.einsum("bqhd,bthd->bhqt", qblk, kslc) / hd ** 0.5,
+                cfg.attn_logit_softcap)
+            valid = (kpos[None, :] <= qpos[:, None]) & \
+                    (kpos[None, :] > qpos[:, None] - window) & \
+                    (kpos[None, :] < s)
+            scores = jnp.where(valid[None, None], scores, NEG_INF)
+            probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+            return carry, jnp.einsum("bhqt,bthd->bqhd",
+                                     probs.astype(v.dtype), vslc)
+
+        _, outs = jax.lax.scan(qblock, None, (jnp.arange(n_blocks), qs))
+    else:
+        kpos = jnp.arange(s)
+
+        def qblock(carry, inp):
+            blk_idx, qblk = inp
+            qpos = blk_idx * qb + jnp.arange(qb)
+            scores = softcap(
+                jnp.einsum("bqhd,bthd->bhqt", qblk, k) / hd ** 0.5,
+                cfg.attn_logit_softcap)
+            valid = kpos[None, :] <= qpos[:, None]
+            scores = jnp.where(valid[None, None], scores, NEG_INF)
+            probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+            return carry, jnp.einsum("bhqt,bthd->bqhd",
+                                     probs.astype(v.dtype), v)
+
+        _, outs = jax.lax.scan(qblock, None, (jnp.arange(n_blocks), qs))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, n_blocks * qb, h, hd)
+    if pad:
+        out = out[:, :s]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def prefill_attention(p, x: jax.Array, cfg: ArchConfig, positions, window,
+                      max_seq: int, cache_dtype=None):
+    """Full-sequence attention that also emits the populated KV cache
+    (ring-buffer layout for windowed layers, matching decode_attention)."""
+    cache_dtype = cache_dtype or x.dtype
+    out = attention_forward(p, x, cfg, positions, window=window)
+    _, k, v = _project_qkv(p, x, x, cfg, positions, positions, rope=True)
+    b, s, kvh, hd = k.shape
+    size = min(max_seq, window) if window else max_seq
+    take = min(s, size)
+    slots = jnp.arange(s - take, s) % size
+    kc = jnp.zeros((b, size, kvh, hd), cache_dtype)
+    vc = jnp.zeros((b, size, kvh, hd), cache_dtype)
+    kc = kc.at[:, slots].set(k[:, s - take:].astype(cache_dtype))
+    vc = vc.at[:, slots].set(v[:, s - take:].astype(cache_dtype))
+    return out, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# Decode path (KV cache, one token)
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int, window: int,
+                  dtype=jnp.bfloat16) -> Tuple[Dict[str, jax.Array], Dict]:
+    """Dense cache for global layers; ring buffer (size=window) for SWA."""
+    size = min(max_seq, window) if window else max_seq
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    cache = {
+        "k": jnp.zeros((batch, size, kv, hd), dtype),
+        "v": jnp.zeros((batch, size, kv, hd), dtype),
+    }
+    specs = {
+        "k": ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+        "v": ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+    }
+    return cache, specs
+
+
+def decode_attention(p, x: jax.Array, cache: Dict[str, jax.Array],
+                     pos: jax.Array, cfg: ArchConfig,
+                     window: int = 0,
+                     cross_states: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode: x (B, 1, D), pos scalar int32."""
+    if cross_states is not None:
+        out = attention_forward(p, x, cfg, jnp.full((1, 1), 0),
+                                cross_states=cross_states)
+        return out, cache
+    positions = jnp.reshape(pos, (1, 1))
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, positions, positions,
+                                   rope=True)
+    size = cache["k"].shape[1]
+    ring = bool(window) and window < 10 ** 9
+    slot = pos % size if ring else jnp.minimum(pos, size - 1)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    idx = jnp.arange(size)
+    if ring:
+        # Ring buffer: entry idx holds absolute position
+        # pos − ((slot − idx) mod size); valid once actually written.
+        age = (slot - idx) % size
+        valid = age <= pos
+    else:
+        valid = idx <= pos
+    scores = _gqa_scores(q, k, cfg.attn_logit_softcap)    # (B,KV,G,1,size)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = _gqa_out(probs.astype(v.dtype), v)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, {"k": k, "v": v}

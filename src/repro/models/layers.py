@@ -1,0 +1,127 @@
+"""Shared neural-net layers + the logical-axis parameter convention.
+
+Every ``init_*`` function returns ``(params, specs)`` where ``specs``
+mirrors the params pytree with tuples of *logical axis names* per leaf
+(MaxText-style).  ``repro.sharding.rules`` maps logical names → mesh axes
+per architecture (handling divisibility fallbacks), which is what makes
+sharding strategies swappable during §Perf hillclimbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], axes: Tuple,
+               scale: float = 1.0, dtype=jnp.float32):
+    """Truncated-normal dense init with fan-in scaling."""
+    fan_in = shape[0] if len(shape) <= 2 else shape[-2]
+    std = scale / max(fan_in, 1) ** 0.5
+    arr = std * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                            dtype=jnp.float32)
+    return arr.astype(dtype), axes
+
+
+def zeros_init(shape, axes, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype), axes
+
+
+def ones_init(shape, axes, dtype=jnp.float32):
+    return jnp.ones(shape, dtype), axes
+
+
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array,
+           w2: jax.Array) -> jax.Array:
+    """SwiGLU MLP: (silu(x·w1) ⊙ x·w3) · w2."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                              # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+def init_mlp(key: jax.Array, d_model: int, d_ff: int,
+             dtype=jnp.float32) -> Tuple[Params, Specs]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["w1"], s["w1"] = dense_init(k1, (d_model, d_ff), ("embed", "mlp"),
+                                  dtype=dtype)
+    p["w3"], s["w3"] = dense_init(k2, (d_model, d_ff), ("embed", "mlp"),
+                                  dtype=dtype)
+    p["w2"], s["w2"] = dense_init(k3, (d_ff, d_model), ("mlp", "embed"),
+                                  dtype=dtype)
+    return p, s
+
+
+def mlp_forward(p: Params, x: jax.Array) -> jax.Array:
+    return swiglu(x, p["w1"], p["w3"], p["w2"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def init_embed(key: jax.Array, vocab: int, d_model: int, tie: bool,
+               dtype=jnp.float32) -> Tuple[Params, Specs]:
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["embedding"], s["embedding"] = dense_init(
+        k1, (vocab, d_model), ("vocab", "embed"), scale=1.0, dtype=dtype)
+    if not tie:
+        p["head"], s["head"] = dense_init(
+            k2, (d_model, vocab), ("embed", "vocab"), dtype=dtype)
+    return p, s
+
+
+def embed_tokens(p: Params, tokens: jax.Array, d_model: int) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def lm_logits(p: Params, x: jax.Array, cap: float = 0.0) -> jax.Array:
+    if "head" in p:
+        logits = x @ p["head"]
+    else:
+        logits = x @ p["embedding"].T
+    return softcap(logits.astype(jnp.float32), cap)

@@ -1,0 +1,282 @@
+"""Config-driven decoder LM: heterogeneous stacks under a grouped scan.
+
+The layer stack is ``num_groups`` repetitions of the config's block
+*pattern* (DESIGN.md §4): parameters are stacked per pattern position with
+a leading ``layers`` axis and the stack executes as one ``lax.scan`` over
+groups — keeping HLO size O(pattern) instead of O(num_layers), which is
+what makes 100-layer dry-run compiles tractable and is the idiomatic TPU
+training structure (MaxText-style).
+
+Three entry points:
+  * :func:`forward`      — full-sequence logits (train / prefill),
+  * :func:`forward_with_cache` — prefill that also returns a decode cache,
+  * :func:`decode_step`  — one-token decode against the cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import (FFN_DENSE, FFN_MOE, FFN_NONE, MIXER_ATTN,
+                            MIXER_ATTN_LOCAL, MIXER_SSM, MIXER_XATTN,
+                            ArchConfig)
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (embed_tokens, init_embed, init_mlp, lm_logits,
+                     mlp_forward, rms_norm, zeros_init)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _window_for(cfg: ArchConfig, mixer: str) -> int:
+    if mixer == MIXER_ATTN_LOCAL:
+        return cfg.sliding_window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_block(key: jax.Array, cfg: ArchConfig, spec) -> Tuple[Dict, Dict]:
+    dt = _dtype(cfg)
+    km, kf = jax.random.split(key)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    p["norm1"], s["norm1"] = zeros_init((cfg.d_model,), ("embed",), dt)
+    if spec.mixer in (MIXER_ATTN, MIXER_ATTN_LOCAL):
+        p["mixer"], s["mixer"] = attn.init_attention(km, cfg, dtype=dt)
+    elif spec.mixer == MIXER_XATTN:
+        p["mixer"], s["mixer"] = attn.init_attention(km, cfg, cross=True,
+                                                     dtype=dt)
+    elif spec.mixer == MIXER_SSM:
+        p["mixer"], s["mixer"] = ssm_mod.init_ssm(km, cfg, dtype=dt)
+    if spec.ffn != FFN_NONE:
+        p["norm2"], s["norm2"] = zeros_init((cfg.d_model,), ("embed",), dt)
+        if spec.ffn == FFN_MOE:
+            p["ffn"], s["ffn"] = moe_mod.init_moe(kf, cfg, dtype=dt)
+        else:
+            p["ffn"], s["ffn"] = init_mlp(kf, cfg.d_model, cfg.d_ff, dtype=dt)
+    return p, s
+
+
+def init_lm(key: jax.Array, cfg: ArchConfig) -> Tuple[Dict, Dict]:
+    """Returns (params, logical-axis specs)."""
+    dt = _dtype(cfg)
+    pattern = cfg.pattern()
+    g = cfg.num_groups()
+    k_embed, k_blocks, k_norm = jax.random.split(key, 3)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    params["embed"], specs["embed"] = init_embed(
+        k_embed, cfg.vocab_size, cfg.d_model, cfg.tie_embeddings, dt)
+    params["final_norm"], specs["final_norm"] = zeros_init(
+        (cfg.d_model,), ("embed",), dt)
+    blocks: List[Dict] = []
+    bspecs: List[Dict] = []
+    for i, spec in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, i), g)
+        stacked = jax.vmap(lambda k, s=spec: _init_block(k, cfg, s)[0])(keys)
+        _, sp = _init_block(keys[0], cfg, spec)
+        from ..sharding.rules import is_logical_axes
+        sp = jax.tree.map(lambda axes: ("layers",) + tuple(axes),
+                          sp, is_leaf=is_logical_axes)
+        blocks.append(stacked)
+        bspecs.append(sp)
+    params["blocks"] = tuple(blocks)
+    specs["blocks"] = tuple(bspecs)
+    return params, specs
+
+
+def init_lm_abstract(key: jax.Array, cfg: ArchConfig):
+    """Shape-only init (no allocation) — used by the dry-run."""
+    return jax.eval_shape(lambda k: init_lm(k, cfg)[0], key)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _block_forward(bp, x, spec, cfg: ArchConfig, positions, image_embeds,
+                   collect_cache: bool, max_seq: int, rules=None):
+    aux = jnp.zeros((), jnp.float32)
+    cache_out = {}
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    window = _window_for(cfg, spec.mixer)
+    if spec.mixer in (MIXER_ATTN, MIXER_ATTN_LOCAL):
+        if collect_cache:
+            mix, cache_out = attn.prefill_attention(
+                bp["mixer"], h, cfg, positions, window, max_seq)
+        else:
+            mix = attn.attention_forward(bp["mixer"], h, cfg, positions,
+                                         window=window)
+    elif spec.mixer == MIXER_XATTN:
+        mix = attn.attention_forward(bp["mixer"], h, cfg, positions,
+                                     cross_states=image_embeds)
+    else:  # SSM
+        if collect_cache:
+            mix, cache_out = ssm_mod.prefill_ssm(bp["mixer"], h, cfg)
+        else:
+            mix = ssm_mod.ssm_forward(bp["mixer"], h, cfg)
+    x = x + mix
+    if spec.ffn != FFN_NONE:
+        h2 = rms_norm(x, bp["norm2"], cfg.norm_eps)
+        if spec.ffn == FFN_MOE:
+            out, aux = moe_mod.moe_forward(bp["ffn"], h2, cfg, rules)
+        else:
+            out = mlp_forward(bp["ffn"], h2)
+        x = x + out
+    if rules is not None:
+        x = rules.constrain(x, "act_batch", "act_seq", "act_embed")
+    return x, aux, cache_out
+
+
+def forward(params, tokens: jax.Array, cfg: ArchConfig,
+            image_embeds: Optional[jax.Array] = None,
+            remat: bool = True, rules=None) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) → (logits (B, S, V) fp32, aux loss).
+
+    ``rules``: optional ShardingRules; when given, activations carry
+    with_sharding_constraint at block boundaries (sequence parallelism and
+    MoE capacity sharding are expressed this way — §Perf)."""
+    pattern = cfg.pattern()
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    if rules is not None:
+        x = rules.constrain(x, "act_batch", "act_seq", "act_embed")
+
+    def group_fn(carry, group_params):
+        x, aux = carry
+        for i, spec in enumerate(pattern):
+            x, a, _ = _block_forward(group_params[i], x, spec, cfg,
+                                     positions, image_embeds, False, 0,
+                                     rules=rules)
+            aux = aux + a
+        return (x, aux), None
+
+    scan_fn = jax.checkpoint(
+        group_fn, policy=jax.checkpoint_policies.nothing_saveable,
+        prevent_cse=False) if remat else group_fn
+    (x, aux), _ = jax.lax.scan(scan_fn,
+                               (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x, cfg.final_logit_softcap)
+    return logits, aux
+
+
+def lm_loss(params, tokens, labels, cfg: ArchConfig,
+            image_embeds=None, aux_weight: float = 0.01,
+            remat: bool = True, rules=None):
+    logits, aux = forward(params, tokens, cfg, image_embeds, remat,
+                          rules=rules)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    # One-hot contraction, not take_along_axis: vocab is model-sharded and
+    # data-dependent gathers de-shard the batch under GSPMD (§Perf it. 2).
+    onehot = jax.nn.one_hot(labels.astype(jnp.int32), logits.shape[-1],
+                            dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux_weight * aux, (ce, aux)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token with cache)
+# ---------------------------------------------------------------------------
+def init_decode_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16):
+    """Cache pytree: tuple per pattern position, each stacked over groups."""
+    pattern = cfg.pattern()
+    g = cfg.num_groups()
+    caches, specs = [], []
+    for spec in pattern:
+        if spec.mixer in (MIXER_ATTN, MIXER_ATTN_LOCAL):
+            window = _window_for(cfg, spec.mixer)
+            c, s = attn.init_kv_cache(cfg, batch, max_seq, window, dtype)
+        elif spec.mixer == MIXER_SSM:
+            c, s = ssm_mod.init_ssm_cache(cfg, batch)
+        else:  # cross-attn: static image KV recomputed per step
+            c, s = {"unused": jnp.zeros((1,), dtype)}, {"unused": (None,)}
+        c = jax.tree.map(lambda a: jnp.broadcast_to(a, (g,) + a.shape), c)
+        from ..sharding.rules import is_logical_axes
+        s = jax.tree.map(lambda axes: ("layers",) + tuple(axes), s,
+                         is_leaf=is_logical_axes)
+        caches.append(c)
+        specs.append(s)
+    return tuple(caches), tuple(specs)
+
+
+def decode_step(params, cache, token: jax.Array, pos: jax.Array,
+                cfg: ArchConfig,
+                image_embeds: Optional[jax.Array] = None):
+    """token (B,) int32, pos () int32 → (logits (B, V), new cache)."""
+    pattern = cfg.pattern()
+    x = embed_tokens(params["embed"], token[:, None], cfg.d_model)
+
+    def group_fn(x, inp):
+        group_params, group_cache = inp
+        new_cache = []
+        for i, spec in enumerate(pattern):
+            bp, c = group_params[i], group_cache[i]
+            h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+            window = _window_for(cfg, spec.mixer)
+            if spec.mixer in (MIXER_ATTN, MIXER_ATTN_LOCAL):
+                mix, c = attn.decode_attention(bp["mixer"], h, c, pos, cfg,
+                                               window)
+            elif spec.mixer == MIXER_XATTN:
+                mix = attn.attention_forward(
+                    bp["mixer"], h, cfg, jnp.reshape(pos, (1, 1)),
+                    cross_states=image_embeds)
+            else:
+                mix, c = ssm_mod.ssm_decode(bp["mixer"], h, c, cfg)
+            x = x + mix
+            if spec.ffn != FFN_NONE:
+                h2 = rms_norm(x, bp["norm2"], cfg.norm_eps)
+                if spec.ffn == FFN_MOE:
+                    out, _ = moe_mod.moe_forward(bp["ffn"], h2, cfg)
+                else:
+                    out = mlp_forward(bp["ffn"], h2)
+                x = x + out
+            new_cache.append(c)
+        return x, tuple(new_cache)
+
+    x, new_cache = jax.lax.scan(group_fn, x, (params["blocks"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x[:, 0], cfg.final_logit_softcap)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill with cache collection
+# ---------------------------------------------------------------------------
+def forward_with_cache(params, tokens: jax.Array, cfg: ArchConfig,
+                       max_seq: int,
+                       image_embeds: Optional[jax.Array] = None):
+    """Full-sequence forward that also returns the populated decode cache."""
+    pattern = cfg.pattern()
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def group_fn(carry, group_params):
+        x, aux = carry
+        caches = []
+        for i, spec in enumerate(pattern):
+            x, a, c = _block_forward(group_params[i], x, spec, cfg,
+                                     positions, image_embeds, True, max_seq)
+            if not c:
+                c = {"unused": jnp.zeros((1,), jnp.bfloat16)}
+            aux = aux + a
+            caches.append(c)
+        return (x, aux), tuple(caches)
+
+    (x, aux), cache = jax.lax.scan(group_fn,
+                                   (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x, cfg.final_logit_softcap)
+    return logits, cache, aux

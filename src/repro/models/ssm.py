@@ -1,0 +1,242 @@
+"""Mamba-2 SSD (state-space duality) — chunked, MXU-friendly.
+
+The SSD algorithm [arXiv:2405.21060] computes the selective-SSM recurrence
+as (a) quadratic attention-like matmuls *within* chunks of length Q and
+(b) a linear recurrence *between* chunk states — exactly the decomposition
+that maps onto the TPU MXU (the intra-chunk part is batched matmuls) with
+an O(L/Q) sequential scan between chunks.  This is the hardware adaptation
+of Mamba2's CUDA kernel noted in DESIGN.md: same math, tiled for systolic
+matmul rather than warp-level scans.
+
+Projections are kept *separate* (z, x, B, C, dt) rather than fused as in
+the CUDA reference: a fused projection's output dim mixes tensor-parallel
+(d_inner) and replicated (state/dt) segments, and slicing a sharded dim at
+non-shard-aligned offsets forces all-gathers under GSPMD.  Separate
+weights shard cleanly (d_inner → model axis, small B/C/dt replicated).
+
+Shapes follow the paper: heads H with head dim P (d_inner = H·P), state
+size N, scalar decay a_t = exp(Δ_t·A_h) per head/step, shared B/C
+(ngroups=1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import dense_init, ones_init, rms_norm, zeros_init
+
+
+def init_ssm(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.ssm_conv_width
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    p["in_z"], s["in_z"] = dense_init(ks[0], (d, di), ("embed", "ssm_inner"),
+                                      dtype=dtype)
+    p["in_x"], s["in_x"] = dense_init(ks[1], (d, di), ("embed", "ssm_inner"),
+                                      dtype=dtype)
+    p["in_b"], s["in_b"] = dense_init(ks[2], (d, n), ("embed", "ssm_state"),
+                                      dtype=dtype)
+    p["in_c"], s["in_c"] = dense_init(ks[3], (d, n), ("embed", "ssm_state"),
+                                      dtype=dtype)
+    p["in_dt"], s["in_dt"] = dense_init(ks[4], (d, h), ("embed", "ssm_heads"),
+                                        dtype=dtype)
+    p["conv_x"], s["conv_x"] = dense_init(
+        ks[5], (cw, di), ("conv", "ssm_inner"), scale=cw ** 0.5, dtype=dtype)
+    p["conv_b"], s["conv_b"] = dense_init(
+        ks[6], (cw, n), ("conv", "ssm_state"), scale=cw ** 0.5, dtype=dtype)
+    p["conv_c"], s["conv_c"] = dense_init(
+        ks[7], (cw, n), ("conv", "ssm_state"), scale=cw ** 0.5, dtype=dtype)
+    p["a_log"], s["a_log"] = zeros_init((h,), ("ssm_heads",), jnp.float32)
+    p["dt_bias"], s["dt_bias"] = zeros_init((h,), ("ssm_heads",), jnp.float32)
+    p["d_skip"], s["d_skip"] = ones_init((h,), ("ssm_heads",), jnp.float32)
+    p["gate_norm"], s["gate_norm"] = zeros_init((di,), ("ssm_inner",), dtype)
+    p["out_proj"], s["out_proj"] = dense_init(
+        ks[4], (di, d), ("ssm_inner", "embed"), dtype=dtype)
+    return p, s
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over the sequence dim.  u: (B, L, C)."""
+    cw = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(cw))
+    return jax.nn.silu(out)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array,
+                b_in: jax.Array, c_in: jax.Array, chunk: int,
+                h0: jax.Array = None):
+    """Core SSD scan.
+
+    x: (B, L, H, P)   dt: (B, L, H)   a: (H,) (negative)
+    b_in, c_in: (B, L, N)             chunk: Q
+    Returns (y (B,L,H,P), h_final (B,H,N,P)).
+    """
+    bsz, l, h, p = x.shape
+    n = b_in.shape[-1]
+    q = min(chunk, l)
+    nc = -(-l // q)
+    pad = nc * q - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = b_in.reshape(bsz, nc, q, n)
+    cc = c_in.reshape(bsz, nc, q, n)
+
+    la = dtc * a[None, None, None, :]            # log-decay per step (B,NC,Q,H)
+    cum = jnp.cumsum(la, axis=2)                 # inclusive cumsum
+    seg_end = cum[:, :, -1:, :]                  # total chunk decay
+
+    # Intra-chunk: Y[i] = Σ_{j<=i} C_i·B_j exp(cum_i − cum_j) Δ_j x_j
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)           # (B,NC,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    m = jnp.where(mask[None, None, :, :, None],
+                  scores[..., None] * decay, 0.0)            # (B,NC,Q,Q,H)
+    m = m * dtc[:, :, None, :, :]                            # Δ_j
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", m, xc)
+
+    # Chunk states: S_c = Σ_j exp(seg_end − cum_j) Δ_j B_j ⊗ x_j
+    w = jnp.exp(seg_end - cum) * dtc                         # (B,NC,Q,H)
+    s_c = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", w, bc, xc)    # (B,NC,H,N,P)
+
+    # Inter-chunk recurrence (sequential over NC chunks).
+    seg = jnp.exp(seg_end[:, :, 0, :])                       # (B,NC,H)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), x.dtype)
+
+    def step(hprev, inp):
+        seg_c, s_cc = inp
+        hnew = seg_c[:, :, None, None] * hprev + s_cc
+        return hnew, hprev
+
+    hT, h_starts = jax.lax.scan(
+        step, h0, (seg.transpose(1, 0, 2), s_c.transpose(1, 0, 2, 3, 4)))
+    h_starts = h_starts.transpose(1, 0, 2, 3, 4)             # (B,NC,H,N,P)
+
+    # Inter-chunk contribution: Y[i] += exp(cum_i) C_i · h_chunk_start
+    y_inter = jnp.einsum("bcqh,bcqn,bchnp->bcqhp",
+                         jnp.exp(cum), cc, h_starts)
+    y = (y_intra + y_inter).reshape(bsz, nc * q, h, p)
+    if pad:
+        y = y[:, :l]
+    return y, hT
+
+
+def _project(p, x, cfg: ArchConfig):
+    """x (B,L,D) → z, x_conv, b_conv, c_conv, dt (pre-softplus)."""
+    di, h = cfg.d_inner, cfg.ssm_heads
+    z = x @ p["in_z"]
+    xr = x @ p["in_x"]
+    br = x @ p["in_b"]
+    cr = x @ p["in_c"]
+    dt = x @ p["in_dt"]
+    return z, xr, br, cr, dt
+
+
+def ssm_forward(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    out, _ = _ssm_seq(p, x, cfg, want_cache=False)
+    return out
+
+
+def prefill_ssm(p, x: jax.Array, cfg: ArchConfig):
+    """Full-sequence SSM that also emits the decode cache (final SSD state
+    + causal-conv history, matching ssm_decode's expectations)."""
+    return _ssm_seq(p, x, cfg, want_cache=True)
+
+
+def _ssm_seq(p, x: jax.Array, cfg: ArchConfig, want_cache: bool):
+    bsz, l, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_headdim
+    cw = cfg.ssm_conv_width
+    z, xr, br, cr, dt = _project(p, x, cfg)
+    xi = _causal_conv(xr, p["conv_x"]).reshape(bsz, l, h, hp)
+    b_in = _causal_conv(br, p["conv_b"])
+    c_in = _causal_conv(cr, p["conv_c"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"])
+    y, h_final = ssd_chunked(xi.astype(jnp.float32), dt, a,
+                             b_in.astype(jnp.float32),
+                             c_in.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + p["d_skip"][None, None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if not want_cache:
+        return out, None
+    # Conv history = last (cw−1) *raw* projected rows (pre-activation).
+    def tail(u):
+        return jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))[:, l:, :]
+    cache = {"h": h_final.astype(jnp.float32),
+             "conv_x": tail(xr).astype(x.dtype),
+             "conv_b": tail(br).astype(x.dtype),
+             "conv_c": tail(cr).astype(x.dtype)}
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(1) state update per token
+# ---------------------------------------------------------------------------
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.ssm_conv_width
+    cache = {
+        "h": jnp.zeros((batch, h, n, cfg.ssm_headdim), jnp.float32),
+        "conv_x": jnp.zeros((batch, cw - 1, di), dtype),
+        "conv_b": jnp.zeros((batch, cw - 1, n), dtype),
+        "conv_c": jnp.zeros((batch, cw - 1, n), dtype),
+    }
+    specs = {
+        "h": ("cache_batch", "ssm_heads", None, None),
+        "conv_x": ("cache_batch", None, "ssm_inner"),
+        "conv_b": ("cache_batch", None, "ssm_state"),
+        "conv_c": ("cache_batch", None, "ssm_state"),
+    }
+    return cache, specs
+
+
+def _conv_step(hist: jax.Array, new: jax.Array, w: jax.Array):
+    """hist (B, cw−1, C), new (B, C) → (activated output (B,C), new hist)."""
+    seq = jnp.concatenate([hist, new[:, None, :].astype(hist.dtype)], axis=1)
+    out = jax.nn.silu(jnp.einsum("bkc,kc->bc", seq.astype(w.dtype), w))
+    return out, seq[:, 1:]
+
+
+def ssm_decode(p, x: jax.Array, cache: Dict[str, jax.Array],
+               cfg: ArchConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, 1, D) one token; updates (h, conv_*) state."""
+    bsz = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_headdim
+    z, xr, br, cr, dt = _project(p, x[:, 0:1], cfg)
+    z, xr, br, cr, dt = z[:, 0], xr[:, 0], br[:, 0], cr[:, 0], dt[:, 0]
+    xi, new_cx = _conv_step(cache["conv_x"], xr, p["conv_x"])
+    b_in, new_cb = _conv_step(cache["conv_b"], br, p["conv_b"])
+    c_in, new_cc = _conv_step(cache["conv_c"], cr, p["conv_c"])
+    xi = xi.reshape(bsz, h, hp)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a[None, :])                  # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, b_in.astype(jnp.float32),
+                     xi.astype(jnp.float32))
+    hnew = decay[:, :, None, None] * cache["h"] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_in.astype(jnp.float32), hnew)
+    y = y + p["d_skip"][None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(bsz, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"h": hnew, "conv_x": new_cx, "conv_b": new_cb,
+                 "conv_c": new_cc}

@@ -1,0 +1,78 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+The multi-pod mesh's only WAN-class traffic is the per-step gradient
+all-reduce over the ``pod`` axis (DESIGN.md §5) — the compute-plane twin
+of the origin traffic StashCache exists to kill.  Blockwise int8
+quantisation with **error feedback** cuts those bytes 2× vs bf16 / 4× vs
+fp32: the quantisation residual is carried to the next step instead of
+being dropped, which preserves convergence (EF-SGD family).
+
+Two entry points:
+  * :func:`quantize` / :func:`dequantize` — the codec (blockwise absmax);
+  * :class:`ErrorFeedback` — residual-carrying compressor for a gradient
+    pytree, used by the Trainer's ``grad_compression="int8_ef"`` mode and
+    available to a shard_map'd psum for explicit wire compression.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize(x: jax.Array, block: int = BLOCK) -> Dict[str, jax.Array]:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def dequantize(enc: Dict[str, jax.Array], shape) -> jax.Array:
+    flat = (enc["q"].astype(jnp.float32) * enc["scale"]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def wire_bytes(shape, dtype_bytes: int = 4, block: int = BLOCK) -> Tuple[int, int]:
+    """(uncompressed, compressed) bytes for a tensor of ``shape``."""
+    n = 1
+    for d in shape:
+        n *= d
+    blocks = -(-n // block)
+    return n * dtype_bytes, n * 1 + blocks * 4
+
+
+class ErrorFeedback:
+    """Residual-carrying int8 compressor over a gradient pytree."""
+
+    def __init__(self) -> None:
+        self.residual = None
+
+    def init(self, grads):
+        self.residual = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+        return self.residual
+
+    @staticmethod
+    def compress(grads, residual):
+        """Returns (decompressed grads as transmitted, new residual)."""
+        def one(g, r):
+            target = g.astype(jnp.float32) + r
+            enc = quantize(target)
+            sent = dequantize(enc, g.shape)
+            return sent.astype(g.dtype), target - sent
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_r = tdef.flatten_up_to(residual)
+        out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        return tdef.unflatten([o[0] for o in out]), \
+            tdef.unflatten([o[1] for o in out])

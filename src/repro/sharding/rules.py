@@ -1,0 +1,173 @@
+"""Logical-axis → mesh-axis rules (the sharding strategy layer).
+
+Axis roles over the production mesh (DESIGN.md §5):
+  * ``pod``   — pure data parallelism.  Cross-pod traffic is one gradient
+    all-reduce per step; everything else stays inside a pod.  This is the
+    StashCache principle applied to the compute plane: the DCN/WAN carries
+    each byte once.
+  * ``data``  — FSDP: parameters/optimizer sharded on a weight dim,
+    re-gathered per layer under the scan; batch also sharded here.
+  * ``model`` — tensor parallelism (heads / d_ff / experts / d_inner) and
+    sequence sharding for decode KV caches.
+
+Rules are *resolved per architecture*: a logical axis maps to a mesh axis
+only when the dimension divides the axis size; otherwise it falls back to
+replication (e.g. gemma2's 8 heads on a 16-wide model axis, mixtral's 8
+experts → expert-internal d_ff TP instead).  Strategy overrides are how
+§Perf hillclimbing swaps sharding schemes without touching model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+
+MeshAxes = Optional[Tuple[str, ...]]
+
+
+def is_logical_axes(x) -> bool:
+    """Leaf predicate for spec trees: a tuple of axis names (str|None).
+    Structural tuples (e.g. the per-position blocks tuple) contain dicts
+    and must NOT be treated as leaves."""
+    return isinstance(x, tuple) and \
+        all(e is None or isinstance(e, str) for e in x)
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    """Resolved logical-axis table for one (arch, mesh, shape) cell."""
+
+    mesh: Mesh
+    table: Dict[str, Any]
+
+    def mesh_axes(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return self.table.get(logical)
+
+    def spec(self, logical_axes: Tuple) -> P:
+        used = set()
+        out = []
+        for ax in logical_axes:
+            m = self.mesh_axes(ax)
+            if m is None:
+                out.append(None)
+                continue
+            axes = (m,) if isinstance(m, str) else tuple(m)
+            axes = tuple(a for a in axes if a not in used)
+            used.update(axes)
+            if not axes:
+                out.append(None)
+            elif len(axes) == 1:
+                out.append(axes[0])
+            else:
+                out.append(axes)
+        return P(*out)
+
+    def sharding(self, logical_axes: Tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes))
+
+    def tree_shardings(self, spec_tree):
+        return jax.tree.map(
+            lambda axes: self.sharding(axes),
+            spec_tree, is_leaf=is_logical_axes)
+
+    def constrain(self, x, *logical_axes):
+        """with_sharding_constraint helper for activations."""
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding(tuple(logical_axes)))
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def _fits(dim: int, mesh: Mesh, name) -> bool:
+    return dim % _axis_size(mesh, name) == 0
+
+
+def make_rules(cfg: ArchConfig, mesh: Mesh,
+               global_batch: int = 0,
+               overrides: Optional[Dict[str, Any]] = None) -> ShardingRules:
+    """Resolve the logical table for an architecture on a mesh.
+
+    ``overrides`` (logical → mesh axes or None) implement alternative
+    strategies during perf iteration.
+    """
+    has_pod = "pod" in mesh.shape
+    dp = ("pod", "data") if has_pod else ("data",)
+    model = "model"
+
+    t: Dict[str, Any] = {}
+    # --- parameters -------------------------------------------------------
+    t["layers"] = None
+    t["vocab"] = model if _fits(cfg.vocab_size, mesh, model) else None
+    t["embed"] = "data" if _fits(cfg.d_model, mesh, "data") else None
+    t["q_heads"] = model if cfg.num_heads and _fits(
+        cfg.resolved_num_heads, mesh, model) else None
+    t["kv_heads"] = model if cfg.num_kv_heads and _fits(
+        cfg.num_kv_heads, mesh, model) else None
+    t["head_dim"] = None
+    t["mlp"] = model if cfg.d_ff and _fits(cfg.d_ff, mesh, model) else None
+    if cfg.num_experts:
+        if _fits(cfg.num_experts, mesh, model):
+            t["experts"] = model
+            t["expert_mlp"] = None
+        else:
+            t["experts"] = None
+            t["expert_mlp"] = model if _fits(cfg.d_ff, mesh, model) else None
+    else:
+        t["experts"] = t["expert_mlp"] = None
+    t["moe_cap"] = None
+    if cfg.ssm_state:
+        t["ssm_inner"] = model if _fits(cfg.d_inner, mesh, model) else None
+        t["ssm_state"] = None
+        t["ssm_heads"] = None
+        t["conv"] = None
+    # --- activations --------------------------------------------------------
+    if global_batch and global_batch % _axis_size(mesh, dp) == 0:
+        t["act_batch"] = dp
+    elif global_batch and global_batch % mesh.shape["data"] == 0:
+        t["act_batch"] = ("data",)
+    else:
+        t["act_batch"] = None
+    t["act_seq"] = None
+    t["act_embed"] = None
+    t["act_vocab"] = t["vocab"]
+    t["img"] = None
+    # --- decode caches -------------------------------------------------------
+    if global_batch and global_batch % _axis_size(mesh, dp) == 0:
+        t["cache_batch"] = dp
+        t["cache_seq"] = model
+    else:
+        # tiny-batch long-context: spread the sequence everywhere
+        t["cache_batch"] = None
+        t["cache_seq"] = ("data", "model") if not has_pod else \
+            ("pod", "data", "model")
+    if overrides:
+        t.update(overrides)
+    return ShardingRules(mesh=mesh, table=t)
+
+
+def batch_specs(rules: ShardingRules, kind: str) -> Dict[str, P]:
+    """PartitionSpecs for step inputs by shape kind."""
+    if kind == "train":
+        return {"tokens": rules.spec(("act_batch", "act_seq")),
+                "labels": rules.spec(("act_batch", "act_seq")),
+                "image_embeds": rules.spec(("act_batch", "img", "act_embed"))}
+    if kind == "prefill":
+        return {"tokens": rules.spec(("act_batch", "act_seq")),
+                "image_embeds": rules.spec(("act_batch", "img", "act_embed"))}
+    return {"token": rules.spec(("act_batch",)),
+            "pos": P(),
+            "image_embeds": rules.spec(("act_batch", "img", "act_embed"))}

@@ -1,0 +1,7 @@
+"""Training substrate: optimizer, steps, trainer, checkpointing."""
+from .checkpoint import FederatedCheckpointer
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+from .trainer import FailureInjector, Trainer, TrainerReport
+
+__all__ = ["FederatedCheckpointer", "AdamWConfig", "adamw_update",
+           "init_opt_state", "FailureInjector", "Trainer", "TrainerReport"]

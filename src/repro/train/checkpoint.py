@@ -1,0 +1,148 @@
+"""Federation-backed checkpointing — restart storms through pod caches.
+
+Saves go through the **write-back cache** (the paper's §6 future work):
+the training job acks as soon as bytes land in the pod cache; the drain to
+the origin is rate-limited so a 512-host synchronous save cannot melt the
+storage fabric.
+
+Restores are the paper's headline scenario inverted onto the fleet: after
+a preemption, every host of a pod re-reads the same checkpoint objects —
+the first reader warms the pod cache and the other N−1 hit it, so the
+origin sees each byte once per pod instead of once per host (measured in
+``benchmarks/bench_restart_storm.py``).
+
+Layout: one federation object per parameter leaf (so a host restoring a
+*shard* fetches only the leaves it owns) plus a JSON manifest:
+
+    /ckpt/<run>/step_<k>/manifest.json
+    /ckpt/<run>/step_<k>/<leaf.path>.npy
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.client import StashClient
+from ..core.transfer import TransferStats
+from ..core.writeback import WritebackCache
+
+
+def _leaf_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _encode_array(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    return buf.getvalue()
+
+
+def _decode_array(raw: bytes) -> np.ndarray:
+    return np.load(io.BytesIO(raw), allow_pickle=False)
+
+
+@dataclasses.dataclass
+class CheckpointStats:
+    save_bytes: int = 0
+    save_seconds: float = 0.0
+    restore_bytes: int = 0
+    restore_seconds: float = 0.0
+    leaves: int = 0
+
+
+class FederatedCheckpointer:
+    def __init__(self, run: str, writeback: WritebackCache,
+                 client: StashClient) -> None:
+        self.run = run
+        self.writeback = writeback
+        self.client = client
+        self.stats = CheckpointStats()
+
+    def prefix(self, step: int) -> str:
+        return f"/ckpt/{self.run}/step_{step:08d}"
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state, drain: bool = True) -> TransferStats:
+        """Write state via the write-back cache; optionally drain now."""
+        agg = TransferStats(method="checkpoint-save")
+        manifest = {"step": step, "leaves": []}
+        node = self.client.node.name
+        for name, leaf in _leaf_paths(state):
+            arr = np.asarray(leaf)
+            if arr.dtype == jax.numpy.bfloat16:
+                arr = arr.astype(np.float32)  # npy-portable
+                stored_dtype = "bfloat16"
+            else:
+                stored_dtype = str(arr.dtype)
+            raw = _encode_array(arr)
+            path = f"{self.prefix(step)}/{name}.npy"
+            _, st = self.writeback.write(node, path, raw)
+            agg.add(st)
+            manifest["leaves"].append(
+                {"name": name, "path": path, "dtype": stored_dtype,
+                 "shape": list(arr.shape)})
+        _, st = self.writeback.write(
+            node, f"{self.prefix(step)}/manifest.json",
+            json.dumps(manifest).encode())
+        agg.add(st)
+        if drain:
+            self.writeback.drain()
+        self.stats.save_bytes += agg.bytes
+        self.stats.save_seconds += agg.seconds
+        self.stats.leaves = len(manifest["leaves"])
+        return agg
+
+    # -- restore --------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        """Scan the origin catalog for the newest complete checkpoint."""
+        best = None
+        for origin in self.writeback.redirectors.members[0].origins.values():
+            for meta in origin.list_objects():
+                p = meta.path
+                if p.startswith(f"/ckpt/{self.run}/") and \
+                        p.endswith("manifest.json"):
+                    step = int(p.split("step_")[1].split("/")[0])
+                    best = step if best is None else max(best, step)
+        return best
+
+    def restore(self, step: int, like=None) -> Tuple[Any, TransferStats]:
+        """Fetch a checkpoint through the nearest cache."""
+        agg = TransferStats(method="checkpoint-restore")
+        raw, st = self.client.read(f"{self.prefix(step)}/manifest.json")
+        agg.add(st)
+        manifest = json.loads(raw.decode())
+        leaves: Dict[str, np.ndarray] = {}
+        for entry in manifest["leaves"]:
+            raw, st = self.client.read(entry["path"])
+            agg.add(st)
+            arr = _decode_array(raw)
+            if entry["dtype"] == "bfloat16":
+                arr = arr.astype(jax.numpy.bfloat16)
+            leaves[entry["name"]] = arr
+        self.stats.restore_bytes += agg.bytes
+        self.stats.restore_seconds += agg.seconds
+        if like is None:
+            return leaves, agg
+        named = _leaf_paths(like)
+        flat = [leaves[name] for name, _ in named]
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), flat)
+        return tree, agg

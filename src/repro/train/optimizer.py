@@ -1,0 +1,153 @@
+"""AdamW with configurable moment precision (fp32 / bf16 / int8-blockwise).
+
+No optax in this environment, and large-scale training wants control over
+optimizer-state memory anyway: for the ≥90 B-parameter assigned archs the
+dry-run budget requires sub-fp32 moments (DESIGN.md §5).  The int8 mode is
+blockwise-quantized (per-256-element absmax scales) with the same update
+math in fp32 — a standard 8-bit-Adam construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"       # float32 | bfloat16 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise int8 moment codec
+# ---------------------------------------------------------------------------
+def _q8_encode(x: jax.Array) -> Dict[str, jax.Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _q8_decode(enc: Dict[str, jax.Array], shape) -> jax.Array:
+    flat = (enc["q"].astype(jnp.float32) * enc["scale"]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def _encode_moment(x: jax.Array, dtype: str):
+    if dtype == "int8":
+        return _q8_encode(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _decode_moment(m, shape, dtype: str) -> jax.Array:
+    if dtype == "int8":
+        return _q8_decode(m, shape)
+    return m.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+def init_opt_state(params, cfg: AdamWConfig):
+    def one(p):
+        z = jnp.zeros_like(p, dtype=jnp.float32)
+        return _encode_moment(z, cfg.moment_dtype)
+
+    return {
+        "mu": jax.tree.map(one, params),
+        "nu": jax.tree.map(one, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs, cfg: AdamWConfig):
+    """Logical-axis specs for the optimizer state (mirror params)."""
+    def one(axes):
+        if cfg.moment_dtype == "int8":
+            # Quantized blocks lose tensor structure → replicate scales,
+            # shard q on its (flattened) leading dim over data.
+            return {"q": ("opt_blocks", None), "scale": ("opt_blocks", None)}
+        return tuple(axes)
+
+    from ..sharding.rules import is_logical_axes
+    return {
+        "mu": jax.tree.map(one, param_specs, is_leaf=is_logical_axes),
+        "nu": jax.tree.map(one, param_specs, is_leaf=is_logical_axes),
+        "step": (),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        m = _decode_moment(mu, p.shape, cfg.moment_dtype)
+        v = _decode_moment(nu, p.shape, cfg.moment_dtype)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, _encode_moment(m, cfg.moment_dtype), \
+            _encode_moment(v, cfg.moment_dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    is_enc = lambda x: isinstance(x, dict) and "q" in x  # noqa: E731
+    flat_mu = jax.tree.flatten(opt_state["mu"], is_leaf=is_enc)[0]
+    flat_nu = jax.tree.flatten(opt_state["nu"], is_leaf=is_enc)[0]
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

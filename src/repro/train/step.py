@@ -1,0 +1,256 @@
+"""Train / prefill / decode step builders with explicit shardings.
+
+These are the functions the multi-pod dry-run lowers and the trainer runs:
+  * ``make_train_step``  — loss → grads → AdamW update, donated state;
+  * ``make_prefill_step`` — full-sequence logits (serving prefill);
+  * ``make_decode_step`` — one token against the KV/SSM cache, donated.
+
+All shardings come from :mod:`repro.sharding.rules`; microbatch gradient
+accumulation (for memory-constrained cells) is a ``lax.scan`` over the
+leading microbatch split.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import decode_step as model_decode_step
+from ..models import forward, init_decode_cache, init_lm, lm_loss
+from ..models.model import init_lm_abstract
+from ..sharding.rules import ShardingRules, batch_specs, make_rules
+from .optimizer import AdamWConfig, adamw_update, init_opt_state, \
+    opt_state_specs
+
+
+@dataclasses.dataclass
+class StepArtifacts:
+    """Everything needed to lower/compile one step for one cell."""
+
+    fn: Any                      # the jit-able python callable
+    in_shardings: Any
+    out_shardings: Any
+    abstract_inputs: Tuple      # ShapeDtypeStructs for .lower()
+    donate_argnums: Tuple = ()
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+# ---------------------------------------------------------------------------
+def build_train_step(cfg: ArchConfig, rules: ShardingRules,
+                     opt_cfg: AdamWConfig,
+                     global_batch: int, seq_len: int,
+                     microbatches: int = 1,
+                     aux_weight: float = 0.01):
+    """Returns StepArtifacts for the training step."""
+    # --- abstract state -------------------------------------------------------
+    abs_params = init_lm_abstract(jax.random.PRNGKey(0), cfg)
+    specs = spec_tree(cfg)
+    p_shard = rules.tree_shardings(specs)
+    abs_opt = jax.eval_shape(
+        functools.partial(init_opt_state, cfg=opt_cfg), abs_params)
+    o_specs = opt_state_specs(specs, opt_cfg)
+    o_shard = opt_shardings(o_specs, rules)
+    state_shardings = {"params": p_shard, "opt": o_shard}
+
+    bspecs = batch_specs(rules, "train")
+    tok_shard = NamedSharding(rules.mesh, bspecs["tokens"])
+    batch_in = {
+        "tokens": _sds((global_batch, seq_len), jnp.int32, tok_shard),
+        "labels": _sds((global_batch, seq_len), jnp.int32, tok_shard),
+    }
+    if cfg.num_image_tokens:
+        batch_in["image_embeds"] = _sds(
+            (global_batch, cfg.num_image_tokens, cfg.d_model),
+            jnp.bfloat16,
+            NamedSharding(rules.mesh, bspecs["image_embeds"]))
+
+    use_rules = rules
+
+    def loss_fn(params, batch):
+        img = batch.get("image_embeds")
+        return lm_loss(params, batch["tokens"], batch["labels"], cfg,
+                       image_embeds=img, aux_weight=aux_weight,
+                       rules=use_rules)
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        if microbatches > 1:
+            def micro(gsum, mb):
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                return jax.tree.map(jnp.add, gsum, g), l
+            split = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(micro, zeros, split)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = losses.mean()
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        new_params, new_opt, metrics = adamw_update(grads, opt, params,
+                                                    opt_cfg)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    abs_state = {"params": abs_params, "opt": abs_opt}
+    abs_state = attach_shardings(abs_state, state_shardings)
+    metric_shard = NamedSharding(rules.mesh, P())
+    out_shardings = (state_shardings,
+                     {"loss": metric_shard, "grad_norm": metric_shard,
+                      "lr": metric_shard})
+    return StepArtifacts(
+        fn=train_step,
+        in_shardings=(state_shardings,
+                      {k: v.sharding for k, v in batch_in.items()}),
+        out_shardings=out_shardings,
+        abstract_inputs=(abs_state, batch_in),
+        donate_argnums=(0,),
+    )
+
+
+def build_prefill_step(cfg: ArchConfig, rules: ShardingRules,
+                       global_batch: int, seq_len: int):
+    abs_params = init_lm_abstract(jax.random.PRNGKey(0), cfg)
+    specs = spec_tree(cfg)
+    p_shard = rules.tree_shardings(specs)
+    bspecs = batch_specs(rules, "prefill")
+    tok_shard = NamedSharding(rules.mesh, bspecs["tokens"])
+    inputs = {"tokens": _sds((global_batch, seq_len), jnp.int32, tok_shard)}
+    if cfg.num_image_tokens:
+        inputs["image_embeds"] = _sds(
+            (global_batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16,
+            NamedSharding(rules.mesh, bspecs["image_embeds"]))
+
+    # §Perf: activation pinning helps diseased train cells but measurably
+    # hurts prefill (feature-sharded activations are the better layout
+    # there) — prefill keeps GSPMD's own propagation.
+    use_rules = None
+
+    def prefill(params, batch):
+        logits, _ = forward(params, batch["tokens"], cfg,
+                            image_embeds=batch.get("image_embeds"),
+                            rules=use_rules)
+        # Serving prefill only needs the last-position logits.
+        return logits[:, -1, :]
+
+    logits_shard = NamedSharding(
+        rules.mesh, rules.spec(("act_batch", "act_vocab")))
+    return StepArtifacts(
+        fn=prefill,
+        in_shardings=(p_shard, {k: v.sharding for k, v in inputs.items()}),
+        out_shardings=logits_shard,
+        abstract_inputs=(attach_shardings(abs_params, p_shard), inputs),
+    )
+
+
+def build_decode_step(cfg: ArchConfig, rules: ShardingRules,
+                      global_batch: int, max_seq: int):
+    abs_params = init_lm_abstract(jax.random.PRNGKey(0), cfg)
+    specs = spec_tree(cfg)
+    p_shard = rules.tree_shardings(specs)
+    abs_cache, cspecs = eval_cache(cfg, global_batch, max_seq)
+    c_shard = rules.tree_shardings(cspecs)
+
+    bspecs = batch_specs(rules, "decode")
+    tok_shard = NamedSharding(rules.mesh, bspecs["token"])
+    inputs = {
+        "token": _sds((global_batch,), jnp.int32, tok_shard),
+        "pos": _sds((), jnp.int32, NamedSharding(rules.mesh, P())),
+    }
+    img_shard = None
+    if cfg.num_image_tokens:
+        img_shard = NamedSharding(rules.mesh, bspecs["image_embeds"])
+        inputs["image_embeds"] = _sds(
+            (global_batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16,
+            img_shard)
+
+    def decode(params, cache, batch):
+        logits, new_cache = model_decode_step(
+            params, cache, batch["token"], batch["pos"], cfg,
+            image_embeds=batch.get("image_embeds"))
+        return logits, new_cache
+
+    logits_shard = NamedSharding(
+        rules.mesh, rules.spec(("act_batch", "act_vocab")))
+    return StepArtifacts(
+        fn=decode,
+        in_shardings=(p_shard, c_shard,
+                      {k: v.sharding for k, v in inputs.items()}),
+        out_shardings=(logits_shard, c_shard),
+        abstract_inputs=(attach_shardings(abs_params, p_shard),
+                         attach_shardings(abs_cache, c_shard), inputs),
+        donate_argnums=(1,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Spec plumbing helpers
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _spec_tree_cached(cfg: ArchConfig):
+    _, specs = init_lm(jax.random.PRNGKey(0), _tiny_like(cfg))
+    return specs
+
+
+def spec_tree(cfg: ArchConfig):
+    """Logical-axis specs for params (structure-identical to init_lm)."""
+    return _spec_tree_cached(cfg)
+
+
+def _tiny_like(cfg: ArchConfig) -> ArchConfig:
+    """A minimum-size config with identical *structure* (same pattern,
+    same param tree) so spec trees can be built without big allocs."""
+    period = len(cfg.pattern())
+    return dataclasses.replace(
+        cfg,
+        num_layers=period,
+        d_model=16,
+        num_heads=min(cfg.num_heads, 2) if cfg.num_heads else 0,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads else 0,
+        head_dim=8 if cfg.num_heads else 0,
+        d_ff=32 if cfg.d_ff else 0,
+        vocab_size=64,
+        num_experts=min(cfg.num_experts, 2) if cfg.num_experts else 0,
+        ssm_state=8 if cfg.ssm_state else 0,
+        ssm_headdim=8 if cfg.ssm_state else cfg.ssm_headdim,
+        num_image_tokens=4 if cfg.num_image_tokens else 0,
+    )
+
+
+def eval_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    abs_cache = jax.eval_shape(
+        lambda: init_decode_cache(cfg, batch, max_seq)[0])
+    _, cspecs = init_decode_cache(_tiny_like(cfg), 1, 8)
+    return abs_cache, cspecs
+
+
+def attach_shardings(abs_tree, shardings):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abs_tree, shardings)
+
+
+def opt_shardings(o_specs, rules: ShardingRules):
+    from ..sharding.rules import is_logical_axes
+
+    def one(axes):
+        if isinstance(axes, dict):  # int8 moment codec
+            return {k: NamedSharding(rules.mesh, P())
+                    for k in ("q", "scale")}
+        return rules.sharding(tuple(axes))
+
+    is_leaf = lambda x: is_logical_axes(x) or (  # noqa: E731
+        isinstance(x, dict) and "q" in x)
+    return jax.tree.map(one, o_specs, is_leaf=is_leaf)

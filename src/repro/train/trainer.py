@@ -1,0 +1,158 @@
+"""Fault-tolerant trainer: federated data, checkpoint/restart, elasticity.
+
+The loop composes the substrates:
+  * batches from :class:`~repro.data.loader.FederatedDataLoader`
+    (prefetch + hedged fetches = straggler mitigation on the data plane);
+  * a jitted train step (sharded when a mesh is supplied);
+  * periodic checkpoint saves through the write-back cache;
+  * **failure handling** — a ``FailureInjector`` can kill any step;
+    the trainer restores the newest checkpoint and replays (the loader's
+    deterministic step→slice mapping makes replay exact);
+  * **elastic rescale** — ``rescale(world)`` re-ranks the loader so the
+    same global batch is re-partitioned across a different worker count
+    (the batch→device mapping is re-sharded by pjit automatically).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..data.loader import FederatedDataLoader
+from ..models import init_lm, lm_loss
+from ..sharding.compression import ErrorFeedback
+from .checkpoint import FederatedCheckpointer
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+class FailureInjector:
+    """Deterministic chaos monkey: fail at the listed steps, once each."""
+
+    def __init__(self, fail_at: List[int] = ()) -> None:
+        self.fail_at = set(fail_at)
+        self.failures = 0
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            self.failures += 1
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps_run: int = 0
+    restarts: int = 0
+    losses: List[float] = dataclasses.field(default_factory=list)
+    final_loss: float = float("nan")
+    cache_hit_rate: float = 0.0
+    restored_from: List[int] = dataclasses.field(default_factory=list)
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, loader: FederatedDataLoader,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 checkpointer: Optional[FederatedCheckpointer] = None,
+                 checkpoint_every: int = 50,
+                 seed: int = 0,
+                 aux_weight: float = 0.01,
+                 grad_compression: str = "none") -> None:
+        self.cfg = cfg
+        self.loader = loader
+        self.opt_cfg = opt_cfg or AdamWConfig(warmup_steps=10,
+                                              total_steps=1000)
+        self.checkpointer = checkpointer
+        self.checkpoint_every = checkpoint_every
+        self.aux_weight = aux_weight
+        # int8_ef: blockwise-int8 gradients with error feedback — the
+        # codec that compresses the cross-pod all-reduce 4x (DESIGN.md §5)
+        self.grad_compression = grad_compression
+        key = jax.random.PRNGKey(seed)
+        params, _ = init_lm(key, cfg)
+        self.state = {"params": params,
+                      "opt": init_opt_state(params, self.opt_cfg)}
+        if grad_compression == "int8_ef":
+            self.state["ef_residual"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        self.step = 0
+        self._jit_step = jax.jit(self._train_step)
+
+    # ------------------------------------------------------------------
+    def _train_step(self, state, batch):
+        def loss_fn(params):
+            return lm_loss(params, batch["tokens"], batch["labels"],
+                           self.cfg, aux_weight=self.aux_weight)
+
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        if self.grad_compression == "int8_ef":
+            grads, new_res = ErrorFeedback.compress(grads,
+                                                    state["ef_residual"])
+        new_p, new_opt, metrics = adamw_update(
+            grads, state["opt"], state["params"], self.opt_cfg)
+        metrics["loss"] = loss
+        out = {"params": new_p, "opt": new_opt}
+        if self.grad_compression == "int8_ef":
+            out["ef_residual"] = new_res
+        return out, metrics
+
+    # ------------------------------------------------------------------
+    def save(self) -> None:
+        if self.checkpointer is not None:
+            self.checkpointer.save(self.step, self.state)
+
+    def restore_latest(self) -> bool:
+        if self.checkpointer is None:
+            return False
+        latest = self.checkpointer.latest_step()
+        if latest is None:
+            return False
+        self.state, _ = self.checkpointer.restore(latest, like=self.state)
+        self.step = latest
+        return True
+
+    def rescale(self, world: int, rank: int = 0) -> None:
+        """Elastic re-partition of the data plane."""
+        self.loader.world = world
+        self.loader.rank = rank
+        self.loader._buffer.clear()
+
+    # ------------------------------------------------------------------
+    def run(self, num_steps: int,
+            failure: Optional[FailureInjector] = None,
+            max_restarts: int = 10) -> TrainerReport:
+        report = TrainerReport()
+        target = self.step + num_steps
+        restarts = 0
+        if self.checkpointer is not None and self.step == 0:
+            self.save()  # step-0 anchor so the first failure can recover
+        while self.step < target:
+            try:
+                if failure is not None:
+                    failure.maybe_fail(self.step)
+                batch = self.loader.batch(self.step)
+                self.state, metrics = self._jit_step(self.state, batch)
+                self.step += 1
+                report.steps_run += 1
+                loss = float(metrics["loss"])
+                report.losses.append(loss)
+                if self.checkpointer is not None and \
+                        self.step % self.checkpoint_every == 0:
+                    self.save()
+            except RuntimeError as e:
+                if "injected" not in str(e) or restarts >= max_restarts:
+                    raise
+                restarts += 1
+                report.restarts += 1
+                restored = self.restore_latest()
+                if restored:
+                    report.restored_from.append(self.step)
+                # else: cold restart from current in-memory state
+        report.final_loss = report.losses[-1] if report.losses else \
+            float("nan")
+        report.cache_hit_rate = self.loader.stats.hit_rate
+        return report

@@ -1,0 +1,10 @@
+"""Test bootstrap: make the repo root importable (for ``benchmarks``).
+
+Note: no XLA device-count flags here — smoke tests and benches must see
+the single real CPU device; only ``repro.launch.dryrun`` (never imported
+at module scope by tests) forces 512 host devices.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

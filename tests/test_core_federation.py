@@ -1,0 +1,220 @@
+"""Unit tests for the StashCache federation core (paper §3)."""
+import pytest
+
+from repro.core import (
+    CacheServer, Coord, DEFAULT_CHUNK_SIZE, GeoIPService, Namespace,
+    NetworkModel, Origin, Payload, Redirector, RedirectorPair, Topology,
+    build_osg_federation, chunk_object, fnv1a64,
+)
+
+
+# ---------------------------------------------------------------------------
+# Chunking & checksums
+# ---------------------------------------------------------------------------
+class TestChunking:
+    def test_chunk_boundaries(self):
+        data = bytes(range(256)) * 1000  # 256 KB
+        meta, payloads = chunk_object("/exp/f", data, chunk_size=100_000)
+        assert meta.num_chunks == 3 == len(payloads)
+        assert [p.size for p in payloads] == [100_000, 100_000, 56_000]
+        assert b"".join(p.data for p in payloads) == data
+
+    def test_checksums_along_chunk_boundaries(self):
+        meta, payloads = chunk_object("/exp/f", b"x" * 50, chunk_size=16)
+        assert meta.chunk_digests == [p.digest for p in payloads]
+        assert all(p.verify() for p in payloads)
+
+    def test_corruption_detected(self):
+        p = Payload.from_bytes(b"hello world")
+        assert p.verify()
+        assert not p.corrupted().verify()
+
+    def test_fnv1a_reference_vector(self):
+        # Known FNV-1a 64-bit test vectors.
+        assert fnv1a64(b"") == 0xCBF29CE484222325
+        assert fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+
+    def test_partial_read_covers_only_needed_chunks(self):
+        meta, _ = chunk_object("/exp/f", b"z" * 100, chunk_size=10)
+        refs = meta.chunks_for_range(25, 30)  # bytes 25..54 → chunks 2..5
+        assert [r.index for r in refs] == [2, 3, 4, 5]
+
+
+# ---------------------------------------------------------------------------
+# Namespace & redirector
+# ---------------------------------------------------------------------------
+class TestNamespace:
+    def test_longest_prefix_resolution(self):
+        ns = Namespace()
+        ns.register("/ligo", "o1")
+        ns.register("/ligo/frames", "o2")
+        assert ns.resolve("/ligo/frames/f1") == "o2"
+        assert ns.resolve("/ligo/other") == "o1"
+        assert ns.resolve("/nova/x") is None
+
+    def test_conflicting_export_rejected(self):
+        ns = Namespace()
+        ns.register("/ligo", "o1")
+        with pytest.raises(ValueError):
+            ns.register("/ligo", "o2")
+
+
+def _mini_topo():
+    topo = Topology()
+    topo.add_site("site")
+    n_o = topo.add_node("origin", Coord("site", 1, 0), 1e10)
+    n_r1 = topo.add_node("r1", Coord("site", 2, 0), 1e10)
+    n_r2 = topo.add_node("r2", Coord("site", 2, 1), 1e10)
+    n_c = topo.add_node("cache", Coord("site", 3, 0), 1e10)
+    return topo, n_o, n_r1, n_r2, n_c
+
+
+class TestRedirector:
+    def test_locate_queries_origin(self):
+        topo, n_o, n_r1, n_r2, _ = _mini_topo()
+        origin = Origin("o1", n_o, exports=["/exp"])
+        origin.put_object("/exp/f", b"data")
+        r = Redirector("r1", n_r1)
+        r.subscribe(origin)
+        assert r.locate("/exp/f") is origin
+        assert r.locate("/exp/missing") is None
+        assert r.stats.origin_polls >= 1
+
+    def test_ha_round_robin_failover(self):
+        """Two redirectors in round-robin HA configuration (§3)."""
+        topo, n_o, n_r1, n_r2, _ = _mini_topo()
+        origin = Origin("o1", n_o, exports=["/exp"])
+        origin.put_object("/exp/f", b"data")
+        pair = RedirectorPair(Redirector("r1", n_r1), Redirector("r2", n_r2))
+        pair.subscribe(origin)
+        # round robin alternates members
+        pair.locate("/exp/f")
+        pair.locate("/exp/f")
+        assert pair.members[0].stats.locate_requests == 1
+        assert pair.members[1].stats.locate_requests == 1
+        # kill one → transparent failover
+        pair.members[0].available = False
+        for _ in range(4):
+            assert pair.locate("/exp/f") is origin
+        assert pair.failovers > 0
+        # both dead → hard error
+        pair.members[1].available = False
+        with pytest.raises(ConnectionError):
+            pair.locate("/exp/f")
+
+
+# ---------------------------------------------------------------------------
+# Cache server
+# ---------------------------------------------------------------------------
+class TestCacheLRU:
+    def _cache(self, capacity):
+        topo, n_o, n_r1, n_r2, n_c = _mini_topo()
+        return CacheServer("cache", n_c, capacity)
+
+    def test_lru_eviction_order(self):
+        c = self._cache(capacity=30)
+        for i in range(3):
+            c.admit("/f", i, Payload.from_bytes(bytes([i]) * 10))
+        c.lookup("/f", 0)  # touch chunk 0 → chunk 1 is now coldest
+        c.admit("/f", 3, Payload.from_bytes(b"x" * 10))
+        assert c.resident("/f", 0)
+        assert not c.resident("/f", 1)
+        assert c.stats.evictions == 1
+
+    def test_pinned_chunks_survive_eviction(self):
+        c = self._cache(capacity=25)
+        c.admit("/f", 0, Payload.from_bytes(b"a" * 10))
+        c.pin("/f", 0)
+        c.admit("/f", 1, Payload.from_bytes(b"b" * 10))
+        c.admit("/f", 2, Payload.from_bytes(b"c" * 10))
+        assert c.resident("/f", 0)       # pinned → not evicted
+        assert not c.resident("/f", 1)   # LRU victim instead
+
+    def test_space_reclamation_is_safe(self):
+        """Resource owner reclaims space; next access refetches (§1)."""
+        c = self._cache(capacity=100)
+        c.admit("/f", 0, Payload.from_bytes(b"a" * 10))
+        c.drop("/f", 0)
+        assert c.lookup("/f", 0) is None
+        assert c.stats.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# End-to-end functional federation
+# ---------------------------------------------------------------------------
+class TestFederationEndToEnd:
+    def setup_method(self):
+        self.fed = build_osg_federation()
+        self.origin = self.fed.origins[0]
+        self.data = b"\xAB" * 200_000
+        self.origin.put_object("/ligo/frames/f1", self.data, mtime=1.0)
+
+    def test_cold_then_warm_read(self):
+        client = self.fed.client("nebraska", 0)
+        got, st1 = client.read("/ligo/frames/f1")
+        assert got == self.data
+        assert st1.cache_misses > 0
+        # second client at same site: cache hit, faster
+        client2 = self.fed.client("nebraska", 1)
+        got2, st2 = client2.read("/ligo/frames/f1")
+        assert got2 == self.data
+        assert st2.cache_misses == 0 and st2.cache_hits > 0
+        assert st2.seconds < st1.seconds
+
+    def test_nearest_cache_selected(self):
+        client = self.fed.client("syracuse", 0)
+        client.read("/ligo/frames/f1")
+        assert self.fed.caches["syracuse/cache"].stats.bytes_served > 0
+        assert self.fed.caches["colorado/cache"].stats.bytes_served == 0
+
+    def test_cache_failure_fails_over_to_next_nearest(self):
+        client = self.fed.client("syracuse", 0)
+        self.fed.caches["syracuse/cache"].available = False
+        got, _ = client.read("/ligo/frames/f1")
+        assert got == self.data
+        assert client.stats.cache_failovers > 0
+
+    def test_stashcp_fallback_chain(self):
+        # No CVMFS, no XRootD → curl/HTTP path still succeeds.
+        client = self.fed.client("chicago", 0, cvmfs=False, xrootd=False)
+        got, st = client.copy("/ligo/frames/f1")
+        assert got == self.data
+        assert st.method == "stashcp/http"
+        # XRootD preferred over HTTP when present.
+        client2 = self.fed.client("chicago", 1, cvmfs=False, xrootd=True)
+        _, st2 = client2.copy("/ligo/frames/f1")
+        assert st2.method == "stashcp/xrootd"
+
+    def test_checksum_corruption_detected_and_refetched(self):
+        """CVMFS consistency guarantee vs silent proxy corruption (§6)."""
+        client = self.fed.client("nebraska", 0)
+        client.read("/ligo/frames/f1")
+        cache = self.fed.caches["nebraska/cache"]
+        cache.corrupt("/ligo/frames/f1", 0)
+        client2 = self.fed.client("nebraska", 1)
+        got, _ = client2.read("/ligo/frames/f1")
+        assert got == self.data                      # healed
+        assert client2.stats.checksum_failures == 1
+
+    def test_proxy_serves_corruption_silently(self):
+        proxy = self.fed.proxies["nebraska"]
+        meta = self.origin.meta("/ligo/frames/f1")
+        client_node = self.fed.client("nebraska", 0).node.name
+        proxy.get_object(client_node, meta, now=0.0)
+        proxy.corrupt("/ligo/frames/f1")
+        corrupt, _ = proxy.get_object(client_node, meta, now=1.0)
+        assert corrupt  # no checksums in the HTTP path
+
+    def test_cvmfs_partial_read(self):
+        """Partial reads only fetch covering chunks (§3.1)."""
+        big = bytes(1024) * 3000  # ~3 MB
+        self.origin.put_object("/des/big", big, mtime=2.0)
+        client = self.fed.client("colorado", 0)
+        got, st = client.read("/des/big", offset=100, length=50)
+        assert got == big[100:150]
+        assert st.chunks <= 1 or st.bytes < len(big)
+
+    def test_geoip_lookup_cost_charged_to_stashcp(self):
+        client = self.fed.client("chicago", 0, cvmfs=False)
+        _, st = client.copy("/ligo/frames/f1")
+        assert st.seconds >= self.fed.geoip.lookup_latency

@@ -1,0 +1,178 @@
+"""Monitoring pipeline (§3.2), indexer (§3.1), write-back (§6) tests."""
+import pytest
+
+from repro.core import (
+    Coord, FileClose, FileOpen, MessageBus, MonitorCollector, Origin,
+    Topology, UsageAggregator, UserLogin, build_osg_federation,
+    experiment_of,
+)
+
+
+class TestMonitoring:
+    def _collector(self, drop=0.0):
+        bus = MessageBus()
+        agg = UsageAggregator(bucket_seconds=60.0)
+        bus.subscribe(agg)
+        return MonitorCollector(bus, drop_rate=drop), agg
+
+    def test_join_on_file_close(self):
+        col, agg = self._collector()
+        col.user_login(UserLogin("cacheA", 7, "host1", "xrootd", False, 0.0))
+        col.file_open(FileOpen("cacheA", 42, 7, "/ligo/f", 1000, 1.0))
+        col.file_close(FileClose("cacheA", 42, 900, 0, 3, 5.0))
+        assert agg.records == 1
+        assert agg.by_experiment["ligo"] == 900
+
+    def test_lost_open_packet_tolerated(self):
+        """UDP is lossy; a close without its open must not crash the join."""
+        col, agg = self._collector()
+        col.file_close(FileClose("cacheA", 99, 100, 0, 1, 1.0))
+        assert col.unjoined == 1
+        assert agg.records == 0
+
+    def test_usage_table_ordering(self):
+        col, agg = self._collector()
+        for i, (exp, nbytes) in enumerate([("ligo", 100), ("des", 500)]):
+            col.user_login(UserLogin("c", i, "h", "http", True, 0.0))
+            col.file_open(FileOpen("c", i, i, f"/{exp}/f", nbytes, 0.0))
+            col.file_close(FileClose("c", i, nbytes, 0, 1, 2.0))
+        table = agg.usage_table()
+        assert table[0] == ("des", 500) and table[1] == ("ligo", 100)
+
+    def test_experiment_from_path(self):
+        assert experiment_of("/ligo/frames/f1") == "ligo"
+        assert experiment_of("weird") == "weird"
+
+    def test_federation_emits_monitoring_records(self):
+        fed = build_osg_federation()
+        fed.origins[0].put_object("/nova/f", b"x" * 50_000)
+        fed.client("nebraska", 0).read("/nova/f")
+        assert fed.aggregator.records >= 1
+        assert fed.aggregator.by_experiment["nova"] >= 50_000
+
+
+class TestIndexer:
+    def _origin(self):
+        topo = Topology()
+        topo.add_site("s")
+        node = topo.add_node("o", Coord("s"), 1e10)
+        return Origin("o", node, exports=["/"])
+
+    def test_scan_builds_catalog_with_chunk_checksums(self):
+        o = self._origin()
+        o.put_object("/exp/a", b"a" * 100, mtime=1.0)
+        o.put_object("/exp/b", b"b" * 100, mtime=1.0)
+        from repro.core import Indexer
+        idx = Indexer(o)
+        st = idx.scan()
+        assert st.files_scanned == 2 and st.files_reindexed == 2
+        assert "/exp/a" in idx.catalog
+        assert idx.catalog.lookup("/exp/a").chunk_digests
+
+    def test_reindex_only_on_mtime_or_size_change(self):
+        o = self._origin()
+        o.put_object("/exp/a", b"a" * 100, mtime=1.0)
+        from repro.core import Indexer
+        idx = Indexer(o)
+        idx.scan()
+        st = idx.scan()                       # unchanged → no reindex
+        assert st.files_reindexed == 0
+        o.touch("/exp/a", mtime=2.0)          # changed mtime → reindex
+        st = idx.scan()
+        assert st.files_reindexed == 1
+
+    def test_scan_cost_proportional_to_file_count(self):
+        """Paper: delay proportional to the number of files."""
+        o = self._origin()
+        from repro.core import Indexer
+        for i in range(10):
+            o.put_object(f"/exp/f{i}", b"z", mtime=1.0)
+        t10 = Indexer(o).scan().scan_seconds
+        for i in range(10, 100):
+            o.put_object(f"/exp/f{i}", b"z", mtime=1.0)
+        t100 = Indexer(o).scan().scan_seconds
+        assert t100 > 5 * t10
+
+    def test_deleted_files_removed_from_catalog(self):
+        o = self._origin()
+        o.put_object("/exp/a", b"a", mtime=1.0)
+        from repro.core import Indexer
+        idx = Indexer(o)
+        idx.scan()
+        o.delete_object("/exp/a")
+        st = idx.scan()
+        assert st.files_removed == 1 and "/exp/a" not in idx.catalog
+
+
+class TestProxyBehaviour:
+    def test_large_files_never_cached(self):
+        """§5: the 2.3 GB and 10 GB files were never cached by proxies."""
+        fed = build_osg_federation()
+        origin = fed.origins[0]
+        origin.put_object("/t/big", 3 * 10**9)     # synthetic 3 GB
+        proxy = fed.proxies["nebraska"]
+        meta = origin.meta("/t/big")
+        wnode = fed.client("nebraska", 0).node.name
+        proxy.get_object(wnode, meta, now=0.0)
+        assert not proxy.resident("/t/big", now=0.0)
+        assert proxy.stats.uncacheable == 1
+        # ... but StashCache caches it fine.
+        client = fed.client("nebraska", 0, cvmfs=False)
+        client.copy("/t/big")
+        assert fed.caches["nebraska/cache"].usage_bytes >= 3 * 10**9
+
+    def test_rapid_expiry_causes_redownload(self):
+        """§5: files expired within one pass over the evaluation set."""
+        fed = build_osg_federation()
+        origin = fed.origins[0]
+        origin.put_object("/t/small", 10**6)
+        proxy = fed.proxies["chicago"]
+        proxy.ttl_seconds = 10.0
+        meta = origin.meta("/t/small")
+        wnode = fed.client("chicago", 0).node.name
+        proxy.get_object(wnode, meta, now=0.0)
+        assert proxy.resident("/t/small", now=5.0)
+        _, st = proxy.get_object(wnode, meta, now=20.0)  # expired
+        assert st.cache_misses == 1
+        assert proxy.stats.expirations == 1
+
+
+class TestWriteback:
+    def test_write_then_drain(self):
+        fed = build_osg_federation()
+        wb = fed.writeback("nebraska/cache")
+        data = b"R" * 70_000
+        meta, st = wb.write(fed.client("nebraska", 0).node.name, "/nova/out/res.h5", data)
+        assert wb.is_dirty("/nova/out/res.h5")
+        assert st.bytes == len(data)
+        # read-your-writes from the cache before drain
+        cache = fed.caches["nebraska/cache"]
+        assert cache.resident("/nova/out/res.h5", 0)
+        drain = wb.drain()
+        assert not wb.is_dirty("/nova/out/res.h5")
+        assert fed.origins[0].has("/nova/out/res.h5")
+        got, _ = fed.client("chicago", 0).read("/nova/out/res.h5")
+        assert got == data
+
+    def test_drain_rate_limit_protects_origin(self):
+        """§6: writing to the origin is scheduled, not a thundering herd."""
+        fed = build_osg_federation()
+        wb = fed.writeback("nebraska/cache", drain_rate=1e6)  # 1 MB/s
+        wb.write(fed.client("nebraska", 0).node.name, "/nova/out/a", 10**7)
+        st = wb.drain()
+        assert st.seconds >= 10**7 / 1e6 * 0.99  # rate-limited
+
+    def test_dirty_chunks_not_evictable(self):
+        fed = build_osg_federation()
+        cache = fed.caches["nebraska/cache"]
+        cache.capacity_bytes = 200_000
+        wb = fed.writeback("nebraska/cache")
+        wb.write(fed.client("nebraska", 0).node.name, "/nova/out/a", b"a" * 100_000)
+        # Fill with other data → dirty object must survive.
+        for i in range(5):
+            cache.admit("/x", i, __import__(
+                "repro.core.chunk", fromlist=["Payload"]
+            ).Payload.from_bytes(b"b" * 50_000))
+        assert cache.resident("/nova/out/a", 0)
+        wb.drain()
+        assert fed.origins[0].has("/nova/out/a")

@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (CacheServer, Coord, Namespace, Payload, Topology,
+                        chunk_object, fnv1a64)
+from repro.core.chunk import synthetic_object
+
+
+def _cache(capacity):
+    topo = Topology()
+    topo.add_site("s")
+    node = topo.add_node(f"c{capacity}", Coord("s"), 1e9)
+    return CacheServer(f"c{capacity}", node, capacity)
+
+
+class TestCacheInvariants:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 30), st.integers(1, 50)),
+                    min_size=1, max_size=200),
+           st.integers(50, 500))
+    def test_usage_never_exceeds_capacity(self, ops, capacity):
+        """LRU invariant: usage ≤ capacity (absent pinning), and usage
+        always equals the sum of resident chunk sizes."""
+        c = _cache(capacity)
+        for idx, size in ops:
+            c.admit("/f", idx, Payload.synthetic(size, "/f", idx))
+            assert c.usage_bytes <= max(capacity, size)
+            assert c.usage_bytes == sum(p.size for p in c._lru.values())
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(0, 10), min_size=1, max_size=60))
+    def test_hit_after_admit_unless_evicted(self, accesses):
+        c = _cache(10_000)
+        seen = set()
+        for idx in accesses:
+            if idx in seen:
+                assert c.lookup("/f", idx) is not None
+            else:
+                c.admit("/f", idx, Payload.synthetic(10, "/f", idx))
+                seen.add(idx)
+
+
+class TestChunkingInvariants:
+    @settings(max_examples=50, deadline=None)
+    @given(st.binary(min_size=0, max_size=5000),
+           st.integers(1, 1024))
+    def test_chunk_roundtrip(self, data, chunk_size):
+        """Chunking is lossless and digests verify."""
+        meta, payloads = chunk_object("/x", data, chunk_size=chunk_size)
+        assert b"".join(p.data for p in payloads) == data
+        assert all(p.verify() for p in payloads)
+        assert meta.size == len(data)
+        assert len(payloads) == meta.num_chunks
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.binary(min_size=1, max_size=2000), st.integers(1, 256),
+           st.integers(0, 1999), st.integers(0, 2000))
+    def test_partial_range_covered(self, data, chunk_size, off, length):
+        """chunks_for_range always covers the requested byte range."""
+        meta, payloads = chunk_object("/x", data, chunk_size=chunk_size)
+        off = min(off, len(data) - 1)
+        length = min(length, len(data) - off)
+        refs = meta.chunks_for_range(off, length)
+        if length == 0:
+            return
+        got = b"".join(payloads[r.index].data for r in refs)
+        lo = off - refs[0].offset
+        assert got[lo:lo + length] == data[off:off + length]
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.binary(min_size=1, max_size=500))
+    def test_fnv_sensitivity(self, data):
+        flipped = bytes([data[0] ^ 1]) + data[1:]
+        assert fnv1a64(data) != fnv1a64(flipped)
+
+
+class TestNamespaceInvariants:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.from_regex(r"/[a-c]{1,3}(/[a-c]{1,3}){0,2}",
+                                  fullmatch=True),
+                    min_size=1, max_size=10, unique=True))
+    def test_longest_prefix_wins(self, prefixes):
+        ns = Namespace()
+        for i, p in enumerate(prefixes):
+            ns.register(p, f"o{i}")
+        for i, p in enumerate(prefixes):
+            owner = ns.resolve(p + "/leaf")
+            # the resolved owner's prefix must be ≥ as long as p
+            owned_by = prefixes[int(owner[1:])]
+            assert (p + "/leaf").startswith(owned_by)
+            assert len(owned_by) >= len(p) or not p.startswith(owned_by)
+
+
+class TestLoaderMapping:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 500), st.integers(1, 4))
+    def test_rank_slices_partition_the_step(self, step, log_world):
+        """Across ranks, slices are disjoint and cover the step exactly."""
+        from repro.core import build_fleet_federation
+        from repro.data import DatasetSpec, FederatedDataLoader
+        world = 2 ** log_world
+        spec = DatasetSpec("p", vocab_size=64, tokens_per_shard=1 << 10,
+                           num_shards=8)
+        total = []
+        for rank in range(world):
+            loader = FederatedDataLoader.__new__(FederatedDataLoader)
+            loader.spec = spec
+            loader.global_batch = 16
+            loader.seq_len = 8
+            loader.rank = rank
+            loader.world = world
+            for shard, off, count in loader.slices_for_step(step):
+                total.append((shard, off, count))
+        need = 16 * 9  # global_batch × (seq+1)
+        assert sum(c for _, _, c in total) == need
+        # disjointness within the step (mod wrap-around)
+        seen = set()
+        for shard, off, count in total:
+            for t in range(off, off + count):
+                key = (shard, t)
+                assert key not in seen
+                seen.add(key)

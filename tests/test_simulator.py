@@ -1,0 +1,165 @@
+"""Fluid-flow DES tests: fair sharing, contention, paper-scenario logic."""
+import pytest
+
+from repro.core import (
+    BandwidthProfile, Coord, DownloadResult, FluidFlowSim, Topology,
+    build_osg_federation, direct_download, proxy_download, stash_download,
+)
+
+
+def _topo_two_sites():
+    topo = Topology()
+    topo.add_site("a", BandwidthProfile(site_uplink=1e9))
+    topo.add_site("b", BandwidthProfile(site_uplink=1e9))
+    topo.add_node("a0", Coord("a", 0, 0), nic_bw=1e9)
+    topo.add_node("a1", Coord("a", 0, 1), nic_bw=1e9)
+    topo.add_node("b0", Coord("b", 0, 0), nic_bw=1e9)
+    topo.wan.bandwidth = 10e9
+    return topo
+
+
+class TestFluidFlow:
+    def test_single_flow_uses_bottleneck(self):
+        topo = _topo_two_sites()
+        sim = FluidFlowSim(topo)
+        done = {}
+
+        def proc():
+            f = yield sim.flow("a0", "b0", 1e9, streams=16)
+            done["t"] = sim.t
+
+        sim.spawn(proc())
+        sim.run()
+        # 1 GB over a 1 Gbps-bottleneck path ≈ 1s (plus negligible latency)
+        assert done["t"] == pytest.approx(1.0, rel=0.05)
+
+    def test_two_flows_share_bottleneck_fairly(self):
+        topo = _topo_two_sites()
+        sim = FluidFlowSim(topo)
+        finish = []
+
+        def proc(src):
+            yield sim.flow(src, "b0", 1e9, streams=16)
+            finish.append(sim.t)
+
+        sim.spawn(proc("a0"))
+        sim.spawn(proc("a1"))
+        sim.run()
+        # Both share b0's 1 Gbps NIC → each ~0.5 Gbps → ~2s.
+        assert finish[-1] == pytest.approx(2.0, rel=0.05)
+
+    def test_tcp_single_stream_cap_on_wan(self):
+        """Single-stream HTTP is window-limited on long-RTT paths; 8-stream
+        XRootD is not (paper §3.1's multi-stream rationale)."""
+        topo = _topo_two_sites()
+        topo.wan.latency = 0.050  # 100 ms RTT
+        sim = FluidFlowSim(topo)
+        t = {}
+
+        def proc(streams, key):
+            yield sim.flow("a0", "b0", 1e9, streams=streams)
+            t[key] = sim.t
+
+        sim.spawn(proc(1, "http"))
+        sim.run()
+        sim2 = FluidFlowSim(topo)
+
+        def proc2():
+            yield sim2.flow("a0", "b0", 1e9, streams=8)
+            t["xrootd"] = sim2.t
+
+        sim2.spawn(proc2())
+        sim2.run()
+        assert t["http"] > 2.0 * t["xrootd"]
+
+    def test_max_min_respects_flow_cap(self):
+        topo = _topo_two_sites()
+        topo.wan.latency = 0.050
+        sim = FluidFlowSim(topo)
+        fin = {}
+
+        def proc(name, streams):
+            yield sim.flow("a0", "b0", 5e8, streams=streams)
+            fin[name] = sim.t
+
+        sim.spawn(proc("capped", 1))    # TCP-capped well under fair share
+        sim.spawn(proc("greedy", 32))   # takes the leftover
+        sim.run()
+        assert fin["greedy"] < fin["capped"]
+
+    def test_run_until(self):
+        topo = _topo_two_sites()
+        sim = FluidFlowSim(topo)
+
+        def proc():
+            yield sim.flow("a0", "b0", 1e12)
+
+        sim.spawn(proc())
+        assert sim.run(until=0.5) == 0.5
+        assert sim.active  # still transferring
+
+
+class TestPaperScenarios:
+    def setup_method(self):
+        self.fed = build_osg_federation()
+        self.origin = self.fed.origins[0]
+        self.meta = self.origin.put_object("/testing/f", 2_335_000_000)
+
+    def _sim(self):
+        return FluidFlowSim(self.fed.topology, self.fed.net)
+
+    def test_stash_cold_vs_warm(self):
+        sim = self._sim()
+        cache = self.fed.caches["syracuse/cache"]
+        wnode = self.fed.client("syracuse", 0).node.name
+        cold, warm = DownloadResult("/testing/f", 1, "s"), \
+            DownloadResult("/testing/f", 1, "s")
+        sim.spawn(stash_download(sim, wnode, cache, self.origin.node.name,
+                                 "chicago/redirector1", self.meta, 0.2,
+                                 result=cold))
+        sim.run()
+        sim2 = self._sim()
+        sim2.spawn(stash_download(sim2, wnode, cache, self.origin.node.name,
+                                  "chicago/redirector1", self.meta, 0.2,
+                                  result=warm))
+        sim2.run()
+        assert not cold.cache_hit and warm.cache_hit
+        assert warm.seconds < cold.seconds  # Fig. 7: cached always better
+
+    def test_proxy_never_caches_big_file(self):
+        sim = self._sim()
+        proxy = self.fed.proxies["nebraska"]
+        wnode = self.fed.client("nebraska", 0).node.name
+        r1, r2 = DownloadResult("f", 1, "p"), DownloadResult("f", 1, "p")
+        sim.spawn(proxy_download(sim, wnode, proxy, self.origin.node.name,
+                                 self.meta, result=r1))
+        sim.run()
+        sim2 = self._sim()
+        sim2.spawn(proxy_download(sim2, wnode, proxy, self.origin.node.name,
+                                  self.meta, result=r2))
+        sim2.run()
+        assert not r1.cache_hit and not r2.cache_hit  # 2.3 GB > cacheable cap
+
+    def test_wan_contention_many_workers(self):
+        """N workers pulling directly from origin saturate the site uplink;
+        with a local cache, the WAN sees the file once (Fig. 5)."""
+        meta = self.origin.put_object("/testing/ws", 500_000_000)
+        # direct: 8 workers, no cache
+        sim = self._sim()
+        for w in range(8):
+            wnode = self.fed.client("syracuse", w).node.name
+            sim.spawn(direct_download(sim, wnode, self.origin.node.name,
+                                      meta, streams=8))
+        sim.run()
+        wan_direct = sim.link_bytes.get("wan", 0.0)
+        # cached: same 8 workers through the site cache
+        sim2 = self._sim()
+        cache = self.fed.caches["syracuse/cache"]
+        for w in range(8):
+            wnode = self.fed.client("syracuse", w).node.name
+            sim2.spawn(stash_download(sim2, wnode, cache,
+                                      self.origin.node.name,
+                                      "chicago/redirector1", meta, 0.2))
+        sim2.run()
+        wan_cached = sim2.link_bytes.get("wan", 0.0)
+        assert wan_direct >= 7.5 * wan_cached  # ≥8× WAN offload
