@@ -15,13 +15,17 @@ from .client import LocalCache, StashClient
 from .federation import (Federation, SiteSpec, build_fleet_federation,
                          build_osg_federation, OSG_SITE_PROFILES)
 from .indexer import Catalog, Indexer
-from .monitoring import (FileClose, FileOpen, MessageBus, MonitorCollector,
-                         TransferRecord, UsageAggregator, UserLogin,
-                         experiment_of)
+from .monitoring import (CacheUsagePacket, FileClose, FileOpen, MessageBus,
+                         MonitorCollector, TransferRecord, UsageAggregator,
+                         UserLogin, experiment_of)
 from .namespace import Namespace
 from .origin import ChunkStore, Origin
+from .policies import (AdmissionPolicy, EVICTION_POLICIES, EvictionPolicy,
+                       FIFOPolicy, LFUPolicy, LRUPolicy, SizeAwareAdmission,
+                       TTLPolicy, make_eviction_policy)
 from .proxy import HTTPProxy
-from .redirector import Redirector, RedirectorPair
+from .redirector import Redirector, RedirectorGroup, RedirectorPair
+from .ring import CacheGroup, GroupStats, HashRing
 from .simulator import (DownloadResult, FluidFlowSim, direct_download,
                         proxy_download, stash_download)
 from .topology import BandwidthProfile, Coord, GeoIPService, Link, Node, Topology

@@ -13,16 +13,24 @@ Design split:
   * the networked path (``get_chunk`` / ``fetch_object``) uses the
     uncontended :class:`~repro.core.transfer.NetworkModel` and emits
     monitoring packets, serving the functional data loader.
+
+Eviction and admission are pluggable (:mod:`repro.core.policies`): the
+seed's LRU remains the default, with LFU / TTL / FIFO variants and a
+size-aware admission filter selectable per cache (and per site, via
+:class:`~repro.core.federation.SiteSpec`).  Policy behaviour is surfaced
+through the monitoring pipeline as :class:`~repro.core.monitoring.
+CacheUsagePacket` gauges.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from collections import OrderedDict
-from typing import Dict, Optional, Set, Tuple
+from typing import Dict, Optional, Set, Tuple, Union
 
 from .chunk import ObjectMeta, Payload
-from .monitoring import FileClose, FileOpen, MonitorCollector, UserLogin
+from .monitoring import (CacheUsagePacket, FileClose, FileOpen,
+                         MonitorCollector, UserLogin)
+from .policies import (AdmissionPolicy, EvictionPolicy, make_eviction_policy)
 from .redirector import RedirectorPair
 from .topology import Node
 from .transfer import NetworkModel, TransferStats
@@ -36,6 +44,8 @@ class CacheStats:
     bytes_served: int = 0
     bytes_from_origin: int = 0
     bytes_evicted: int = 0
+    ttl_expired: int = 0
+    admission_rejects: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -44,7 +54,7 @@ class CacheStats:
 
 
 class CacheServer:
-    """An LRU, chunk-granular cache server."""
+    """A chunk-granular cache server with a pluggable eviction policy."""
 
     _ids = itertools.count(1)
 
@@ -53,7 +63,10 @@ class CacheServer:
                  net: Optional[NetworkModel] = None,
                  monitor: Optional[MonitorCollector] = None,
                  mem_object_max: float = 4e9,
-                 disk_bw: float = 0.0) -> None:
+                 disk_bw: float = 0.0,
+                 policy: Union[str, EvictionPolicy] = "lru",
+                 ttl_seconds: float = 3600.0,
+                 admission: Optional[AdmissionPolicy] = None) -> None:
         self.name = name
         self.node = node
         self.capacity_bytes = capacity_bytes
@@ -63,55 +76,95 @@ class CacheServer:
         self.net = net
         self.monitor = monitor
         self.available = True  # failure injection point
-        # (path, chunk_index) -> Payload, in LRU order (front = coldest).
-        self._lru: "OrderedDict[Tuple[str, int], Payload]" = OrderedDict()
+        self.policy = make_eviction_policy(policy, ttl_seconds)
+        self.admission = admission or AdmissionPolicy()
+        # (path, chunk_index) -> Payload.  Pure storage: victim ordering
+        # lives entirely in the policy object.  (Kept under the historic
+        # `_lru` name — external invariant checks sum over it.)
+        self._lru: Dict[Tuple[str, int], Payload] = {}
         self._pinned: Set[Tuple[str, int]] = set()
         self._metas: Dict[str, ObjectMeta] = {}
         self.usage_bytes = 0
         self.stats = CacheStats()
+        self.clock = 0.0  # advanced by callers (simulator / client `now`)
         self._file_ids = itertools.count(1)
         self._user_ids = itertools.count(1)
 
     # ------------------------------------------------------------------
     # Pure cache state machine (shared with the simulator)
     # ------------------------------------------------------------------
+    def tick(self, now: float) -> None:
+        """Advance the cache's notion of time (TTL policies use it)."""
+        if now > self.clock:
+            self.clock = now
+
     def lookup(self, path: str, index: int) -> Optional[Payload]:
         key = (path, index)
         payload = self._lru.get(key)
         if payload is None:
             self.stats.misses += 1
             return None
-        self._lru.move_to_end(key)
+        if self.policy.expired(key, self.clock):
+            self._remove(key)
+            self.stats.ttl_expired += 1
+            self.stats.misses += 1
+            return None
+        self.policy.on_access(key, self.clock)
         self.stats.hits += 1
         return payload
 
     def resident(self, path: str, index: int) -> bool:
-        """Peek without perturbing LRU order or counters."""
-        return (path, index) in self._lru
+        """Peek without perturbing victim order or counters."""
+        key = (path, index)
+        return key in self._lru and not self.policy.expired(key, self.clock)
 
     def object_resident(self, meta: ObjectMeta) -> bool:
         return all(self.resident(meta.path, i) for i in range(meta.num_chunks))
 
-    def admit(self, path: str, index: int, payload: Payload) -> None:
-        """Insert a chunk, evicting LRU chunks to make room.  In-flight
-        (pinned) chunks are never evicted."""
+    def admit(self, path: str, index: int, payload: Payload,
+              object_size: Optional[int] = None,
+              force: bool = False) -> bool:
+        """Insert a chunk, evicting cold chunks to make room.  In-flight
+        (pinned) chunks are never evicted.  Returns False when the
+        admission policy refuses the object (size-aware admission);
+        ``force`` bypasses admission (write-back dirty data must land)."""
         key = (path, index)
         if key in self._lru:
-            self._lru.move_to_end(key)
-            return
+            if self.policy.expired(key, self.clock):
+                self._remove(key)  # stale entry: fall through to re-admit
+                self.stats.ttl_expired += 1
+            else:
+                self.policy.on_access(key, self.clock)
+                return True
+        if object_size is None:
+            meta = self._metas.get(path)
+            object_size = meta.size if meta is not None else payload.size
+        if not force and not self.admission.admit(
+                key, object_size, payload.size,
+                self.capacity_bytes, self.usage_bytes):
+            self.stats.admission_rejects += 1
+            return False
         self.evict_until(payload.size)
         self._lru[key] = payload
+        self.policy.on_admit(key, payload.size, self.clock)
         self.usage_bytes += payload.size
+        return True
 
     def evict_until(self, incoming: int) -> None:
         while self.usage_bytes + incoming > self.capacity_bytes and self._lru:
-            victim = next((k for k in self._lru if k not in self._pinned), None)
+            victim = self.policy.victim(self._pinned)
             if victim is None:
                 break  # everything pinned; over-commit rather than deadlock
-            payload = self._lru.pop(victim)
-            self.usage_bytes -= payload.size
+            payload = self._remove(victim)
             self.stats.evictions += 1
             self.stats.bytes_evicted += payload.size
+
+    def _remove(self, key: Tuple[str, int]) -> Optional[Payload]:
+        payload = self._lru.pop(key, None)
+        if payload is not None:
+            self.usage_bytes -= payload.size
+            self.policy.on_remove(key)
+        return payload
 
     def serve_rate_cap(self, object_size: int) -> float:
         """xrootd disk caches stream large objects at disk speed."""
@@ -126,9 +179,7 @@ class CacheServer:
         self._pinned.discard((path, index))
 
     def drop(self, path: str, index: int) -> None:
-        payload = self._lru.pop((path, index), None)
-        if payload is not None:
-            self.usage_bytes -= payload.size
+        self._remove((path, index))
 
     def corrupt(self, path: str, index: int) -> None:
         """Bit-flip a resident chunk (integrity tests)."""
@@ -217,3 +268,24 @@ class CacheServer:
             self.monitor.file_close(
                 FileClose(self.name, file_id, bytes_read, bytes_written,
                           n_ops, now), cache_hit=cache_hit)
+
+    def report_usage(self, now: Optional[float] = None) -> CacheUsagePacket:
+        """Emit a policy/usage gauge to the monitoring collector.
+
+        This is the per-policy counter surface: hit/miss/eviction totals,
+        TTL expiries and admission rejects, keyed by policy name, so the
+        aggregators can build the policy-comparison tables the fleet
+        benches report.
+        """
+        pkt = CacheUsagePacket(
+            server=self.name, policy=self.policy.name,
+            usage_bytes=self.usage_bytes, capacity_bytes=self.capacity_bytes,
+            hits=self.stats.hits, misses=self.stats.misses,
+            evictions=self.stats.evictions,
+            bytes_evicted=self.stats.bytes_evicted,
+            ttl_expired=self.stats.ttl_expired,
+            admission_rejects=self.stats.admission_rejects,
+            time=self.clock if now is None else now)
+        if self.monitor:
+            self.monitor.cache_usage(pkt)
+        return pkt

@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .cache import CacheServer
 from .chunk import ObjectMeta, Payload
 from .indexer import Catalog
+from .ring import CacheGroup
 from .topology import GeoIPService, Node
 from .transfer import NetworkModel, TransferStats
 
@@ -84,9 +85,14 @@ class StashClient:
                  cvmfs_available: bool = True,
                  xrootd_available: bool = True,
                  local_cache_bytes: int = 1 * 2**30,
+                 groups: Optional[Sequence[CacheGroup]] = None,
                  now: float = 0.0) -> None:
         self.node = node
         self.caches = {c.name: c for c in caches}
+        self.groups = list(groups) if groups else []
+        for g in self.groups:
+            for c in g.members:
+                self.caches.setdefault(c.name, c)
         self.geoip = geoip
         self.net = net
         self.catalog = catalog
@@ -97,7 +103,38 @@ class StashClient:
         self.now = now
 
     # ------------------------------------------------------------------
-    def _ranked_caches(self, exclude: Sequence[str] = ()) -> List[CacheServer]:
+    def _ranked_caches(self, exclude: Sequence[str] = (),
+                       path: Optional[str] = None) -> List[CacheServer]:
+        """Cache servers in preference order for ``path``.
+
+        Without HA groups (the paper's deployment) this is pure GeoIP
+        distance.  With groups, the *groups* are ranked by distance and
+        each contributes its members in consistent-hash ring order for
+        the path — so a given object always lands on the same member of
+        the nearest group, and a dead member degrades to the next ring
+        member instead of straight to the origin.
+        """
+        if self.groups and path is not None:
+            locus = {g.name: g.locus().name for g in self.groups
+                     if g.locus() is not None}
+            order = self.geoip.nearest(self.node.name, list(locus.values()))
+            by_locus = {locus[g.name]: g for g in self.groups
+                        if g.name in locus}
+            ranked: List[CacheServer] = []
+            for locus_name in order:
+                # only the group that heads the ranking is actually being
+                # routed to; the rest are its fleet-wide failover tail.
+                members = by_locus[locus_name].route(
+                    path, exclude=exclude, count_stats=not ranked)
+                ranked.extend(members)
+            # stray caches not in any group still participate, geo-ranked.
+            grouped = {c.name for g in self.groups for c in g.members}
+            stray = [n for n in self.caches
+                     if n not in grouped and n not in exclude]
+            if stray:
+                for n in self.geoip.nearest(self.node.name, stray):
+                    ranked.append(self.caches[n])
+            return ranked
         order = self.geoip.nearest(self.node.name, list(self.caches),
                                    exclude=exclude)
         return [self.caches[n] for n in order]
@@ -108,7 +145,7 @@ class StashClient:
             return self.catalog.lookup(path)
         if cache is not None:
             return cache.locate_meta(path)
-        for c in self._ranked_caches():
+        for c in self._ranked_caches(path=path):
             m = c.locate_meta(path)
             if m is not None:
                 return m
@@ -120,11 +157,12 @@ class StashClient:
         """Fetch one chunk with nearest-cache + failover + checksum retry."""
         agg = TransferStats()
         tried: List[str] = []
-        for cache in self._ranked_caches():
+        for cache in self._ranked_caches(path=path):
             if not cache.available:
                 tried.append(cache.name)
                 self.stats.cache_failovers += 1
                 continue
+            cache.tick(self.now)  # TTL policies expire against client time
             try:
                 payload, st = cache.get_chunk(self.node.name, path, index,
                                               streams=streams)
@@ -173,7 +211,8 @@ class StashClient:
         stats = TransferStats(method="cvmfs")
         pieces: List[Optional[bytes]] = []
         n_ops = 0
-        cache_for_monitor = self._ranked_caches()[0] if self.caches else None
+        ranked = self._ranked_caches(path=path) if self.caches else []
+        cache_for_monitor = ranked[0] if ranked else None
         user_id = file_id = None
         if cache_for_monitor is not None:
             user_id = cache_for_monitor.open_session(
@@ -243,7 +282,8 @@ class StashClient:
         streams = 8 if method == "xrootd" else 1
         verify = method == "xrootd"
         stats = TransferStats(method=method)
-        monitor_cache = self._ranked_caches()[0] if self.caches else None
+        ranked = self._ranked_caches(path=path) if self.caches else []
+        monitor_cache = ranked[0] if ranked else None
         user_id = file_id = None
         if monitor_cache is not None:
             user_id = monitor_cache.open_session(

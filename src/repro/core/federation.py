@@ -21,8 +21,10 @@ from .client import StashClient
 from .indexer import Catalog, Indexer
 from .monitoring import MessageBus, MonitorCollector, UsageAggregator
 from .origin import Origin
+from .policies import SizeAwareAdmission
 from .proxy import HTTPProxy
-from .redirector import Redirector, RedirectorPair
+from .redirector import Redirector, RedirectorGroup, RedirectorPair
+from .ring import CacheGroup
 from .topology import BandwidthProfile, Coord, GeoIPService, Topology
 from .transfer import NetworkModel
 from .writeback import WritebackCache
@@ -33,7 +35,16 @@ TB = 1e12
 
 @dataclasses.dataclass
 class SiteSpec:
-    """One site (university / I2 PoP / pod)."""
+    """One site (university / I2 PoP / pod).
+
+    ``cache_replicas`` > 1 turns the site cache into an HA
+    :class:`~repro.core.ring.CacheGroup`: the replicas partition the
+    site's working set by consistent hashing and fail over to each other.
+    ``eviction_policy`` / ``ttl_seconds`` / ``admission_max_fraction``
+    select the per-cache policies (:mod:`repro.core.policies`);
+    ``admission_max_fraction`` < 1 refuses objects larger than that
+    fraction of cache capacity.
+    """
 
     name: str
     workers: int = 4
@@ -41,6 +52,10 @@ class SiteSpec:
     has_proxy: bool = True
     cache_capacity: float = 8 * TB   # "several TBs of caching storage" (§1)
     profile: Optional[BandwidthProfile] = None
+    cache_replicas: int = 1
+    eviction_policy: str = "lru"
+    ttl_seconds: float = 3600.0
+    admission_max_fraction: float = 1.0
 
 
 @dataclasses.dataclass
@@ -49,8 +64,9 @@ class Federation:
     net: NetworkModel
     geoip: GeoIPService
     origins: List[Origin]
-    redirectors: RedirectorPair
+    redirectors: RedirectorGroup
     caches: Dict[str, CacheServer]
+    groups: Dict[str, CacheGroup]
     proxies: Dict[str, HTTPProxy]
     monitor: MonitorCollector
     bus: MessageBus
@@ -69,7 +85,8 @@ class Federation:
         return StashClient(self.topology.nodes[name],
                            list(self.caches.values()), self.geoip, self.net,
                            catalog=catalog, cvmfs_available=cvmfs,
-                           xrootd_available=xrootd)
+                           xrootd_available=xrootd,
+                           groups=list(self.groups.values()))
 
     def indexer(self, origin: Optional[Origin] = None) -> Indexer:
         return Indexer(origin or self.origins[0])
@@ -119,17 +136,27 @@ def _build(sites: Sequence[SiteSpec], origin_site: str,
     redirectors.subscribe(origin)
 
     caches: Dict[str, CacheServer] = {}
+    groups: Dict[str, CacheGroup] = {}
     proxies: Dict[str, HTTPProxy] = {}
     for s in sites:
         prof = topo.profile(s.name)
         if s.has_cache:
-            node = topo.add_node(f"{s.name}/cache",
-                                 Coord(s.name, rack=253, host=0),
-                                 prof.cache_nic)
-            caches[node.name] = CacheServer(
-                node.name, node, int(s.cache_capacity), redirectors, net,
-                monitor, mem_object_max=prof.cache_mem_max,
-                disk_bw=prof.cache_disk_bw)
+            admission = (SizeAwareAdmission(s.admission_max_fraction)
+                         if s.admission_max_fraction < 1.0 else None)
+            members = []
+            for i in range(max(1, s.cache_replicas)):
+                suffix = "cache" if i == 0 else f"cache{i}"
+                node = topo.add_node(f"{s.name}/{suffix}",
+                                     Coord(s.name, rack=253, host=i),
+                                     prof.cache_nic)
+                cache = CacheServer(
+                    node.name, node, int(s.cache_capacity), redirectors, net,
+                    monitor, mem_object_max=prof.cache_mem_max,
+                    disk_bw=prof.cache_disk_bw, policy=s.eviction_policy,
+                    ttl_seconds=s.ttl_seconds, admission=admission)
+                caches[node.name] = cache
+                members.append(cache)
+            groups[s.name] = CacheGroup(s.name, members)
         if s.has_proxy:
             node = topo.add_node(f"{s.name}/proxy",
                                  Coord(s.name, rack=252, host=0),
@@ -140,7 +167,7 @@ def _build(sites: Sequence[SiteSpec], origin_site: str,
                 ttl_seconds=proxy_ttl, mem_object_max=prof.proxy_mem_max,
                 disk_bw=prof.proxy_disk_bw)
     return Federation(topo, net, geoip, [origin], redirectors, caches,
-                      proxies, monitor, bus, aggregator, list(sites))
+                      groups, proxies, monitor, bus, aggregator, list(sites))
 
 
 # Paper Fig. 2 deployment: the five test sites of §4.1 with bandwidth
@@ -172,8 +199,12 @@ OSG_SITE_PROFILES: Dict[str, BandwidthProfile] = {
 
 
 def build_osg_federation(workers_per_site: int = 4,
-                         monitor_drop_rate: float = 0.0) -> Federation:
-    sites = [SiteSpec(name=n, workers=workers_per_site, profile=p)
+                         monitor_drop_rate: float = 0.0,
+                         eviction_policy: str = "lru",
+                         cache_replicas: int = 1) -> Federation:
+    sites = [SiteSpec(name=n, workers=workers_per_site, profile=p,
+                      eviction_policy=eviction_policy,
+                      cache_replicas=cache_replicas)
              for n, p in OSG_SITE_PROFILES.items()]
     return _build(sites, origin_site="chicago",
                   monitor_drop_rate=monitor_drop_rate)
@@ -181,18 +212,28 @@ def build_osg_federation(workers_per_site: int = 4,
 
 def build_fleet_federation(num_pods: int = 2, hosts_per_pod: int = 64,
                            cache_capacity: float = 32 * TB,
-                           monitor_drop_rate: float = 0.0) -> Federation:
-    """TPU-fleet mapping: one cache per pod, origin = dataset store.
+                           monitor_drop_rate: float = 0.0,
+                           eviction_policy: str = "lru",
+                           cache_replicas: int = 1,
+                           ttl_seconds: float = 3600.0,
+                           admission_max_fraction: float = 1.0) -> Federation:
+    """TPU-fleet mapping: one cache group per pod, origin = dataset store.
 
     Intra-pod links are ICI-class, cross-pod is DCN-class, the origin sits
     behind a storage-fabric link.  GeoIP lookup latency is LAN-scale.
+    ``cache_replicas`` > 1 gives each pod an HA consistent-hash cache
+    group; ``eviction_policy`` selects the per-cache policy fleet-wide.
     """
     prof = BandwidthProfile(worker_nic=25e9, cache_nic=100e9,
                             proxy_nic=25e9, origin_nic=40e9,
                             site_uplink=50e9, wan_rtt=0.002,
                             lan_rtt=0.0002)
     sites = [SiteSpec(name=f"pod{p}", workers=hosts_per_pod,
-                      cache_capacity=cache_capacity, profile=prof)
+                      cache_capacity=cache_capacity, profile=prof,
+                      eviction_policy=eviction_policy,
+                      cache_replicas=cache_replicas,
+                      ttl_seconds=ttl_seconds,
+                      admission_max_fraction=admission_max_fraction)
              for p in range(num_pods)]
     sites.append(SiteSpec(name="storage", workers=0, has_cache=False,
                           has_proxy=False, profile=prof))

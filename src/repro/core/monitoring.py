@@ -48,6 +48,34 @@ class FileClose:
     time: float
 
 
+@dataclasses.dataclass(frozen=True)
+class CacheUsagePacket:
+    """Periodic per-cache gauge: occupancy + eviction-policy counters.
+
+    Emitted by :meth:`repro.core.cache.CacheServer.report_usage`; the
+    collector keeps the latest packet per server so aggregators can build
+    per-policy comparison tables (hit rate, evictions, TTL expiries,
+    admission rejects) next to the paper's per-experiment usage tables.
+    """
+
+    server: str
+    policy: str
+    usage_bytes: int
+    capacity_bytes: int
+    hits: int
+    misses: int
+    evictions: int
+    bytes_evicted: int
+    ttl_expired: int
+    admission_rejects: int
+    time: float
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
 @dataclasses.dataclass
 class TransferRecord:
     """The joined JSON message sent to the OSG message bus."""
@@ -102,6 +130,7 @@ class MonitorCollector:
         self._rng = random.Random(seed)
         self._logins: Dict[tuple, UserLogin] = {}
         self._opens: Dict[tuple, FileOpen] = {}
+        self.cache_gauges: Dict[str, CacheUsagePacket] = {}
         self.unjoined = 0
         self.packets = 0
 
@@ -117,6 +146,39 @@ class MonitorCollector:
     def file_open(self, ev: FileOpen) -> None:
         if self._delivered():
             self._opens[(ev.server, ev.file_id)] = ev
+
+    def cache_usage(self, pkt: CacheUsagePacket) -> None:
+        """Gauge sink: keep the newest usage/policy packet per server."""
+        if not self._delivered():
+            return
+        prev = self.cache_gauges.get(pkt.server)
+        if prev is None or pkt.time >= prev.time:
+            self.cache_gauges[pkt.server] = pkt
+
+    def policy_table(self) -> List[tuple]:
+        """Aggregate the latest gauges by eviction policy.
+
+        Rows: ``(policy, caches, hit_rate, evictions, ttl_expired,
+        admission_rejects, usage_bytes)`` sorted by policy name — the
+        monitoring-side view of how each eviction policy is performing
+        across the fleet.
+        """
+        agg: Dict[str, List[float]] = {}
+        for pkt in self.cache_gauges.values():
+            row = agg.setdefault(pkt.policy, [0, 0, 0, 0, 0, 0, 0])
+            row[0] += 1
+            row[1] += pkt.hits
+            row[2] += pkt.misses
+            row[3] += pkt.evictions
+            row[4] += pkt.ttl_expired
+            row[5] += pkt.admission_rejects
+            row[6] += pkt.usage_bytes
+        out = []
+        for policy in sorted(agg):
+            n, h, m, ev, ttl, rej, usage = agg[policy]
+            out.append((policy, int(n), h / (h + m) if h + m else 0.0,
+                        int(ev), int(ttl), int(rej), int(usage)))
+        return out
 
     def file_close(self, ev: FileClose, cache_hit: Optional[bool] = None) -> None:
         if not self._delivered():

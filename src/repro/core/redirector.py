@@ -67,11 +67,20 @@ class Redirector:
         return None
 
 
-class RedirectorPair:
-    """Two redirectors in round-robin, high-availability configuration."""
+class RedirectorGroup:
+    """N redirectors in round-robin, high-availability configuration.
 
-    def __init__(self, primary: Redirector, secondary: Redirector) -> None:
-        self.members = [primary, secondary]
+    The paper runs exactly two; fleet deployments want the same idiom at
+    arbitrary width (and the cache tier reuses the generalized failover
+    semantics via :mod:`repro.core.ring`): requests rotate across live
+    members, dead members are skipped transparently and counted as
+    failovers, and only when *every* member is down does the group raise.
+    """
+
+    def __init__(self, members: List[Redirector]) -> None:
+        if not members:
+            raise ValueError("a redirector group needs at least one member")
+        self.members = list(members)
         self._next = 0
         self.failovers = 0
 
@@ -97,3 +106,10 @@ class RedirectorPair:
             agg.origin_polls += r.stats.origin_polls
             agg.not_found += r.stats.not_found
         return agg
+
+
+class RedirectorPair(RedirectorGroup):
+    """The paper's two-member deployment (§3)."""
+
+    def __init__(self, primary: Redirector, secondary: Redirector) -> None:
+        super().__init__([primary, secondary])

@@ -13,6 +13,14 @@ Scenario logic is written as generator coroutines: ``yield sim.delay(s)``
 (RPCs, GeoIP lookups) and ``yield sim.flow(src, dst, nbytes, streams)``
 (bulk transfers).  Cache/proxy *state machines* are the very same objects
 used by the functional federation — only timing differs.
+
+The max-min allocation is re-solved on every flow arrival/completion.
+Two solvers are provided: the original ``scalar`` waterfilling loop, and
+a ``vector`` solver that batches the per-link waterfilling across all
+flows as JAX array ops (``repro.kernels.maxmin``).  ``auto`` (default)
+switches to the vector solver once enough flows are concurrently active
+for the batching to pay for its dispatch — which is what lets one
+``FluidFlowSim`` drive 1000+-site fleet scenarios.
 """
 from __future__ import annotations
 
@@ -81,14 +89,22 @@ class FluidFlowSim:
     """Event loop + max-min fair bandwidth allocation."""
 
     def __init__(self, topology: Topology,
-                 net: Optional[NetworkModel] = None) -> None:
+                 net: Optional[NetworkModel] = None,
+                 solver: str = "auto",
+                 vector_threshold: int = 256) -> None:
+        if solver not in ("auto", "scalar", "vector"):
+            raise ValueError(f"unknown solver {solver!r}")
         self.topology = topology
         self.net = net or NetworkModel(topology)
+        self.solver = solver
+        self.vector_threshold = vector_threshold
         self.t = 0.0
         self._eventq: List[Tuple[float, int, Callable]] = []
         self._eid = itertools.count()
         self.active: List[Flow] = []
         self.completed_flows = 0
+        self.reallocations = 0
+        self._flows_dirty = True  # active set changed since last solve
         self.link_bytes: Dict[str, float] = {}
 
     # -- coroutine API -------------------------------------------------------
@@ -130,6 +146,7 @@ class FluidFlowSim:
             waitable.waiter = proc
             waitable.started_at = self.t
             self.active.append(waitable)
+            self._flows_dirty = True
         elif isinstance(waitable, Event):
             if waitable.is_set:
                 self._schedule(self.t, lambda: self._step(proc, None))
@@ -140,6 +157,41 @@ class FluidFlowSim:
 
     # -- max-min fair allocation ----------------------------------------------
     def _reallocate(self) -> None:
+        self.reallocations += 1
+        if self.solver == "vector" or (
+                self.solver == "auto"
+                and len(self.active) >= self.vector_threshold):
+            self._reallocate_vector()
+        else:
+            self._reallocate_scalar()
+
+    def _reallocate_vector(self) -> None:
+        """Batched waterfilling over sparse flow→link rows, solved by
+        ``repro.kernels.maxmin`` as JAX array ops."""
+        from repro.kernels.maxmin import maxmin_rates_sparse
+
+        flows = self.active
+        if not flows:
+            return
+        link_index: Dict[int, int] = {}
+        link_caps: List[float] = []
+        flow_links: List[List[int]] = []
+        for f in flows:
+            row = []
+            for link in f.links:
+                lid = id(link)
+                idx = link_index.get(lid)
+                if idx is None:
+                    idx = link_index[lid] = len(link_caps)
+                    link_caps.append(link.bandwidth)
+                row.append(idx)
+            flow_links.append(row)
+        rates = maxmin_rates_sparse(link_caps, flow_links,
+                                    [f.cap for f in flows])
+        for f, r in zip(flows, rates):
+            f.rate = float(r)
+
+    def _reallocate_scalar(self) -> None:
         unfixed = set(range(len(self.active)))
         cap_left: Dict[int, float] = {}
         link_flows: Dict[int, List[int]] = {}
@@ -191,7 +243,12 @@ class FluidFlowSim:
     # -- event loop -------------------------------------------------------------
     def run(self, until: Optional[float] = None) -> float:
         while self._eventq or self.active:
-            self._reallocate()
+            # Rates only change when the active flow set does (links and
+            # per-flow caps are static): skip the solve on pure-delay
+            # events instead of re-waterfilling the whole fleet.
+            if self._flows_dirty:
+                self._reallocate()
+                self._flows_dirty = False
             t_finish, winner = float("inf"), None
             for f in self.active:
                 tf = self.t + (f.remaining / f.rate if f.rate > 0
@@ -213,6 +270,7 @@ class FluidFlowSim:
                 winner.finished_at = self.t
                 self.active.remove(winner)
                 self.completed_flows += 1
+                self._flows_dirty = True
                 if winner.waiter is not None:
                     self._step(winner.waiter, winner)
             else:
@@ -254,6 +312,7 @@ def stash_download(sim: FluidFlowSim, client_node: str, cache: CacheServer,
     cache→client multi-stream transfer."""
     t0 = sim.t
     yield sim.delay(geoip_latency)
+    cache.tick(sim.t)  # TTL policies expire against simulated time
     if not hasattr(cache, "_sim_inflight"):
         cache._sim_inflight = {}
     refs = meta.chunk_refs()
@@ -273,9 +332,11 @@ def stash_download(sim: FluidFlowSim, client_node: str, cache: CacheServer,
         miss_bytes = sum(r.length for r in missing)
         yield sim.flow(origin_node, cache.node.name, miss_bytes, streams=4)
         cache.stats.bytes_from_origin += miss_bytes
+        cache.tick(sim.t)
         for r in missing:
             cache.admit(meta.path, r.index,
-                        Payload.synthetic(r.length, meta.path, r.index))
+                        Payload.synthetic(r.length, meta.path, r.index),
+                        object_size=meta.size)
             ev = cache._sim_inflight.pop((meta.path, r.index), None)
             if ev is not None:
                 ev.set()

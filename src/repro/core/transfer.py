@@ -43,6 +43,8 @@ class TransferStats:
         self.chunks += other.chunks
         self.cache_hits += other.cache_hits
         self.cache_misses += other.cache_misses
+        if other.source:
+            self.source = other.source
         return self
 
     @property

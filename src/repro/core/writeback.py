@@ -60,7 +60,9 @@ class WritebackCache:
         stats = TransferStats(method="writeback")
         for i, p in enumerate(payloads):
             self.cache.pin(path, i)  # dirty chunks must not be evicted
-            self.cache.admit(path, i, p)
+            # force: dirty data must land regardless of admission policy —
+            # the write is acked against cache residency.
+            self.cache.admit(path, i, p, force=True)
             stats.bytes += p.size
             stats.chunks += 1
         stats.seconds += self.net.transfer_time(

@@ -1,0 +1,141 @@
+"""Vectorized max-min fair-share waterfilling (batched JAX array ops).
+
+The fluid-flow simulator re-solves the max-min bandwidth allocation on
+every flow arrival/completion.  The scalar solver walks python dicts of
+links and flows — O(rounds × links × flows) per reallocation — which caps
+:class:`~repro.core.simulator.FluidFlowSim` at a few hundred sites.  This
+module batches the whole waterfilling across flows as array ops.
+
+Topology paths are short (NIC → uplink → WAN → uplink → NIC, ≤ 5 links),
+so membership is kept *sparse*: each flow carries a fixed-width row of
+link indices, and every waterfilling round is a segment-sum (active flows
+per link), a gather (each flow's tightest link share) and a scatter-add
+(retiring capacity) under one ``lax.while_loop``:
+
+  share_l   = cap_left_l / active_flows_l          (segment-sum)
+  bottleneck = min_f min_{l ∈ links(f)} share_l    (gather + min)
+  → fix flows whose own TCP cap binds below the bottleneck, else
+  → fix every flow whose tightest share equals the bottleneck
+
+Each round retires at least one flow or saturates at least one link; with
+fleet-uniform link classes the shares are massively tied, so rounds stay
+near the number of *distinct* bottleneck levels, not the link count.
+Shapes are padded to power-of-two buckets so JIT recompiles O(log) times,
+not per event.  ``repro.kernels.ref.maxmin_ref`` is the scalar oracle;
+parity is enforced by ``tests/test_maxmin.py``.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def _solve(link_caps: jax.Array, link_ids: jax.Array,
+           flow_caps: jax.Array) -> jax.Array:
+    """link_caps: (L,) with a trailing dummy-inf slot; link_ids: (F, K)
+    int32 rows of link indices (padding points at the dummy slot);
+    flow_caps: (F,) → per-flow rates (F,)."""
+    num_flows, width = link_ids.shape
+    num_links = link_caps.shape[0]
+    inf = jnp.float32(jnp.inf)
+    flat_ids = link_ids.reshape(-1)
+
+    def seg_sum(per_flow: jax.Array) -> jax.Array:
+        """Scatter-add a per-flow value onto each of its links."""
+        vals = jnp.broadcast_to(per_flow[:, None],
+                                (num_flows, width)).reshape(-1)
+        return jnp.zeros(num_links, per_flow.dtype).at[flat_ids].add(vals)
+
+    def cond(state):
+        _, active, _, it = state
+        return jnp.logical_and(active.any(), it < num_flows + num_links + 2)
+
+    def body(state):
+        rates, active, cap_left, it = state
+        n = seg_sum(active.astype(jnp.float32))
+        share = jnp.where(n > 0, cap_left / jnp.maximum(n, 1.0), inf)
+        flow_share = share[link_ids].min(axis=1)        # tightest link
+        best = jnp.where(active, flow_share, inf).min()
+        capped = active & (flow_caps < best)
+
+        def fix(mask, rate):
+            new_rates = jnp.where(mask, rate, rates)
+            used = seg_sum(jnp.where(mask, rate, 0.0))
+            return new_rates, active & ~mask, jnp.maximum(cap_left - used,
+                                                          0.0)
+
+        def fix_capped(_):
+            return fix(capped, flow_caps)
+
+        def fix_bottleneck(_):
+            def no_links(_):
+                # remaining flows cross no capacity-bearing link: their
+                # own TCP cap is the only constraint (scalar fallback).
+                return (jnp.where(active, flow_caps, rates),
+                        jnp.zeros_like(active), cap_left)
+
+            def waterfill(_):
+                on_best = active & (flow_share <= best)
+                new_rates, new_active, new_cap = fix(on_best, best)
+                # float-safety: argmin links are saturated by construction
+                return new_rates, new_active, jnp.where(share <= best, 0.0,
+                                                        new_cap)
+
+            return jax.lax.cond(jnp.isinf(best), no_links, waterfill, None)
+
+        rates, active, cap_left = jax.lax.cond(
+            capped.any(), fix_capped, fix_bottleneck, None)
+        return rates, active, cap_left, it + 1
+
+    rates0 = jnp.zeros_like(flow_caps)
+    active0 = (link_ids < num_links - 1).any(axis=1)  # padded rows retired
+    state = (rates0, active0, link_caps, jnp.int32(0))
+    rates, _, _, _ = jax.lax.while_loop(cond, body, state)
+    return rates
+
+
+def _next_pow2(n: int, floor: int = 8) -> int:
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+def maxmin_rates_sparse(link_caps: Sequence[float],
+                        flow_links: Sequence[Sequence[int]],
+                        flow_caps: Sequence[float]) -> np.ndarray:
+    """Max-min fair rates with per-flow caps, batched across the fleet.
+
+    ``link_caps``: (L,) bytes/s; ``flow_links``: per-flow link-index
+    lists; ``flow_caps``: (F,) per-flow TCP ceiling.  Shapes are padded
+    to power-of-two buckets (padding points at a dummy infinite-capacity
+    link slot) so the JIT cache stays small.
+    """
+    F, L = len(flow_links), len(link_caps)
+    width = _next_pow2(max((len(ls) for ls in flow_links), default=1),
+                       floor=4)
+    Fp, Lp = _next_pow2(F), _next_pow2(L + 1)
+    dummy = Lp - 1
+    ids = np.full((Fp, width), dummy, np.int32)
+    for fi, ls in enumerate(flow_links):
+        ids[fi, :len(ls)] = ls
+    caps = np.full(Lp, np.inf, np.float32)
+    caps[:L] = link_caps
+    fcaps = np.zeros(Fp, np.float32)
+    fcaps[:F] = flow_caps
+    rates = _solve(jnp.asarray(caps), jnp.asarray(ids), jnp.asarray(fcaps))
+    return np.asarray(rates)[:F]
+
+
+def maxmin_rates(link_caps: np.ndarray, membership: np.ndarray,
+                 flow_caps: np.ndarray) -> np.ndarray:
+    """Dense-membership convenience wrapper: ``membership`` is (F, L) 0/1."""
+    membership = np.asarray(membership)
+    flow_links: List[List[int]] = [list(np.nonzero(row)[0])
+                                   for row in membership]
+    return maxmin_rates_sparse(np.asarray(link_caps, np.float32), flow_links,
+                               np.asarray(flow_caps, np.float32))

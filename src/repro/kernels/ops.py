@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from . import ref
 from .chunk_checksum import chunk_checksum as _checksum_pallas
 from .flash_attention import flash_attention as _flash_pallas
+from .maxmin import maxmin_rates as _maxmin_vector
 from .ssd_scan import ssd_intra as _ssd_pallas
 
 FORCE_INTERPRET = False
@@ -37,6 +38,15 @@ def chunk_checksum(data, block: int = 1024):
     if _on_tpu() or FORCE_INTERPRET:
         return _checksum_pallas(data, block, interpret=not _on_tpu())
     return ref.poly_digest_ref(data, block)[0]
+
+
+def maxmin_rates(link_caps, membership, flow_caps):
+    """Batched max-min fair-share waterfilling (fluid-flow simulator).
+
+    Always the vectorized jnp path — it is array ops, not a TPU kernel —
+    with ``ref.maxmin_ref`` as the scalar ground truth for tests.
+    """
+    return _maxmin_vector(link_caps, membership, flow_caps)
 
 
 def ssd_intra(x, dt, cum, b_in, c_in):

