@@ -13,6 +13,9 @@ Three experiments, all writing ``artifacts/fleet_scale.json``:
   members die one by one.  Consistent-hash routing remaps only the dead
   member's keyspace share; the modulo-hash baseline reshuffles nearly
   everything, which is the difference between a blip and an origin storm.
+  (This replay drives the cache state machines directly — the *contended*
+  ring-vs-modulo comparison, with routing through the real client chain
+  under max-min link sharing, lives in ``bench_outage_storm.py``.)
 * **policies** — the same production-shaped workload (Table 2 sizes,
   Zipf popularity) replayed through each eviction policy at equal
   capacity, reported via the monitoring pipeline's per-policy table.
@@ -97,6 +100,9 @@ def _solver_storm(pods: int = 1000, hosts: int = 2,
         "storm_sim_seconds": storm_seconds,
         "storm_wall_seconds": wall,
         "reallocations": sim.reallocations,
+        # per-arrival baseline vs the same-timestamp solve coalescing
+        "flow_events": sim.flow_events,
+        "coalescing_ratio": sim.flow_events / max(sim.reallocations, 1),
         "origin_egress_bytes": sum(c.stats.bytes_from_origin
                                    for c in fed.caches.values()),
     }

@@ -1,0 +1,176 @@
+"""Outage storms through simulator-native federation clients.
+
+Every download here routes through the *real* client chain —
+``StashClient._ranked_caches`` / ``CacheGroup.route`` ring ownership,
+dead-member failover, origin fallback — under max-min link contention
+(:mod:`repro.core.simclient`).  Three experiments, all writing
+``artifacts/outage_storm.json``:
+
+* **storm** — a fleet-wide restart storm (every worker pulls the same
+  checkpoint at t=0) with a cache outage wave mid-run: victims die while
+  pulls are in flight (mid-transfer failover) and a second request wave
+  arrives while they are still down (ring-chain failover at route time).
+  Also the event-loop scaling probe: ``flow_events`` is the number of
+  solves the per-arrival loop would have run; ``coalescing_ratio`` is
+  how many of them the same-timestamp batching actually avoided.
+* **churn** — ring vs modulo routing *with link contention*: a Zipf
+  trace against one HA cache group while two members cold-restart.
+  Consistent hashing remaps only the dead members' keyspace; the
+  modulo baseline reshuffles nearly every key twice (death + recovery),
+  which shows up as origin egress and lost hit rate.
+* **rolling** — a production-shaped multi-site trace replayed across a
+  rolling upgrade of every pod cache, with hedged fetches picking up
+  the stragglers.
+
+Artifact schema (see docs/BENCHMARKS.md): each experiment maps to a
+dict of scalar gauges — ``ScenarioReport.summary()`` keys plus the
+experiment's own parameters — so runs diff cleanly.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import (OutageSchedule, ScenarioEngine,
+                        build_fleet_federation, generate_workload,
+                        storm_workload)
+
+ARTIFACTS = Path(__file__).parent / "artifacts"
+GB = 1e9
+
+
+# ---------------------------------------------------------------------------
+# Restart storm: ≥500 pods, outage wave mid-run, two request waves
+# ---------------------------------------------------------------------------
+def _storm_scenario(pods: int = 1000, hosts: int = 2,
+                    ckpt_gb: float = 2.0, kills: int = 8) -> dict:
+    fed = build_fleet_federation(num_pods=pods, hosts_per_pod=hosts)
+    eng = ScenarioEngine(fed, solver="auto")
+    sites = [f"pod{p}" for p in range(pods)]
+    path = "/ckpt/run1/step_01000/params.npy"
+    # Wave 1 at t=0 (the storm proper); wave 2 arrives while the victims
+    # are still down, so CacheGroup.route sees dead primaries live.
+    reqs = storm_workload(sites, path=path, size=int(ckpt_gb * GB),
+                          at=0.0, workers_per_site=hosts)
+    reqs += storm_workload(sites[:max(kills * 4, 16)], path=path, at=8.0,
+                           size=int(ckpt_gb * GB), workers_per_site=hosts)
+    victims = [f"pod{p}/cache" for p in range(kills)]
+    sched = OutageSchedule.restart_storm(victims, at=1.0, downtime=30.0,
+                                         stagger=0.5, cold=True)
+    t0 = time.perf_counter()
+    rep = eng.replay(reqs, schedule=sched)
+    wall = time.perf_counter() - t0
+    out = rep.summary()
+    out.update({
+        "pods": pods, "hosts_per_pod": hosts, "kills": kills,
+        "ckpt_bytes": int(ckpt_gb * GB),
+        "wall_seconds": wall,
+        # per-arrival baseline: the old loop solved once per flow event
+        "baseline_reallocations": rep.flow_events,
+    })
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Contended churn: ring vs modulo while group members cold-restart
+# ---------------------------------------------------------------------------
+def _contended_churn(replicas: int = 6, hosts: int = 8,
+                     n_requests: int = 1200, working_set: int = 96) -> dict:
+    out: dict = {"replicas": replicas, "requests": n_requests,
+                 "working_set": working_set}
+    for router in ("ring", "modulo"):
+        fed = build_fleet_federation(num_pods=1, hosts_per_pod=hosts,
+                                     cache_replicas=replicas)
+        eng = ScenarioEngine(fed, router=router)
+        reqs = generate_workload(["pod0"], n_requests,
+                                 working_set=working_set, seed=7,
+                                 duration=600.0)
+        members = [c.name for c in fed.groups["pod0"].members]
+        sched = OutageSchedule.restart_storm(members[:2], at=200.0,
+                                             downtime=120.0, stagger=30.0,
+                                             cold=True)
+        rep = eng.replay(reqs, schedule=sched)
+        s = rep.summary()
+        out[router] = {k: s[k] for k in
+                       ("hit_rate", "origin_egress_bytes", "p95_seconds",
+                        "cache_failovers", "group_failovers",
+                        "origin_fallbacks")}
+    out["origin_offload_vs_modulo"] = (
+        out["modulo"]["origin_egress_bytes"]
+        / max(out["ring"]["origin_egress_bytes"], 1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rolling upgrade across a multi-site trace, hedged fetches on
+# ---------------------------------------------------------------------------
+def _rolling_upgrade(pods: int = 12, hosts: int = 4,
+                     n_requests: int = 1800) -> dict:
+    fed = build_fleet_federation(num_pods=pods, hosts_per_pod=hosts,
+                                 cache_replicas=2)
+    # hedge-at-p95: the trace's tail sits just above half a second, so
+    # only genuine stragglers (big files queued behind an origin pull
+    # during an upgrade window) trigger the backup race.
+    eng = ScenarioEngine(fed, hedge_after=0.5)
+    sites = [f"pod{p}" for p in range(pods)]
+    reqs = generate_workload(sites, n_requests, working_set=64, seed=13,
+                             duration=600.0)
+    primaries = [f"pod{p}/cache" for p in range(pods)]
+    sched = OutageSchedule.rolling_upgrade(primaries, start=60.0,
+                                           downtime=20.0, gap=10.0,
+                                           cold=True)
+    rep = eng.replay(reqs, schedule=sched)
+    out = rep.summary()
+    out.update({"pods": pods, "hosts_per_pod": hosts,
+                "upgraded": len(primaries)})
+    return out
+
+
+def run(pods: int = 1000, hosts: int = 2, kills: int = 8,
+        quick: bool = False, verbose: bool = False):
+    if quick:
+        storm = _storm_scenario(pods=min(pods, 60), hosts=1, kills=2)
+        churn = _contended_churn(replicas=4, hosts=4, n_requests=300,
+                                 working_set=32)
+        rolling = _rolling_upgrade(pods=4, hosts=2, n_requests=240)
+    else:
+        storm = _storm_scenario(pods=pods, hosts=hosts, kills=kills)
+        churn = _contended_churn()
+        rolling = _rolling_upgrade()
+    ARTIFACTS.mkdir(exist_ok=True, parents=True)
+    (ARTIFACTS / "outage_storm.json").write_text(json.dumps({
+        "storm": storm, "churn": churn, "rolling": rolling}, indent=1))
+    if verbose:
+        print(f"  storm: {storm['pods']} pods, {storm['requests']} reqs, "
+              f"sim {storm['sim_seconds']:.1f}s in "
+              f"{storm['wall_seconds']:.1f}s wall, "
+              f"coalesce {storm['coalescing_ratio']:.0f}x "
+              f"({storm['reallocations']} solves vs "
+              f"{storm['baseline_reallocations']} per-arrival), "
+              f"failovers {storm['cache_failovers']}+"
+              f"{storm['group_failovers']}")
+        print(f"  churn: ring hit {churn['ring']['hit_rate']:.3f} vs "
+              f"modulo {churn['modulo']['hit_rate']:.3f}, origin offload "
+              f"{churn['origin_offload_vs_modulo']:.2f}x")
+        print(f"  rolling: hit {rolling['hit_rate']:.3f}, hedged "
+              f"{rolling['hedged_fetches']}, p95 "
+              f"{rolling['p95_seconds']:.1f}s")
+    return [
+        ("outage_storm.storm", storm["wall_seconds"] * 1e6,
+         f"coalesce={storm['coalescing_ratio']:.0f}x@"
+         f"{storm['pods']}pods,failovers="
+         f"{storm['cache_failovers'] + storm['group_failovers']}"),
+        ("outage_storm.storm_solves", float(storm["reallocations"]),
+         f"baseline={storm['baseline_reallocations']}"),
+        ("outage_storm.churn", churn["ring"]["hit_rate"] * 1e6,
+         f"offload_vs_modulo={churn['origin_offload_vs_modulo']:.2f}x"),
+        ("outage_storm.rolling", rolling["p95_seconds"] * 1e6,
+         f"hedged={rolling['hedged_fetches']},"
+         f"hit={rolling['hit_rate']:.3f}"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(verbose=True):
+        print(f"{name},{us:.1f},{derived}")

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_utilization      paper Table 1 + Fig. 4 (monitoring pipeline)
   bench_restart_storm    fleet: checkpoint fan-in through pod caches
   bench_fleet_scale      fleet: 1000-site storm, churn, eviction policies
+  bench_outage_storm     fleet: simulator-native clients under outage storms
   bench_loader           fleet: federated training-data path
   bench_micro            federation hot-path micro-benchmarks
   bench_roofline         §Roofline terms from the dry-run artifacts
@@ -19,11 +20,12 @@ import traceback
 
 def main() -> int:
     from . import (bench_fleet_scale, bench_loader, bench_micro,
-                   bench_proxy_vs_stash, bench_restart_storm, bench_roofline,
-                   bench_utilization, bench_wan_offload)
+                   bench_outage_storm, bench_proxy_vs_stash,
+                   bench_restart_storm, bench_roofline, bench_utilization,
+                   bench_wan_offload)
     modules = [bench_proxy_vs_stash, bench_wan_offload, bench_utilization,
-               bench_restart_storm, bench_fleet_scale, bench_loader,
-               bench_micro, bench_roofline]
+               bench_restart_storm, bench_fleet_scale, bench_outage_storm,
+               bench_loader, bench_micro, bench_roofline]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:

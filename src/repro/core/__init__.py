@@ -26,13 +26,15 @@ from .policies import (AdmissionPolicy, EVICTION_POLICIES, EvictionPolicy,
 from .proxy import HTTPProxy
 from .redirector import Redirector, RedirectorGroup, RedirectorPair
 from .ring import CacheGroup, GroupStats, HashRing
+from .simclient import (OutageEvent, OutageSchedule, ScenarioEngine,
+                        ScenarioReport, SimStashClient, first_of)
 from .simulator import (DownloadResult, FluidFlowSim, direct_download,
-                        proxy_download, stash_download)
+                        fetch_chunks, proxy_download, stash_download)
 from .topology import BandwidthProfile, Coord, GeoIPService, Link, Node, Topology
 from .transfer import NetworkModel, TransferStats
 from .workload import (FILESIZE_PERCENTILES, PAPER_TABLE3, PROBE_10GB,
                        USAGE_BY_EXPERIMENT, AccessRequest, PercentileSampler,
-                       evaluation_fileset, generate_workload)
+                       evaluation_fileset, generate_workload, storm_workload)
 from .writeback import WritebackCache
 
 __all__ = [n for n in dir() if not n.startswith("_")]

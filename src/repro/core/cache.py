@@ -181,6 +181,15 @@ class CacheServer:
     def drop(self, path: str, index: int) -> None:
         self._remove((path, index))
 
+    def clear(self) -> None:
+        """Cold restart: lose every resident chunk (and pin) without
+        counting evictions — the disk came back empty, nothing was
+        *chosen* as a victim.  Hit/miss history and located metas keep
+        their values; only storage state resets."""
+        self._pinned.clear()
+        for key in list(self._lru):
+            self._remove(key)
+
     def corrupt(self, path: str, index: int) -> None:
         """Bit-flip a resident chunk (integrity tests)."""
         key = (path, index)

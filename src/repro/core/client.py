@@ -42,6 +42,7 @@ class ClientStats:
     checksum_failures: int = 0
     cache_failovers: int = 0
     hedged_fetches: int = 0
+    origin_fallbacks: int = 0  # every ranked cache dead → direct pull
 
 
 class LocalCache:
@@ -63,6 +64,11 @@ class LocalCache:
         key = (path, index)
         if key in self._lru:
             self._lru.move_to_end(key)
+            return
+        if payload.size > self.capacity_bytes:
+            # Refusing outright beats draining the whole cache and then
+            # overcommitting: the chunk can never fit, and inserting it
+            # anyway would leave usage_bytes > capacity_bytes forever.
             return
         while self.usage_bytes + payload.size > self.capacity_bytes and self._lru:
             _, victim = self._lru.popitem(last=False)
@@ -104,7 +110,8 @@ class StashClient:
 
     # ------------------------------------------------------------------
     def _ranked_caches(self, exclude: Sequence[str] = (),
-                       path: Optional[str] = None) -> List[CacheServer]:
+                       path: Optional[str] = None,
+                       limit: Optional[int] = None) -> List[CacheServer]:
         """Cache servers in preference order for ``path``.
 
         Without HA groups (the paper's deployment) this is pure GeoIP
@@ -113,6 +120,10 @@ class StashClient:
         the path — so a given object always lands on the same member of
         the nearest group, and a dead member degrades to the next ring
         member instead of straight to the origin.
+
+        ``limit`` truncates the failover tail: a fleet-scale ranking over
+        1000+ single-member groups otherwise walks every group's ring per
+        request even though only the first few entries are ever tried.
         """
         if self.groups and path is not None:
             locus = {g.name: g.locus().name for g in self.groups
@@ -122,6 +133,8 @@ class StashClient:
                         if g.name in locus}
             ranked: List[CacheServer] = []
             for locus_name in order:
+                if limit is not None and len(ranked) >= limit:
+                    return ranked[:limit]
                 # only the group that heads the ranking is actually being
                 # routed to; the rest are its fleet-wide failover tail.
                 members = by_locus[locus_name].route(
@@ -134,10 +147,11 @@ class StashClient:
             if stray:
                 for n in self.geoip.nearest(self.node.name, stray):
                     ranked.append(self.caches[n])
-            return ranked
+            return ranked[:limit] if limit is not None else ranked
         order = self.geoip.nearest(self.node.name, list(self.caches),
                                    exclude=exclude)
-        return [self.caches[n] for n in order]
+        ranked = [self.caches[n] for n in order]
+        return ranked[:limit] if limit is not None else ranked
 
     def _meta(self, path: str, cache: Optional[CacheServer] = None
               ) -> Optional[ObjectMeta]:

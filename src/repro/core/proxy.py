@@ -138,7 +138,11 @@ class HTTPProxy:
             stats.seconds += self.net.transfer_time(
                 self.origin.node.name, self.node.name, meta.size, streams=1)
             self.stats.bytes_from_origin += meta.size
-            self.origin.stats.egress_bytes += 0  # egress counted in read path
+            # Pull through the origin's real read path so its egress /
+            # request counters see the proxy arm's load — otherwise
+            # proxy-vs-stash comparisons under-report origin traffic.
+            for ref in meta.chunk_refs():
+                self.origin.read_chunk(meta.path, ref.index)
             self.admit(meta.path, meta.size, now)
             stats.cache_misses += 1
         else:

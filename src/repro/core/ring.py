@@ -114,7 +114,10 @@ class HashRing:
 class GroupStats:
     routes: int = 0
     failovers: int = 0    # primary dead → served by a ring successor
-    remapped_keys: int = 0
+    remapped_keys: int = 0  # dead members skipped along the chain
+    outages: int = 0      # members marked down (storm/blackout/upgrade)
+    recoveries: int = 0   # members marked back up
+    cold_restarts: int = 0  # recoveries that came back with empty storage
 
 
 class CacheGroup:
@@ -158,11 +161,40 @@ class CacheGroup:
         chain = [self.caches[n] for n in self.ring.successors(path)
                  if n not in exclude]
         if count_stats and chain and not chain[0].available:
+            # Failover depth: how many dead ring members the key skips
+            # before reaching a live one (an outage storm can knock out
+            # several consecutive successors at once).
+            dead = 0
+            for c in chain:
+                if c.available:
+                    break
+                dead += 1
             self.stats.failovers += 1
-            self.stats.remapped_keys += 1
+            self.stats.remapped_keys += dead
         if live_only:
             return [c for c in chain if c.available]
         return chain
+
+    def mark_down(self, name: str) -> None:
+        """Outage injection: the member stays on the ring (its keyspace
+        share fails over along the chain) but stops serving."""
+        cache = self.caches.get(name)
+        if cache is not None and cache.available:
+            cache.available = False
+            self.stats.outages += 1
+
+    def mark_up(self, name: str, cold: bool = False) -> None:
+        """Recovery; ``cold`` models a restart that lost its disk (the
+        member returns owning its old keyspace but holding nothing)."""
+        cache = self.caches.get(name)
+        if cache is None:
+            return
+        if not cache.available:
+            self.stats.recoveries += 1
+            if cold:
+                self.stats.cold_restarts += 1
+                cache.clear()
+            cache.available = True
 
     def locus(self) -> Optional["CacheServer"]:
         """A representative member, for distance ranking of the group."""

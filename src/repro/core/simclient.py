@@ -1,0 +1,491 @@
+"""Simulator-native federation clients + outage-storm scenario engine.
+
+The paper's headline numbers (Table 3, Figs 5–8) measure the *whole*
+client chain — GeoIP ranking, redirector lookup, failover — on a
+contended network.  ``stash_download`` (the PR-1 scenario coroutine)
+hard-wires one pre-chosen cache, so none of the routing machinery is
+ever exercised under contention.  This module closes that gap:
+
+* :class:`SimStashClient` — a coroutine ``stashcp`` whose cache choice
+  goes through the real :meth:`StashClient._ranked_caches` /
+  :meth:`CacheGroup.route` machinery (consistent-hash ring ownership,
+  dead-member failover chains, stray-cache geo tails) with per-cache
+  collapsed forwarding (:meth:`FluidFlowSim.inflight`) and optional
+  **hedged fetches**: if the chosen cache hasn't delivered within a
+  deadline, a backup fetch is raced against it via the next ranked
+  cache, first finisher wins (straggler mitigation for restart storms).
+* :class:`OutageSchedule` — mid-run cache failure/recovery timelines:
+  restart storms, regional blackouts, rolling upgrades (cold restarts
+  lose their disk; warm ones keep it).
+* :class:`ScenarioEngine` — replays :func:`~repro.core.workload.
+  generate_workload` / :func:`storm_workload` traces across a
+  multi-site federation under an outage schedule, one simulator-driven
+  client per (site, worker), and aggregates the result into a
+  :class:`ScenarioReport`.
+
+``router="modulo"`` swaps the consistent-hash routing for a
+hash-mod-alive-caches baseline, which is what lets the fleet benches
+compare ring vs modulo *with* link contention instead of the
+functional-path approximation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Dict, Generator, Iterable, List, Optional, Sequence,
+                    Tuple)
+
+from .cache import CacheServer
+from .chunk import ObjectMeta, fnv1a64
+from .client import StashClient
+from .federation import Federation
+from .origin import Origin
+from .simulator import DownloadResult, Event, FluidFlowSim, fetch_chunks
+from .workload import AccessRequest
+
+
+# ---------------------------------------------------------------------------
+# Coroutine combinators (timer races for hedged fetches)
+# ---------------------------------------------------------------------------
+def first_of(sim: FluidFlowSim, *events: Event) -> Event:
+    """An event that fires when any of ``events`` fires (or now, if one
+    already has).  Watchers are plain sim coroutines, so the combinator
+    composes with flows/delays without special-casing the event loop."""
+    trigger = sim.event()
+    if any(ev.is_set for ev in events):
+        trigger.set()
+        return trigger
+
+    def watch(ev: Event) -> Generator:
+        yield ev
+        trigger.set()  # idempotent: late watchers find no waiters
+
+    for ev in events:
+        sim.spawn(watch(ev))
+    return trigger
+
+
+# ---------------------------------------------------------------------------
+# The simulator-native stashcp
+# ---------------------------------------------------------------------------
+class SimStashClient:
+    """One worker's federation client, driven by the fluid-flow sim.
+
+    Wraps a functional :class:`StashClient` purely for its *routing*
+    brain (ring-aware `_ranked_caches`); all timing — GeoIP lookup,
+    redirector RPC, origin pull, cache→client serve — happens as
+    simulator delays and contended flows.
+    """
+
+    def __init__(self, sim: FluidFlowSim, client: StashClient,
+                 origin: Origin, redirector_node: str,
+                 streams: int = 8,
+                 hedge_after: Optional[float] = None,
+                 max_attempts: int = 4,
+                 rank_limit: Optional[int] = 8,
+                 router: str = "ring") -> None:
+        if router not in ("ring", "modulo"):
+            raise ValueError(f"unknown router {router!r}")
+        self.sim = sim
+        self.client = client
+        self.origin = origin
+        self.redirector_node = redirector_node
+        self.streams = streams
+        self.hedge_after = hedge_after
+        self.max_attempts = max_attempts
+        self.rank_limit = rank_limit
+        self.router = router
+
+    @property
+    def node_name(self) -> str:
+        return self.client.node.name
+
+    @property
+    def stats(self):
+        return self.client.stats
+
+    # -- routing ------------------------------------------------------------
+    def _route(self, path: str,
+               exclude: Sequence[str] = ()) -> List[CacheServer]:
+        if self.router == "modulo":
+            # Non-consistent baseline: hash mod the *alive* member count.
+            # Any membership change renumbers nearly every key — the
+            # origin-storm failure mode the ring exists to avoid.
+            alive = sorted(c.name for c in self.client.caches.values()
+                           if c.available and c.name not in exclude)
+            if not alive:
+                return []
+            start = fnv1a64(path.encode()) % len(alive)
+            return [self.client.caches[alive[(start + i) % len(alive)]]
+                    for i in range(len(alive))]
+        return self.client._ranked_caches(path=path, exclude=exclude,
+                                          limit=self.rank_limit)
+
+    def _meta(self, path: str) -> Optional[ObjectMeta]:
+        if path in self.origin.store:
+            return self.origin.meta(path)
+        return self.client._meta(path)
+
+    # -- the download coroutine ---------------------------------------------
+    def download(self, path: str, meta: Optional[ObjectMeta] = None,
+                 result: Optional[DownloadResult] = None) -> Generator:
+        """stashcp under contention: GeoIP → ranked caches → (failover as
+        needed) → collapsed-forwarding fetch → (hedged) multi-stream
+        serve.  Falls back to a direct origin pull only when every
+        ranked cache is down (regional blackout)."""
+        sim = self.sim
+        t0 = sim.t
+        self.stats.copies += 1
+        yield sim.delay(self.client.geoip.lookup_latency)
+        if meta is None:
+            meta = self._meta(path)
+        if meta is None:
+            raise FileNotFoundError(path)
+        failovers = 0
+        attempts = 0
+        for cache in self._route(path):
+            if attempts >= self.max_attempts:
+                break
+            if not cache.available:
+                failovers += 1
+                self.stats.cache_failovers += 1
+                continue
+            attempts += 1
+            if self.hedge_after is None:
+                status = yield from self._fetch_chunks(cache, meta)
+                if status is None or not cache.available:
+                    # died mid-pull: the key remaps down the ring chain
+                    failovers += 1
+                    self.stats.cache_failovers += 1
+                    continue
+                yield from self._serve_flow(cache, meta)
+                outcome = {"winner": cache.name, "status": status,
+                           "hedged": False}
+            else:
+                outcome = yield from self._hedged_attempt(cache, meta)
+                if outcome["winner"] is None:
+                    failovers += 1
+                    self.stats.cache_failovers += 1
+                    continue
+            if result is not None:
+                result.seconds = sim.t - t0
+                result.start = t0
+                result.cache_hit = outcome["status"] == "hit"
+                result.waited = outcome["status"] == "waited"
+                result.hedged = outcome["hedged"]
+                result.source = outcome["winner"]
+                result.failovers = failovers
+            return
+        # Every ranked cache is dead (or attempts exhausted): the
+        # federation degrades to the WAN-saturating direct pull.
+        self.stats.origin_fallbacks += 1
+        yield sim.flow(self.origin.node.name, self.node_name, meta.size,
+                       streams=self.streams)
+        self.origin.stats.egress_bytes += meta.size
+        if result is not None:
+            result.seconds = sim.t - t0
+            result.start = t0
+            result.cache_hit = False
+            result.source = self.origin.name
+            result.failovers = failovers
+            result.method = "origin-direct"
+
+    def _fetch_chunks(self, cache: CacheServer,
+                      meta: ObjectMeta) -> Generator:
+        """Shared collapsed-forwarding fetch (see
+        :func:`~repro.core.simulator.fetch_chunks`), with this client's
+        origin passed through so its egress counters see the pull."""
+        status = yield from fetch_chunks(
+            self.sim, cache, meta, self.origin.node.name,
+            self.redirector_node, origin=self.origin)
+        return status
+
+    def _serve_flow(self, cache: CacheServer, meta: ObjectMeta) -> Generator:
+        yield self.sim.flow(cache.node.name, self.node_name, meta.size,
+                            streams=self.streams,
+                            rate_cap=cache.serve_rate_cap(meta.size))
+        cache.stats.bytes_served += meta.size
+
+    def _attempt_arm(self, cache: CacheServer, meta: ObjectMeta,
+                     outcome: Dict, done: Event) -> Generator:
+        """One arm of a (possibly hedged) attempt: full fetch through
+        ``cache`` (origin pull included) then serve.  Signals ``done``
+        whether it won, lost, or failed; a losing arm's bytes still
+        move — hedging is modeled as load, not magic."""
+        status = yield from self._fetch_chunks(cache, meta)
+        if status is not None and cache.available:
+            yield from self._serve_flow(cache, meta)
+            if outcome["winner"] is None:
+                outcome["winner"] = cache.name
+                outcome["status"] = status
+        done.set()
+
+    def _hedged_attempt(self, cache: CacheServer,
+                        meta: ObjectMeta) -> Generator:
+        """Timer race over the whole per-cache attempt: if ``cache``
+        hasn't delivered within ``hedge_after`` seconds — origin pull
+        and serve included, that's where stragglers come from — a
+        backup attempt via the next ranked cache runs in parallel and
+        the first finisher wins."""
+        sim = self.sim
+        outcome: Dict = {"winner": None, "status": None, "hedged": False}
+        primary_done = sim.event()
+        sim.spawn(self._attempt_arm(cache, meta, outcome, primary_done))
+        timer = sim.event()
+
+        def alarm() -> Generator:
+            yield sim.delay(self.hedge_after)
+            timer.set()
+
+        sim.spawn(alarm())
+        yield first_of(sim, primary_done, timer)
+        pending = [primary_done]
+        if outcome["winner"] is None and not primary_done.is_set:
+            # deadline passed with the primary still in flight: hedge
+            backup = next(
+                (c for c in self._route(meta.path, exclude=(cache.name,))
+                 if c.available), None)
+            if backup is not None:
+                outcome["hedged"] = True
+                self.stats.hedged_fetches += 1
+                backup_done = sim.event()
+                sim.spawn(self._attempt_arm(backup, meta, outcome,
+                                            backup_done))
+                pending.append(backup_done)
+        pending = [ev for ev in pending if not ev.is_set]
+        while outcome["winner"] is None and pending:
+            yield first_of(sim, *pending)
+            pending = [ev for ev in pending if not ev.is_set]
+        return outcome
+
+
+# ---------------------------------------------------------------------------
+# Outage schedules: restart storms, blackouts, rolling upgrades
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class OutageEvent:
+    """One liveness transition: ``cache`` goes down or comes back up at
+    ``time``.  ``cold`` recoveries lose all resident data (the restart
+    wiped the disk); warm ones keep it (a network partition healing)."""
+
+    time: float
+    cache: str
+    action: str  # "down" | "up"
+    cold: bool = False
+
+    def __post_init__(self) -> None:
+        if self.action not in ("down", "up"):
+            raise ValueError(f"unknown outage action {self.action!r}")
+
+
+class OutageSchedule:
+    """A time-ordered list of :class:`OutageEvent`, with constructors
+    for the three storm shapes the ROADMAP's 1000+-site north star
+    cares about."""
+
+    def __init__(self, events: Iterable[OutageEvent] = ()) -> None:
+        self.events: List[OutageEvent] = sorted(
+            events, key=lambda e: (e.time, e.cache, e.action))
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def merge(self, other: "OutageSchedule") -> "OutageSchedule":
+        return OutageSchedule([*self.events, *other.events])
+
+    @staticmethod
+    def restart_storm(caches: Sequence[str], at: float,
+                      downtime: float = 30.0, stagger: float = 0.0,
+                      cold: bool = True) -> "OutageSchedule":
+        """Every listed cache restarts around ``at`` (``stagger`` spaces
+        the kills), coming back ``downtime`` later — cold by default."""
+        ev: List[OutageEvent] = []
+        for i, name in enumerate(caches):
+            t = at + i * stagger
+            ev.append(OutageEvent(t, name, "down"))
+            ev.append(OutageEvent(t + downtime, name, "up", cold=cold))
+        return OutageSchedule(ev)
+
+    @staticmethod
+    def regional_blackout(caches: Sequence[str], at: float,
+                          duration: float) -> "OutageSchedule":
+        """All listed caches vanish together (a region's uplink died)
+        and return together, warm — the data survived, the path didn't."""
+        ev = [OutageEvent(at, n, "down") for n in caches]
+        ev += [OutageEvent(at + duration, n, "up", cold=False)
+               for n in caches]
+        return OutageSchedule(ev)
+
+    @staticmethod
+    def rolling_upgrade(caches: Sequence[str], start: float,
+                        downtime: float = 30.0, gap: float = 10.0,
+                        cold: bool = True) -> "OutageSchedule":
+        """One cache at a time: down, upgrade, back (cold), ``gap``
+        seconds of full strength between members."""
+        ev: List[OutageEvent] = []
+        t = start
+        for name in caches:
+            ev.append(OutageEvent(t, name, "down"))
+            ev.append(OutageEvent(t + downtime, name, "up", cold=cold))
+            t += downtime + gap
+        return OutageSchedule(ev)
+
+
+# ---------------------------------------------------------------------------
+# Scenario engine: trace replay under contention + outages
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ScenarioReport:
+    """What one replay produced, for benches and tests."""
+
+    results: List[DownloadResult]
+    sim_seconds: float
+    reallocations: int
+    flow_events: int
+    completed_flows: int
+    cache_failovers: int
+    hedged_fetches: int
+    origin_fallbacks: int
+    group_failovers: int
+    outages: int
+    recoveries: int
+    origin_egress_bytes: int
+
+    @property
+    def hit_rate(self) -> float:
+        done = [r for r in self.results if r.seconds > 0]
+        return (sum(1 for r in done if r.cache_hit) / len(done)
+                if done else 0.0)
+
+    @property
+    def coalescing_ratio(self) -> float:
+        """Per-arrival solves the old loop would have run, over solves
+        actually run."""
+        return self.flow_events / max(self.reallocations, 1)
+
+    def seconds_percentile(self, pct: float) -> float:
+        done = sorted(r.seconds for r in self.results if r.seconds > 0)
+        if not done:
+            return 0.0
+        idx = min(len(done) - 1, int(pct / 100.0 * len(done)))
+        return done[idx]
+
+    def summary(self) -> Dict:
+        done = [r.seconds for r in self.results if r.seconds > 0]
+        return {
+            "requests": len(self.results),
+            "completed": len(done),
+            "sim_seconds": self.sim_seconds,
+            "hit_rate": self.hit_rate,
+            "mean_seconds": sum(done) / len(done) if done else 0.0,
+            "p50_seconds": self.seconds_percentile(50),
+            "p95_seconds": self.seconds_percentile(95),
+            "cache_failovers": self.cache_failovers,
+            "hedged_fetches": self.hedged_fetches,
+            "origin_fallbacks": self.origin_fallbacks,
+            "group_failovers": self.group_failovers,
+            "outages": self.outages,
+            "recoveries": self.recoveries,
+            "origin_egress_bytes": self.origin_egress_bytes,
+            "reallocations": self.reallocations,
+            "flow_events": self.flow_events,
+            "coalescing_ratio": self.coalescing_ratio,
+        }
+
+
+class ScenarioEngine:
+    """Replay an access trace through simulator-native clients, with an
+    optional outage schedule running concurrently."""
+
+    def __init__(self, fed: Federation, solver: str = "auto",
+                 streams: int = 8, hedge_after: Optional[float] = None,
+                 max_attempts: int = 4, rank_limit: Optional[int] = 8,
+                 router: str = "ring") -> None:
+        self.fed = fed
+        self.sim = FluidFlowSim(fed.topology, fed.net, solver=solver)
+        self.streams = streams
+        self.hedge_after = hedge_after
+        self.max_attempts = max_attempts
+        self.rank_limit = rank_limit
+        self.router = router
+        self.redirector_node = fed.redirectors.members[0].node.name
+        self._clients: Dict[Tuple[str, int], SimStashClient] = {}
+        self._hosts = {s.name: max(1, s.workers) for s in fed.sites}
+        self._group_of = {c.name: g for g in fed.groups.values()
+                          for c in g.members}
+
+    # -- clients ------------------------------------------------------------
+    def client(self, site: str, worker: int = 0) -> SimStashClient:
+        key = (site, worker)
+        sc = self._clients.get(key)
+        if sc is None:
+            sc = SimStashClient(
+                self.sim, self.fed.client(site, worker),
+                self.fed.origins[0], self.redirector_node,
+                streams=self.streams, hedge_after=self.hedge_after,
+                max_attempts=self.max_attempts, rank_limit=self.rank_limit,
+                router=self.router)
+            self._clients[key] = sc
+        return sc
+
+    # -- outages ------------------------------------------------------------
+    def apply_outage(self, ev: OutageEvent) -> None:
+        group = self._group_of.get(ev.cache)
+        if group is not None:
+            if ev.action == "down":
+                group.mark_down(ev.cache)
+            else:
+                group.mark_up(ev.cache, cold=ev.cold)
+            return
+        cache = self.fed.caches[ev.cache]
+        if ev.action == "down":
+            cache.available = False
+        else:
+            if ev.cold:
+                cache.clear()
+            cache.available = True
+
+    def _outage_controller(self, schedule: OutageSchedule) -> Generator:
+        for ev in schedule:
+            if ev.time > self.sim.t:
+                yield self.sim.delay(ev.time - self.sim.t)
+            self.apply_outage(ev)
+
+    # -- replay -------------------------------------------------------------
+    def replay(self, requests: Sequence[AccessRequest],
+               schedule: Optional[OutageSchedule] = None) -> ScenarioReport:
+        origin = self.fed.origins[0]
+        for r in requests:
+            if r.path not in origin.store:
+                origin.put_object(r.path, r.size)  # synthetic payloads
+        results: List[DownloadResult] = []
+        for r in requests:
+            sc = self.client(r.site, r.worker % self._hosts.get(r.site, 1))
+            res = DownloadResult(r.path, r.size, "simclient")
+            results.append(res)
+            self.sim.spawn(sc.download(r.path, result=res), at=r.time)
+        if schedule is not None and len(schedule):
+            self.sim.spawn(self._outage_controller(schedule))
+        self.sim.run()
+        return self.report(results)
+
+    def report(self, results: List[DownloadResult]) -> ScenarioReport:
+        cstats = [sc.stats for sc in self._clients.values()]
+        gstats = [g.stats for g in self.fed.groups.values()]
+        return ScenarioReport(
+            results=results,
+            sim_seconds=self.sim.t,
+            reallocations=self.sim.reallocations,
+            flow_events=self.sim.flow_events,
+            completed_flows=self.sim.completed_flows,
+            cache_failovers=sum(s.cache_failovers for s in cstats),
+            hedged_fetches=sum(s.hedged_fetches for s in cstats),
+            origin_fallbacks=sum(s.origin_fallbacks for s in cstats),
+            group_failovers=sum(s.failovers for s in gstats),
+            outages=sum(s.outages for s in gstats),
+            recoveries=sum(s.recoveries for s in gstats),
+            origin_egress_bytes=sum(o.stats.egress_bytes
+                                    for o in self.fed.origins),
+        )

@@ -14,7 +14,13 @@ Scenario logic is written as generator coroutines: ``yield sim.delay(s)``
 (bulk transfers).  Cache/proxy *state machines* are the very same objects
 used by the functional federation — only timing differs.
 
-The max-min allocation is re-solved on every flow arrival/completion.
+The max-min allocation is re-solved whenever the *active flow set*
+changes — but only once per distinct event time: all arrivals,
+completions and callbacks at one timestamp are drained first, then a
+single waterfilling pass covers the whole batch (a 1000-flow restart
+storm at t=0 is one solve, not ~1000).  Between solves the next flow
+completion comes from a finish-time heap rebuilt on each reallocation,
+so pure-delay events cost O(log n) instead of an O(active) winner scan.
 Two solvers are provided: the original ``scalar`` waterfilling loop, and
 a ``vector`` solver that batches the per-link waterfilling across all
 flows as JAX array ops (``repro.kernels.maxmin``).  ``auto`` (default)
@@ -104,8 +110,16 @@ class FluidFlowSim:
         self.active: List[Flow] = []
         self.completed_flows = 0
         self.reallocations = 0
+        # Arrivals + completions: what a per-arrival solver would have
+        # paid.  ``flow_events / reallocations`` is the coalescing win.
+        self.flow_events = 0
         self._flows_dirty = True  # active set changed since last solve
+        self._fin_heap: List[Tuple[float, int, Flow]] = []
         self.link_bytes: Dict[str, float] = {}
+        # (cache name) -> {(path, chunk) -> Event}: collapsed-forwarding
+        # registry, per cache server, owned by the sim so concurrent
+        # scenarios on shared cache objects never cross-talk.
+        self._inflight: Dict[str, Dict[Tuple[str, int], Event]] = {}
 
     # -- coroutine API -------------------------------------------------------
     def delay(self, seconds: float) -> _Delay:
@@ -113,6 +127,12 @@ class FluidFlowSim:
 
     def event(self) -> Event:
         return Event(self)
+
+    def inflight(self, server: str) -> Dict[Tuple[str, int], Event]:
+        """Per-cache collapsed-forwarding table: (path, chunk) -> Event
+        for pulls currently in flight at ``server``.  Shared by every
+        download coroutine in this sim, whichever client issued it."""
+        return self._inflight.setdefault(server, {})
 
     def flow(self, src: str, dst: str, nbytes: float,
              streams: int = 1, rate_cap: float = 0.0) -> Flow:
@@ -146,6 +166,7 @@ class FluidFlowSim:
             waitable.waiter = proc
             waitable.started_at = self.t
             self.active.append(waitable)
+            self.flow_events += 1
             self._flows_dirty = True
         elif isinstance(waitable, Event):
             if waitable.is_set:
@@ -157,6 +178,9 @@ class FluidFlowSim:
 
     # -- max-min fair allocation ----------------------------------------------
     def _reallocate(self) -> None:
+        """One waterfilling pass over the current active set.  Called once
+        per distinct event time at which the set changed, however many
+        arrivals/completions that time coalesced."""
         self.reallocations += 1
         if self.solver == "vector" or (
                 self.solver == "auto"
@@ -240,40 +264,60 @@ class FluidFlowSim:
                             0.0, cap_left[id(link)] - f.rate)
             cap_left[best_lid] = 0.0
 
+    def _rebuild_finish_heap(self) -> None:
+        """Absolute finish times for the current rates.  Valid until the
+        active set (and hence the allocation) next changes — rates are
+        static in between, so absolute times stay correct as t advances."""
+        heap = [(self.t + f.remaining / f.rate, f.id, f)
+                for f in self.active if f.rate > 0]
+        heapq.heapify(heap)
+        self._fin_heap = heap
+
     # -- event loop -------------------------------------------------------------
     def run(self, until: Optional[float] = None) -> float:
+        if until is not None and until < self.t:
+            return self.t  # guard: resuming must never move time backward
+        # Benchmarks poke the solvers directly between run() calls, which
+        # rewrites rates out-of-band: always re-derive finish times on entry.
+        self._rebuild_finish_heap()
         while self._eventq or self.active:
             # Rates only change when the active flow set does (links and
-            # per-flow caps are static): skip the solve on pure-delay
-            # events instead of re-waterfilling the whole fleet.
+            # per-flow caps are static): solve once per distinct event
+            # time, after *all* of that instant's arrivals/completions
+            # have been drained, instead of re-waterfilling the fleet
+            # between same-timestamp events.
             if self._flows_dirty:
-                self._reallocate()
+                if self.active:
+                    self._reallocate()
                 self._flows_dirty = False
-            t_finish, winner = float("inf"), None
-            for f in self.active:
-                tf = self.t + (f.remaining / f.rate if f.rate > 0
-                               else float("inf"))
-                if tf < t_finish:
-                    t_finish, winner = tf, f
+                self._rebuild_finish_heap()
+            t_finish = self._fin_heap[0][0] if self._fin_heap else float("inf")
             t_event = self._eventq[0][0] if self._eventq else float("inf")
             t_next = min(t_finish, t_event)
             if until is not None and t_next > until:
                 self._advance(until - self.t)
                 self.t = until
                 return self.t
-            if t_next is float("inf"):
+            if t_next == float("inf"):
                 break
             self._advance(t_next - self.t)
             self.t = t_next
-            if t_finish <= t_event and winner is not None:
-                winner.remaining = 0.0
-                winner.finished_at = self.t
-                self.active.remove(winner)
-                self.completed_flows += 1
-                self._flows_dirty = True
-                if winner.waiter is not None:
-                    self._step(winner.waiter, winner)
-            else:
+            if t_finish <= t_next:
+                # Drain every completion at this instant (ties are exact
+                # for symmetric flows: identical arithmetic → identical
+                # finish times), then compact the active list once.
+                while self._fin_heap and self._fin_heap[0][0] <= self.t:
+                    _, _, f = heapq.heappop(self._fin_heap)
+                    f.remaining = 0.0
+                    f.finished_at = self.t
+                    self.completed_flows += 1
+                    self.flow_events += 1
+                    self._flows_dirty = True
+                    if f.waiter is not None:
+                        self._step(f.waiter, f)
+                self.active = [f for f in self.active
+                               if f.finished_at is None]
+            while self._eventq and self._eventq[0][0] <= self.t:
                 _, _, fn = heapq.heappop(self._eventq)
                 fn()
         return self.t
@@ -300,55 +344,95 @@ class DownloadResult:
     seconds: float = 0.0
     cache_hit: bool = False
     start: float = 0.0
+    source: str = ""      # cache/proxy that served the final hop
+    failovers: int = 0    # dead caches skipped before one answered
+    hedged: bool = False  # a backup fetch was raced against the primary
+    waited: bool = False  # collapsed-forwarding wait (paid miss latency)
+
+
+def fetch_chunks(sim: FluidFlowSim, cache: CacheServer, meta: ObjectMeta,
+                 origin_node: str, redirector_node: str,
+                 origin=None, pull_streams: int = 4) -> Generator:
+    """Ensure ``meta``'s chunks are resident at ``cache``: redirector RPC
+    + origin→cache pull on miss, collapsed forwarding on in-flight
+    chunks (concurrent requests wait rather than re-pull).  Shared by
+    ``stash_download`` and the routed simclient downloads so the two
+    paths can never diverge on cache accounting.
+
+    Returns "hit" (fully resident), "miss" (pulled from origin),
+    "waited" (collapsed-forwarding wait: full miss latency, no duplicate
+    pull), or None when the cache died while we pulled/waited.  Passing
+    the :class:`~repro.core.origin.Origin` object counts its egress.
+    """
+    cache.tick(sim.t)  # TTL policies expire against simulated time
+    inflight = sim.inflight(cache.name)
+    missing, wait_for = [], []
+    for r in meta.chunk_refs():
+        key = (meta.path, r.index)
+        if cache.resident(meta.path, r.index):
+            cache.lookup(meta.path, r.index)          # counts the hit
+        elif key in inflight:
+            wait_for.append((r, inflight[key]))        # collapsed forwarding
+        else:
+            cache.stats.misses += 1
+            inflight[key] = sim.event()
+            missing.append(r)
+    if missing:
+        yield sim.delay(sim.net.rpc_time(cache.node.name, redirector_node))
+        miss_bytes = sum(r.length for r in missing)
+        yield sim.flow(origin_node, cache.node.name, miss_bytes,
+                       streams=pull_streams)
+        cache.stats.bytes_from_origin += miss_bytes
+        if origin is not None:
+            origin.stats.egress_bytes += miss_bytes
+            origin.stats.chunk_requests += len(missing)
+        cache.tick(sim.t)
+        for r in missing:
+            cache.admit(meta.path, r.index,
+                        Payload.synthetic(r.length, meta.path, r.index),
+                        object_size=meta.size)
+            ev = inflight.pop((meta.path, r.index), None)
+            if ev is not None:
+                ev.set()
+    for r, ev in wait_for:
+        if not ev.is_set:
+            yield ev
+        cache.tick(sim.t)
+        # A waiter is only a hit if the pull actually landed — admission
+        # may have rejected the chunk, in which case the cache never held
+        # it and the read is a miss for the hit/miss latency splits.
+        if cache.resident(meta.path, r.index):
+            cache.stats.hits += 1
+        else:
+            cache.stats.misses += 1
+    if not cache.available:
+        return None
+    if missing:
+        return "miss"
+    return "waited" if wait_for else "hit"
 
 
 def stash_download(sim: FluidFlowSim, client_node: str, cache: CacheServer,
                    origin_node: str, redirector_node: str, meta: ObjectMeta,
                    geoip_latency: float, streams: int = 8,
                    result: Optional[DownloadResult] = None) -> Generator:
-    """stashcp against the nearest cache: GeoIP lookup → (miss: redirector
-    RPC + origin→cache pull, with collapsed forwarding — concurrent
-    requests for an in-flight chunk wait rather than re-pull) →
-    cache→client multi-stream transfer."""
+    """stashcp against one pre-chosen cache: GeoIP lookup →
+    :func:`fetch_chunks` → cache→client multi-stream transfer.  (The
+    routed, failover-aware variant lives in ``repro.core.simclient``.)"""
     t0 = sim.t
     yield sim.delay(geoip_latency)
-    cache.tick(sim.t)  # TTL policies expire against simulated time
-    if not hasattr(cache, "_sim_inflight"):
-        cache._sim_inflight = {}
-    refs = meta.chunk_refs()
-    missing, wait_for = [], []
-    for r in refs:
-        key = (meta.path, r.index)
-        if cache.resident(meta.path, r.index):
-            cache.lookup(meta.path, r.index)          # counts the hit
-        elif key in cache._sim_inflight:
-            wait_for.append(cache._sim_inflight[key])  # collapsed forwarding
-        else:
-            cache.stats.misses += 1
-            cache._sim_inflight[key] = sim.event()
-            missing.append(r)
-    if missing:
-        yield sim.delay(sim.net.rpc_time(cache.node.name, redirector_node))
-        miss_bytes = sum(r.length for r in missing)
-        yield sim.flow(origin_node, cache.node.name, miss_bytes, streams=4)
-        cache.stats.bytes_from_origin += miss_bytes
-        cache.tick(sim.t)
-        for r in missing:
-            cache.admit(meta.path, r.index,
-                        Payload.synthetic(r.length, meta.path, r.index),
-                        object_size=meta.size)
-            ev = cache._sim_inflight.pop((meta.path, r.index), None)
-            if ev is not None:
-                ev.set()
-    for ev in wait_for:
-        yield ev
-        cache.stats.hits += 1  # served from cache once the pull lands
+    status = yield from fetch_chunks(sim, cache, meta, origin_node,
+                                     redirector_node)
     yield sim.flow(cache.node.name, client_node, meta.size, streams=streams,
                    rate_cap=cache.serve_rate_cap(meta.size))
     cache.stats.bytes_served += meta.size
     if result is not None:
         result.seconds = sim.t - t0
-        result.cache_hit = not missing
+        # Collapsed-forwarding waiters paid full miss latency: only an
+        # entirely-resident object counts as a cache hit.
+        result.cache_hit = status == "hit"
+        result.waited = status == "waited"
+        result.source = cache.name
         result.start = t0
 
 
@@ -362,6 +446,7 @@ def proxy_download(sim: FluidFlowSim, client_node: str, proxy: HTTPProxy,
     if entry is None:
         yield sim.flow(origin_node, proxy.node.name, meta.size, streams=1)
         proxy.stats.bytes_from_origin += meta.size
+        proxy.origin.stats.egress_bytes += meta.size
         proxy.admit(meta.path, meta.size, sim.t)
     yield sim.flow(proxy.node.name, client_node, meta.size, streams=1,
                    rate_cap=proxy.serve_rate_cap(meta.size))
@@ -369,6 +454,7 @@ def proxy_download(sim: FluidFlowSim, client_node: str, proxy: HTTPProxy,
     if result is not None:
         result.seconds = sim.t - t0
         result.cache_hit = entry is not None
+        result.source = proxy.name
         result.start = t0
 
 

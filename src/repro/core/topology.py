@@ -123,6 +123,8 @@ class Topology:
     # -- path & distance --------------------------------------------------
     def path(self, src: str, dst: str) -> List[Link]:
         a, b = self.nodes[src], self.nodes[dst]
+        if a is b:
+            return []  # loopback: crosses no shared network capacity
         links = [a.nic]
         if a.coord.site != b.coord.site:
             links += [self.site_uplinks[a.coord.site], self.wan,
@@ -134,7 +136,8 @@ class Topology:
         return 2.0 * sum(l.latency for l in self.path(src, dst))
 
     def bottleneck_bandwidth(self, src: str, dst: str) -> float:
-        return min(l.bandwidth for l in self.path(src, dst))
+        p = self.path(src, dst)
+        return min(l.bandwidth for l in p) if p else float("inf")
 
     def distance(self, src: str, dst: str) -> Tuple[int, float]:
         """(coordinate distance, rtt) — the GeoIP sort key."""

@@ -107,6 +107,24 @@ class AccessRequest:
     experiment: str
 
 
+def storm_workload(sites: Sequence[str], path: str = "/ckpt/step/params",
+                   size: int = 2 * GB, at: float = 0.0,
+                   workers_per_site: int = 1, jitter: float = 0.0,
+                   seed: int = 0) -> List[AccessRequest]:
+    """A restart storm: every worker on every site requests the *same*
+    object at (nearly) the same instant — the checkpoint fan-in that
+    follows a preemption or rolling restart.  ``jitter`` spreads the
+    arrivals uniformly over [at, at+jitter); zero keeps them exactly
+    simultaneous, the worst case for the bandwidth solver."""
+    rng = random.Random(seed)
+    out = [AccessRequest(
+        time=at + (rng.uniform(0.0, jitter) if jitter > 0 else 0.0),
+        site=s, worker=w, path=path, size=size, experiment="restart-storm")
+        for s in sites for w in range(workers_per_site)]
+    out.sort(key=lambda r: r.time)
+    return out
+
+
 def generate_workload(sites: Sequence[str], n_requests: int,
                       duration: float = 3600.0, seed: int = 0,
                       working_set: int = 64,

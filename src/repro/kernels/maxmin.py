@@ -128,7 +128,16 @@ def maxmin_rates_sparse(link_caps: Sequence[float],
     fcaps = np.zeros(Fp, np.float32)
     fcaps[:F] = flow_caps
     rates = _solve(jnp.asarray(caps), jnp.asarray(ids), jnp.asarray(fcaps))
-    return np.asarray(rates)[:F]
+    out = np.array(rates[:F])
+    # Flows crossing no capacity-bearing link (loopback transfers) look
+    # identical to padding inside ``_solve`` — all-dummy rows retired at
+    # rate 0 — but are real flows bound only by their own TCP cap, which
+    # is what the scalar solver assigns.  Restore parity here so
+    # same-node ``sim.flow(src, src, ...)`` completes under both solvers.
+    for fi, ls in enumerate(flow_links):
+        if not ls:
+            out[fi] = flow_caps[fi]
+    return out
 
 
 def maxmin_rates(link_caps: np.ndarray, membership: np.ndarray,

@@ -53,6 +53,26 @@ class TestSolverParity:
             caps, [list(np.nonzero(row)[0]) for row in mem], fcaps)
         np.testing.assert_allclose(sparse, dense, rtol=1e-5)
 
+    def test_zero_link_flows_get_their_cap(self):
+        """Flows crossing no capacity-bearing link (loopback transfers)
+        look like padding to the batched solver; they must still get
+        their TCP cap, as the scalar oracle assigns."""
+        rates = maxmin_rates_sparse([1e9], [[0], [], [0], []],
+                                    [1e12, 3e8, 1e12, 7e8])
+        assert rates[1] == pytest.approx(3e8, rel=1e-4)
+        assert rates[3] == pytest.approx(7e8, rel=1e-4)
+        # linked flows still split the shared link, unaffected
+        assert rates[0] == pytest.approx(5e8, rel=1e-3)
+        assert rates[2] == pytest.approx(5e8, rel=1e-3)
+
+    def test_zero_link_rows_match_scalar_oracle(self):
+        rng = np.random.default_rng(7)
+        mem, caps, fcaps = _random_instance(rng, 30, 10)
+        mem[::4] = False            # every 4th flow crosses no link
+        ref = maxmin_ref(caps, mem, fcaps)
+        vec = maxmin_rates(caps, mem, fcaps)
+        np.testing.assert_allclose(vec, ref, rtol=2e-3, atol=1e3)
+
     def test_conservation_no_link_oversubscribed(self):
         rng = np.random.default_rng(5)
         mem, caps, fcaps = _random_instance(rng, 80, 20)

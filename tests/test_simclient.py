@@ -1,0 +1,341 @@
+"""Simulator-native federation clients: ring routing under contention,
+outage storms, hedged fetches, and the sim-accounting regression fixes."""
+import pytest
+
+from repro.core import (
+    CacheServer, Coord, DownloadResult, FluidFlowSim, LocalCache, Origin,
+    OutageEvent, OutageSchedule, Payload, ScenarioEngine, SizeAwareAdmission,
+    Topology, build_fleet_federation, build_osg_federation, first_of,
+    generate_workload, stash_download, storm_workload,
+)
+
+
+def _mini_world(admission=None, capacity=int(1e12)):
+    """One site: cache + origin + redirector + two workers, one sim."""
+    topo = Topology()
+    topo.add_site("s")
+    cnode = topo.add_node("s/cache", Coord("s", 253, 0), 1e10)
+    onode = topo.add_node("s/origin", Coord("s", 255, 0), 1e10)
+    topo.add_node("s/rd", Coord("s", 254, 0), 1e10)
+    topo.add_node("s/w0", Coord("s", 0, 0), 1e10)
+    topo.add_node("s/w1", Coord("s", 0, 1), 1e10)
+    cache = CacheServer("s/cache", cnode, capacity, admission=admission)
+    origin = Origin("s/origin", onode)
+    sim = FluidFlowSim(topo)
+    return sim, cache, origin
+
+
+class TestSimClientRouting:
+    def test_object_lands_on_ring_owner_of_nearest_group(self):
+        fed = build_fleet_federation(num_pods=2, hosts_per_pod=2,
+                                     cache_replicas=3)
+        eng = ScenarioEngine(fed)
+        reqs = [r for r in generate_workload(["pod0"], 12, working_set=12,
+                                             seed=3)]
+        rep = eng.replay(reqs)
+        assert all(r.seconds > 0 for r in rep.results)
+        pod0 = {c.name for c in fed.groups["pod0"].members}
+        group = fed.groups["pod0"]
+        for r in rep.results:
+            assert r.source in pod0                      # nearest group
+            assert r.source == group.route(
+                r.path, count_stats=False)[0].name       # ...ring owner
+        assert group.stats.routes > 0
+
+    def test_outage_fails_over_to_ring_successor(self):
+        fed = build_fleet_federation(num_pods=1, hosts_per_pod=2,
+                                     cache_replicas=3)
+        group = fed.groups["pod0"]
+        eng = ScenarioEngine(fed)
+        path = "/exp/data/f0"
+        fed.origins[0].put_object(path, int(5e7))
+        chain = group.route(path, count_stats=False)
+        owner, successor = chain[0], chain[1]
+        owner.available = False
+        res = DownloadResult(path, int(5e7), "simclient")
+        eng.sim.spawn(eng.client("pod0", 0).download(path, result=res))
+        eng.sim.run()
+        assert res.seconds > 0
+        assert res.source == successor.name
+        assert res.failovers >= 1
+        assert group.stats.failovers >= 1
+
+    def test_blackout_falls_back_to_origin_direct(self):
+        fed = build_fleet_federation(num_pods=1, hosts_per_pod=1,
+                                     cache_replicas=2)
+        for c in fed.caches.values():
+            c.available = False
+        eng = ScenarioEngine(fed)
+        path = "/exp/data/dark"
+        fed.origins[0].put_object(path, int(5e7))
+        res = DownloadResult(path, int(5e7), "simclient")
+        eng.sim.spawn(eng.client("pod0", 0).download(path, result=res))
+        eng.sim.run()
+        assert res.seconds > 0 and not res.cache_hit
+        assert res.method == "origin-direct"
+        assert res.source == fed.origins[0].name
+        assert eng.client("pod0", 0).stats.origin_fallbacks == 1
+
+    def test_ranked_caches_limit_truncates_multi_member_groups(self):
+        """The failover tail stops at `limit` even when a group boundary
+        lands mid-budget (groups contribute whole ring chains)."""
+        fed = build_fleet_federation(num_pods=3, hosts_per_pod=1,
+                                     cache_replicas=6)
+        client = fed.client("pod0", 0)
+        ranked = client._ranked_caches(path="/some/object", limit=8)
+        assert len(ranked) == 8
+        assert len(client._ranked_caches(path="/some/object")) == 18
+
+    def test_modulo_router_reshuffles_more_than_ring_on_death(self):
+        """Ring vs modulo *under contention*: killing one of four
+        replicas mid-trace remaps ~1/4 of the keyspace for the ring but
+        reshuffles nearly everything for hash-mod-alive."""
+        origin_bytes = {}
+        for router in ("ring", "modulo"):
+            fed = build_fleet_federation(num_pods=1, hosts_per_pod=4,
+                                         cache_replicas=4)
+            eng = ScenarioEngine(fed, router=router)
+            reqs = generate_workload(["pod0"], 220, working_set=24, seed=5,
+                                     duration=600.0)
+            victim = fed.groups["pod0"].members[1].name
+            sched = OutageSchedule([OutageEvent(300.0, victim, "down")])
+            rep = eng.replay(reqs, schedule=sched)
+            assert all(r.seconds > 0 for r in rep.results)
+            origin_bytes[router] = rep.origin_egress_bytes
+        assert origin_bytes["ring"] <= origin_bytes["modulo"]
+
+
+class TestCollapsedForwarding:
+    def test_one_pull_many_waiters_single_origin_read(self):
+        fed = build_fleet_federation(num_pods=1, hosts_per_pod=4)
+        eng = ScenarioEngine(fed)
+        reqs = storm_workload(["pod0"], path="/ckpt/params", size=int(2e8),
+                              workers_per_site=4)
+        rep = eng.replay(reqs)
+        assert all(r.seconds > 0 for r in rep.results)
+        # one origin pull feeds all four workers
+        assert rep.origin_egress_bytes == int(2e8)
+        # the puller is a plain miss; waiters paid miss latency too and
+        # must not be recorded as cache hits
+        assert all(not r.cache_hit for r in rep.results)
+        assert sum(1 for r in rep.results if r.waited) == 3
+
+    def test_waiters_counted_misses_when_admission_rejects(self):
+        sim, cache, origin = _mini_world(
+            admission=SizeAwareAdmission(max_object_fraction=1e-6))
+        meta = origin.put_object("/d/big", int(6e7))
+        r1 = DownloadResult(meta.path, meta.size, "s")
+        r2 = DownloadResult(meta.path, meta.size, "s")
+        sim.spawn(stash_download(sim, "s/w0", cache, "s/origin", "s/rd",
+                                 meta, 0.01, result=r1))
+        sim.spawn(stash_download(sim, "s/w1", cache, "s/origin", "s/rd",
+                                 meta, 0.01, result=r2))
+        sim.run()
+        assert cache.stats.admission_rejects == meta.num_chunks
+        # nothing ever became resident: no hit may be recorded anywhere
+        assert cache.stats.hits == 0
+        assert not r1.cache_hit and not r2.cache_hit
+        assert r2.waited or r1.waited
+
+    def test_waiters_counted_hits_when_pull_lands(self):
+        sim, cache, origin = _mini_world()
+        meta = origin.put_object("/d/ok", int(6e7))
+        r1 = DownloadResult(meta.path, meta.size, "s")
+        r2 = DownloadResult(meta.path, meta.size, "s")
+        sim.spawn(stash_download(sim, "s/w0", cache, "s/origin", "s/rd",
+                                 meta, 0.01, result=r1))
+        sim.spawn(stash_download(sim, "s/w1", cache, "s/origin", "s/rd",
+                                 meta, 0.01, result=r2))
+        sim.run()
+        # the waiter's chunks were served from cache once the pull landed
+        assert cache.stats.hits == meta.num_chunks
+        assert cache.stats.misses == meta.num_chunks
+        # ...but the *request* still paid miss latency: not a cache hit
+        assert not r1.cache_hit and not r2.cache_hit
+        waited = r2 if r2.waited else r1
+        assert waited.waited and not waited.cache_hit
+
+
+class TestHedgedFetch:
+    def _slow_primary_fed(self):
+        fed = build_fleet_federation(num_pods=2, hosts_per_pod=1)
+        slow = fed.caches["pod0/cache"]
+        slow.mem_object_max = 1e6     # everything disk-bound...
+        slow.disk_bw = 1e7            # ...at 10 MB/s
+        return fed
+
+    def test_hedge_races_backup_and_wins(self):
+        fed = self._slow_primary_fed()
+        eng = ScenarioEngine(fed, hedge_after=1.0)
+        path = "/d/ckpt"
+        fed.origins[0].put_object(path, int(2e9))
+        res = DownloadResult(path, int(2e9), "simclient")
+        eng.sim.spawn(eng.client("pod0", 0).download(path, result=res))
+        eng.sim.run()
+        assert res.hedged
+        assert res.source == "pod1/cache"    # backup outran the primary
+        assert res.seconds < 50              # primary alone needs ~200 s
+        assert eng.client("pod0", 0).stats.hedged_fetches == 1
+
+    def test_no_hedge_when_primary_beats_deadline(self):
+        fed = build_fleet_federation(num_pods=2, hosts_per_pod=1)
+        eng = ScenarioEngine(fed, hedge_after=30.0)
+        path = "/d/small"
+        fed.origins[0].put_object(path, int(1e8))
+        res = DownloadResult(path, int(1e8), "simclient")
+        eng.sim.spawn(eng.client("pod0", 0).download(path, result=res))
+        eng.sim.run()
+        assert not res.hedged
+        assert res.source == "pod0/cache"
+        assert eng.client("pod0", 0).stats.hedged_fetches == 0
+
+    def test_first_of_already_set_event_fires_immediately(self):
+        topo = Topology()
+        topo.add_site("s")
+        sim = FluidFlowSim(topo)
+        ev = sim.event()
+        ev.set()
+        seen = []
+
+        def proc():
+            yield first_of(sim, ev, sim.event())
+            seen.append(sim.t)
+
+        sim.spawn(proc())
+        sim.run()
+        assert seen == [0.0]
+
+
+class TestOutageSchedules:
+    def test_constructors_are_time_ordered(self):
+        storm = OutageSchedule.restart_storm(["a", "b"], at=5.0,
+                                             downtime=2.0, stagger=1.0)
+        times = [e.time for e in storm]
+        assert times == sorted(times)
+        assert sum(1 for e in storm if e.action == "down") == 2
+        roll = OutageSchedule.rolling_upgrade(["a", "b"], start=0.0,
+                                              downtime=3.0, gap=1.0)
+        downs = [e.time for e in roll if e.action == "down"]
+        assert downs == [0.0, 4.0]
+        black = OutageSchedule.regional_blackout(["a", "b"], at=2.0,
+                                                 duration=8.0)
+        assert all(not e.cold for e in black)
+
+    def test_invalid_action_rejected(self):
+        with pytest.raises(ValueError):
+            OutageEvent(0.0, "c", "sideways")
+
+    def test_cold_restart_loses_disk_warm_keeps_it(self):
+        fed = build_fleet_federation(num_pods=1, hosts_per_pod=1,
+                                     cache_replicas=2)
+        eng = ScenarioEngine(fed)
+        group = fed.groups["pod0"]
+        path = "/d/f"
+        fed.origins[0].put_object(path, int(5e7))
+        owner = group.route(path, count_stats=False)[0]
+        res = DownloadResult(path, int(5e7), "simclient")
+        eng.sim.spawn(eng.client("pod0", 0).download(path, result=res))
+        eng.sim.run()
+        assert owner.usage_bytes > 0
+        eng.apply_outage(OutageEvent(0.0, owner.name, "down"))
+        eng.apply_outage(OutageEvent(0.0, owner.name, "up", cold=False))
+        assert owner.usage_bytes > 0           # warm recovery keeps data
+        eng.apply_outage(OutageEvent(0.0, owner.name, "down"))
+        eng.apply_outage(OutageEvent(0.0, owner.name, "up", cold=True))
+        assert owner.usage_bytes == 0          # cold restart lost it
+        assert group.stats.outages == 2
+        assert group.stats.recoveries == 2
+        assert group.stats.cold_restarts == 1
+        # duplicate "up" on an already-available member is a no-op: it
+        # must neither count a recovery nor wipe freshly admitted data
+        res2 = DownloadResult(path, int(5e7), "simclient")
+        eng.sim.spawn(eng.client("pod0", 1).download(path, result=res2))
+        eng.sim.run()
+        assert owner.usage_bytes > 0
+        eng.apply_outage(OutageEvent(0.0, owner.name, "up", cold=True))
+        assert owner.usage_bytes > 0
+        assert group.stats.recoveries == 2
+
+    def test_restart_storm_mid_run_completes_with_failovers(self):
+        fed = build_fleet_federation(num_pods=4, hosts_per_pod=2,
+                                     cache_replicas=2)
+        eng = ScenarioEngine(fed)
+        reqs = generate_workload([f"pod{p}" for p in range(4)], 120,
+                                 working_set=16, seed=11, duration=60.0)
+        victims = [c.name for c in fed.groups["pod1"].members]
+        sched = OutageSchedule.restart_storm(victims, at=20.0,
+                                             downtime=15.0, stagger=2.0)
+        rep = eng.replay(reqs, schedule=sched)
+        assert all(r.seconds > 0 for r in rep.results)
+        assert rep.outages == 2 and rep.recoveries == 2
+        # requests to pod1 during the window had to route around
+        assert rep.cache_failovers + rep.group_failovers + \
+            rep.origin_fallbacks > 0
+
+
+class TestScenarioCoalescing:
+    def test_storm_solves_coalesce_per_event_time(self):
+        fed = build_fleet_federation(num_pods=40, hosts_per_pod=1)
+        eng = ScenarioEngine(fed)
+        reqs = storm_workload([f"pod{p}" for p in range(40)],
+                              size=int(1e9), workers_per_site=1)
+        rep = eng.replay(reqs)
+        assert all(r.seconds > 0 for r in rep.results)
+        assert rep.coalescing_ratio >= 10.0
+
+
+class TestSimAccountingFixes:
+    def test_local_cache_refuses_oversize_payload(self):
+        lc = LocalCache(capacity_bytes=100)
+        lc.put("/a", 0, Payload.synthetic(60, "/a", 0))
+        assert lc.usage_bytes == 60
+        lc.put("/big", 0, Payload.synthetic(500, "/big", 0))
+        # oversize payload refused outright: nothing evicted, no overcommit
+        assert lc.get("/big", 0) is None
+        assert lc.get("/a", 0) is not None
+        assert lc.usage_bytes == 60
+        assert lc.usage_bytes <= lc.capacity_bytes
+
+    def test_proxy_miss_counts_origin_egress(self):
+        fed = build_osg_federation()
+        origin = fed.origins[0]
+        proxy = fed.proxies["nebraska"]
+        meta = origin.put_object("/t/small", int(4e7))
+        before = origin.stats.egress_bytes
+        proxy.get_object(fed.client("nebraska", 0).node.name, meta, now=0.0)
+        assert origin.stats.egress_bytes - before == meta.size
+        # a hit must not touch the origin again
+        mid = origin.stats.egress_bytes
+        proxy.get_object(fed.client("nebraska", 0).node.name, meta, now=1.0)
+        assert origin.stats.egress_bytes == mid
+
+    def test_sim_proxy_download_counts_origin_egress(self):
+        from repro.core import proxy_download
+        fed = build_osg_federation()
+        origin = fed.origins[0]
+        proxy = fed.proxies["nebraska"]
+        meta = origin.put_object("/t/sim_small", int(4e7))
+        sim = FluidFlowSim(fed.topology, fed.net)
+        before = origin.stats.egress_bytes
+        sim.spawn(proxy_download(sim, fed.client("nebraska", 0).node.name,
+                                 proxy, origin.node.name, meta))
+        sim.run()
+        assert origin.stats.egress_bytes - before == meta.size
+
+    @pytest.mark.parametrize("solver", ["scalar", "vector"])
+    def test_same_node_flow_completes_under_both_solvers(self, solver):
+        """Loopback flows cross no capacity link; the vector solver used
+        to retire their all-dummy rows at rate 0 and livelock run()."""
+        topo = Topology()
+        topo.add_site("s")
+        topo.add_node("s/n", Coord("s", 0, 0), 1e9)
+        sim = FluidFlowSim(topo, solver=solver)
+        done = []
+
+        def proc():
+            yield sim.flow("s/n", "s/n", 1e8, streams=4)
+            done.append(sim.t)
+
+        sim.spawn(proc())
+        sim.run()
+        assert done and done[0] < 1.0  # TCP-cap bound, near-instant

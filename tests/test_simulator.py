@@ -99,6 +99,104 @@ class TestFluidFlow:
         assert sim.active  # still transferring
 
 
+class TestEventLoopScaling:
+    def _many_site_topo(self, n):
+        topo = Topology()
+        topo.add_site("dst", BandwidthProfile(site_uplink=1e9))
+        topo.add_node("dst0", Coord("dst", 0, 0), nic_bw=1e9)
+        for i in range(n):
+            topo.add_site(f"s{i}", BandwidthProfile(site_uplink=1e9))
+            topo.add_node(f"w{i}", Coord(f"s{i}", 0, 0), nic_bw=1e9)
+        return topo
+
+    def test_reallocations_count_distinct_event_times_not_arrivals(self):
+        """A storm of same-timestamp arrivals is ONE solve; symmetric
+        flows complete together, so each completion batch is one more."""
+        n = 30
+        topo = self._many_site_topo(n)
+        sim = FluidFlowSim(topo, solver="scalar")
+
+        def proc(i, at):
+            yield sim.delay(at)
+            yield sim.flow(f"w{i}", "dst0", 1e9, streams=16)
+
+        for i in range(n):
+            sim.spawn(proc(i, 0.0))       # batch 1: all arrive at t=0
+        for i in range(n):
+            sim.spawn(proc(i, 1.0))       # batch 2: all arrive at t=1
+        sim.run()
+        assert sim.completed_flows == 2 * n
+        assert sim.flow_events == 4 * n   # arrivals + completions
+        # One solve per distinct event time with work remaining: the two
+        # arrival batches and the first completion batch.  The final
+        # completion batch empties the active set — nothing to solve.
+        assert sim.reallocations == 3
+
+    def test_run_until_resume_matches_uninterrupted(self):
+        """Chunked run(until=...) must complete the same flows at the
+        same times as one uninterrupted run()."""
+        def build():
+            topo = self._many_site_topo(8)
+            sim = FluidFlowSim(topo, solver="scalar")
+            done = []
+
+            def proc(i, at, nbytes, streams):
+                yield sim.delay(at)
+                yield sim.flow(f"w{i}", "dst0", nbytes, streams=streams)
+                done.append((i, sim.t))
+
+            for i in range(8):
+                sim.spawn(proc(i, 0.13 * i, 5e8 + 1e8 * i, 4 + i))
+            return sim, done
+
+        sim1, done1 = build()
+        sim1.run()
+        sim2, done2 = build()
+        t = 0.25
+        while sim2._eventq or sim2.active:
+            sim2.run(until=t)
+            t += 0.25
+        assert len(done2) == len(done1) == 8
+        for (i1, t1), (i2, t2) in zip(done1, done2):
+            assert i1 == i2
+            assert t2 == pytest.approx(t1, rel=1e-9)
+        assert sim2.link_bytes["dst0/nic"] == pytest.approx(
+            sim1.link_bytes["dst0/nic"], rel=1e-6)
+
+    def test_run_until_never_moves_time_backward(self):
+        topo = self._many_site_topo(1)
+        sim = FluidFlowSim(topo)
+
+        def proc():
+            yield sim.flow("w0", "dst0", 1e12)
+
+        sim.spawn(proc())
+        assert sim.run(until=0.5) == 0.5
+        assert sim.run(until=0.25) == 0.5  # stale deadline: no-op
+        assert sim.t == 0.5
+
+    def test_resume_after_idle_until_processes_later_events(self):
+        """Events scheduled beyond the first `until` horizon still fire
+        when the sim is resumed (finish-heap state survives the pause)."""
+        topo = self._many_site_topo(2)
+        sim = FluidFlowSim(topo)
+        done = []
+
+        def proc(i, at):
+            yield sim.delay(at)
+            yield sim.flow(f"w{i}", "dst0", 1e9, streams=16)
+            done.append(sim.t)
+
+        sim.spawn(proc(0, 0.0))
+        sim.spawn(proc(1, 5.0))    # arrives long after the pause point
+        sim.run(until=0.5)
+        assert not done
+        sim.run()
+        assert len(done) == 2
+        assert done[0] == pytest.approx(1.0, rel=0.05)
+        assert done[1] == pytest.approx(6.0, rel=0.05)
+
+
 class TestPaperScenarios:
     def setup_method(self):
         self.fed = build_osg_federation()
