@@ -24,7 +24,9 @@ dead-member failover, origin fallback — under max-min link contention
 
 Artifact schema (see docs/BENCHMARKS.md): each experiment maps to a
 dict of scalar gauges — ``ScenarioReport.summary()`` keys plus the
-experiment's own parameters — so runs diff cleanly.
+experiment's own parameters — so runs diff cleanly.  Every experiment
+is a declarative :class:`ScenarioSpec` executed by
+:func:`~repro.core.api.run_scenario` on the simulated engine.
 """
 from __future__ import annotations
 
@@ -32,9 +34,8 @@ import json
 import time
 from pathlib import Path
 
-from repro.core import (OutageSchedule, ScenarioEngine,
-                        build_fleet_federation, generate_workload,
-                        storm_workload)
+from repro.core import (FederationSpec, OutageSchedule, ScenarioSpec,
+                        WorkloadSpec, run_scenario, storm_workload)
 
 ARTIFACTS = Path(__file__).parent / "artifacts"
 GB = 1e9
@@ -45,8 +46,6 @@ GB = 1e9
 # ---------------------------------------------------------------------------
 def _storm_scenario(pods: int = 1000, hosts: int = 2,
                     ckpt_gb: float = 2.0, kills: int = 8) -> dict:
-    fed = build_fleet_federation(num_pods=pods, hosts_per_pod=hosts)
-    eng = ScenarioEngine(fed, solver="auto")
     sites = [f"pod{p}" for p in range(pods)]
     path = "/ckpt/run1/step_01000/params.npy"
     # Wave 1 at t=0 (the storm proper); wave 2 arrives while the victims
@@ -56,10 +55,15 @@ def _storm_scenario(pods: int = 1000, hosts: int = 2,
     reqs += storm_workload(sites[:max(kills * 4, 16)], path=path, at=8.0,
                            size=int(ckpt_gb * GB), workers_per_site=hosts)
     victims = [f"pod{p}/cache" for p in range(kills)]
-    sched = OutageSchedule.restart_storm(victims, at=1.0, downtime=30.0,
-                                         stagger=0.5, cold=True)
+    spec = ScenarioSpec(
+        name="outage_storm/storm",
+        federation=FederationSpec.fleet(num_pods=pods, hosts_per_pod=hosts),
+        workload=reqs,
+        outages=OutageSchedule.restart_storm(victims, at=1.0, downtime=30.0,
+                                             stagger=0.5, cold=True),
+        solver="auto")
     t0 = time.perf_counter()
-    rep = eng.replay(reqs, schedule=sched)
+    rep = run_scenario(spec)
     wall = time.perf_counter() - t0
     out = rep.summary()
     out.update({
@@ -80,17 +84,22 @@ def _contended_churn(replicas: int = 6, hosts: int = 8,
     out: dict = {"replicas": replicas, "requests": n_requests,
                  "working_set": working_set}
     for router in ("ring", "modulo"):
-        fed = build_fleet_federation(num_pods=1, hosts_per_pod=hosts,
-                                     cache_replicas=replicas)
-        eng = ScenarioEngine(fed, router=router)
-        reqs = generate_workload(["pod0"], n_requests,
-                                 working_set=working_set, seed=7,
-                                 duration=600.0)
+        fed_spec = FederationSpec.fleet(num_pods=1, hosts_per_pod=hosts,
+                                        cache_replicas=replicas)
+        fed = fed_spec.build()
         members = [c.name for c in fed.groups["pod0"].members]
-        sched = OutageSchedule.restart_storm(members[:2], at=200.0,
-                                             downtime=120.0, stagger=30.0,
-                                             cold=True)
-        rep = eng.replay(reqs, schedule=sched)
+        spec = ScenarioSpec(
+            name=f"outage_storm/churn/{router}",
+            federation=fed_spec,
+            workload=WorkloadSpec(kind="zipf", sites=["pod0"],
+                                  n_requests=n_requests,
+                                  working_set=working_set, seed=7,
+                                  duration=600.0),
+            outages=OutageSchedule.restart_storm(members[:2], at=200.0,
+                                                 downtime=120.0,
+                                                 stagger=30.0, cold=True),
+            router=router)
+        rep = run_scenario(spec, federation=fed)
         s = rep.summary()
         out[router] = {k: s[k] for k in
                        ("hit_rate", "origin_egress_bytes", "p95_seconds",
@@ -107,20 +116,21 @@ def _contended_churn(replicas: int = 6, hosts: int = 8,
 # ---------------------------------------------------------------------------
 def _rolling_upgrade(pods: int = 12, hosts: int = 4,
                      n_requests: int = 1800) -> dict:
-    fed = build_fleet_federation(num_pods=pods, hosts_per_pod=hosts,
-                                 cache_replicas=2)
+    primaries = [f"pod{p}/cache" for p in range(pods)]
     # hedge-at-p95: the trace's tail sits just above half a second, so
     # only genuine stragglers (big files queued behind an origin pull
     # during an upgrade window) trigger the backup race.
-    eng = ScenarioEngine(fed, hedge_after=0.5)
-    sites = [f"pod{p}" for p in range(pods)]
-    reqs = generate_workload(sites, n_requests, working_set=64, seed=13,
-                             duration=600.0)
-    primaries = [f"pod{p}/cache" for p in range(pods)]
-    sched = OutageSchedule.rolling_upgrade(primaries, start=60.0,
-                                           downtime=20.0, gap=10.0,
-                                           cold=True)
-    rep = eng.replay(reqs, schedule=sched)
+    spec = ScenarioSpec(
+        name="outage_storm/rolling",
+        federation=FederationSpec.fleet(num_pods=pods, hosts_per_pod=hosts,
+                                        cache_replicas=2),
+        workload=WorkloadSpec(kind="zipf", n_requests=n_requests,
+                              working_set=64, seed=13, duration=600.0),
+        outages=OutageSchedule.rolling_upgrade(primaries, start=60.0,
+                                               downtime=20.0, gap=10.0,
+                                               cold=True),
+        hedge_after=0.5)
+    rep = run_scenario(spec)
     out = rep.summary()
     out.update({"pods": pods, "hosts_per_pod": hosts,
                 "upgraded": len(primaries)})

@@ -8,7 +8,11 @@ the Table-2 percentile set (+ the 10 GB probe) is downloaded four times:
   2. curl via the site HTTP proxy   (warm)
   3. stashcp via the nearest cache  (cold)
   4. stashcp via the nearest cache  (warm)
-on the fluid-flow simulator with per-site bandwidth profiles.
+each (site, file) being one *sequential* :class:`ScenarioSpec` — four
+:class:`FetchRequest`s chained on the simulated engine against a fresh
+OSG federation, so cache state carries cold → warm but downloads never
+compete.  The routed client chain (GeoIP ranking → ring → failover)
+replaces the old bench's hand-picked nearest cache.
 
 Outputs per (site, file): download speeds (Figs 6–8) and the Table-3
 percent time difference for the 2.3 GB and 10 GB files, compared against
@@ -20,44 +24,31 @@ import json
 from pathlib import Path
 from typing import Dict, List
 
-from repro.core import (DownloadResult, FluidFlowSim, PAPER_TABLE3,
-                        build_osg_federation, evaluation_fileset,
-                        proxy_download, stash_download)
+from repro.core import (FederationSpec, FetchRequest, PAPER_TABLE3,
+                        ScenarioSpec, evaluation_fileset, run_scenario)
 
 ARTIFACTS = Path(__file__).parent / "artifacts"
+
+PHASES = ("proxy_cold", "proxy_warm", "stash_cold", "stash_warm")
 
 
 def run_site(site: str) -> List[dict]:
     """The 4-download protocol for every evaluation file at one site."""
     rows = []
     for path, size in evaluation_fileset():
-        fed = build_osg_federation()          # fresh caches per file set
-        origin = fed.origins[0]
-        meta = origin.put_object(path, size)
-        wnode = fed.client(site, 0).node.name
-        proxy = fed.proxies[site]
-        cache = fed.nearest_cache(wnode)
-        redirector = fed.redirectors.members[0].node.name
-        results = {}
-        for phase in ("proxy_cold", "proxy_warm", "stash_cold",
-                      "stash_warm"):
-            sim = FluidFlowSim(fed.topology, fed.net)
-            r = DownloadResult(path, size, phase)
-            if phase.startswith("proxy"):
-                sim.spawn(proxy_download(sim, wnode, proxy,
-                                         origin.node.name, meta, result=r))
-            else:
-                sim.spawn(stash_download(sim, wnode, cache,
-                                         origin.node.name, redirector, meta,
-                                         fed.geoip.lookup_latency,
-                                         result=r))
-            sim.run()
-            results[phase] = r
+        spec = ScenarioSpec(
+            name=f"proxy_vs_stash/{site}",
+            federation=FederationSpec.osg(),   # fresh caches per file set
+            workload=[FetchRequest(path, site=site,
+                                   method=phase.split("_")[0], size=size)
+                      for phase in PHASES],
+            sequential=True, engine="sim")
+        rep = run_scenario(spec)
         row = {"site": site, "path": path, "size": size}
-        for k, r in results.items():
-            row[f"{k}_s"] = r.seconds
-            row[f"{k}_mbps"] = size / r.seconds / 1e6
-            row[f"{k}_hit"] = r.cache_hit
+        for phase, r in zip(PHASES, rep.results):
+            row[f"{phase}_s"] = r.seconds
+            row[f"{phase}_mbps"] = size / r.seconds / 1e6
+            row[f"{phase}_hit"] = r.cache_hit
         rows.append(row)
     return rows
 

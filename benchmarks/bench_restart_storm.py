@@ -6,55 +6,74 @@ Direct-to-origin, the storage fabric sees N× the checkpoint size; through
 the pod-cache federation it sees ~1× per pod (collapsed forwarding — the
 in-flight pull is shared), and the storm drains at ICI speed.
 
+Both arms are one :class:`ScenarioSpec` executed on the simulated engine
+with a different fetch ``method`` (``stash`` vs ``direct``); a third,
+quick spec runs on *both* engines and lands in the artifact's ``parity``
+section — the CI smoke asserts the two engines report the same
+``FetchResult`` schema and identical bytes/hit/miss counts.
+
 Reported: origin egress and storm completion time, with/without caches.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 from pathlib import Path
 
-from repro.core import (FluidFlowSim, build_fleet_federation,
-                        direct_download, stash_download)
+from repro.core import (FederationSpec, FetchResult, ScenarioSpec,
+                        WorkloadSpec, run_scenario)
 
 ARTIFACTS = Path(__file__).parent / "artifacts"
+
+CKPT_PATH = "/ckpt/run1/step_00001000/params.npy"
+
+
+def _storm_spec(pods: int, hosts: int, size: int, method: str,
+                engine: str = "sim") -> ScenarioSpec:
+    return ScenarioSpec(
+        name=f"restart_storm/{method}",
+        federation=FederationSpec.fleet(num_pods=pods, hosts_per_pod=hosts),
+        workload=WorkloadSpec(kind="storm", path=CKPT_PATH, size=size,
+                              workers_per_site=hosts),
+        method=method, engine=engine)
+
+
+def _parity(pods: int = 1, hosts: int = 4, size: int = int(5e8)) -> dict:
+    """The same quick storm spec on both engines: the shared FetchResult
+    schema plus the byte/hit/miss aggregates that must agree."""
+    out: dict = {"fetch_result_fields":
+                 sorted(f.name for f in dataclasses.fields(FetchResult))}
+    for engine in ("analytic", "sim"):
+        rep = run_scenario(_storm_spec(pods, hosts, size, "stash", engine))
+        s = rep.summary()
+        out[engine] = {
+            "sample_result": dataclasses.asdict(rep.results[0]),
+            "bytes_moved": s["bytes_moved"],
+            "cache_hits": s["cache_hits"],
+            "cache_misses": s["cache_misses"],
+            "origin_egress_bytes": s["origin_egress_bytes"],
+        }
+    return out
 
 
 def run(pods: int = 2, hosts: int = 64, ckpt_gb: float = 8.0,
         verbose: bool = False):
     size = int(ckpt_gb * 1e9)
 
-    def storm(use_cache: bool):
-        fed = build_fleet_federation(num_pods=pods, hosts_per_pod=hosts)
-        origin = fed.origins[0]
-        meta = origin.put_object("/ckpt/run1/step_00001000/params.npy", size)
-        sim = FluidFlowSim(fed.topology, fed.net)
-        redirector = fed.redirectors.members[0].node.name
-        for p in range(pods):
-            cache = fed.caches[f"pod{p}/cache"]
-            for h in range(hosts):
-                wnode = fed.client(f"pod{p}", h).node.name
-                if use_cache:
-                    sim.spawn(stash_download(
-                        sim, wnode, cache, origin.node.name, redirector,
-                        meta, fed.geoip.lookup_latency))
-                else:
-                    sim.spawn(direct_download(
-                        sim, wnode, origin.node.name, meta, streams=8))
-        dur = sim.run()
-        origin_egress = (sum(c.stats.bytes_from_origin
-                             for c in fed.caches.values())
-                         if use_cache else size * pods * hosts)
-        return dur, origin_egress
+    def storm(method: str):
+        rep = run_scenario(_storm_spec(pods, hosts, size, method))
+        return rep.sim_seconds, rep.origin_egress_bytes
 
-    t_direct, egress_direct = storm(False)
-    t_cached, egress_cached = storm(True)
+    t_direct, egress_direct = storm("direct")
+    t_cached, egress_cached = storm("stash")
     ARTIFACTS.mkdir(exist_ok=True, parents=True)
     (ARTIFACTS / "restart_storm.json").write_text(json.dumps({
         "pods": pods, "hosts_per_pod": hosts, "ckpt_bytes": size,
         "direct": {"seconds": t_direct, "origin_egress": egress_direct},
         "cached": {"seconds": t_cached, "origin_egress": egress_cached},
         "egress_reduction": egress_direct / max(egress_cached, 1),
-        "speedup": t_direct / max(t_cached, 1e-9)}, indent=1))
+        "speedup": t_direct / max(t_cached, 1e-9),
+        "parity": _parity()}, indent=1))
     if verbose:
         print(f"  direct: {t_direct:8.1f}s, origin egress "
               f"{egress_direct / 1e12:.2f} TB")

@@ -1,6 +1,14 @@
 """Benchmark harness — one module per paper table/figure + fleet benches.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Bench modules are auto-discovered: every ``benchmarks/bench_*.py`` that
+exposes ``run() -> [(name, us_per_call, derived), ...]`` is picked up
+(the old hard-coded import list silently skipped new benches).  Prints
+``name,us_per_call,derived`` CSV rows.
+
+  python -m benchmarks.run                      # every bench
+  python -m benchmarks.run --list               # discovered modules
+  python -m benchmarks.run --only outage_storm  # substring/name select
+  python -m benchmarks.run --only bench_micro --only bench_roofline
 
   bench_proxy_vs_stash   paper Table 3 + Figs 6–8 (4-download protocol)
   bench_wan_offload      paper Fig. 5 (Syracuse WAN collapse)
@@ -14,28 +22,62 @@ Prints ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
+import argparse
+import importlib
+import pkgutil
 import sys
 import traceback
+from typing import Dict, List, Optional
 
 
-def main() -> int:
-    from . import (bench_fleet_scale, bench_loader, bench_micro,
-                   bench_outage_storm, bench_proxy_vs_stash,
-                   bench_restart_storm, bench_roofline, bench_utilization,
-                   bench_wan_offload)
-    modules = [bench_proxy_vs_stash, bench_wan_offload, bench_utilization,
-               bench_restart_storm, bench_fleet_scale, bench_outage_storm,
-               bench_loader, bench_micro, bench_roofline]
+def discover() -> Dict[str, object]:
+    """Import every ``bench_*`` module in this package, sorted by name."""
+    import benchmarks
+    names = sorted(m.name for m in pkgutil.iter_modules(benchmarks.__path__)
+                   if m.name.startswith("bench_"))
+    return {n: importlib.import_module(f"benchmarks.{n}") for n in names}
+
+
+def select(modules: Dict[str, object],
+           only: Optional[List[str]]) -> Dict[str, object]:
+    if not only:
+        return modules
+    picked: Dict[str, object] = {}
+    for pat in only:
+        want = pat if pat.startswith("bench_") else f"bench_{pat}"
+        hits = {n: m for n, m in modules.items()
+                if n == want or pat in n}
+        if not hits:
+            raise SystemExit(
+                f"--only {pat!r} matched nothing; available: "
+                f"{', '.join(modules)}")
+        picked.update(hits)
+    return picked
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run", description=__doc__.splitlines()[0])
+    ap.add_argument("--only", action="append", metavar="NAME",
+                    help="run only benches whose module name matches "
+                         "(exact bench_NAME or substring); repeatable")
+    ap.add_argument("--list", action="store_true",
+                    help="list discovered bench modules and exit")
+    args = ap.parse_args(argv)
+    modules = discover()
+    if args.list:
+        for n in modules:
+            print(n)
+        return 0
     print("name,us_per_call,derived")
     failed = 0
-    for mod in modules:
+    for name, mod in select(modules, args.only).items():
         try:
-            for name, us, derived in mod.run():
-                print(f"{name},{us:.1f},{derived}", flush=True)
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}", flush=True)
         except Exception as e:  # noqa: BLE001
             failed += 1
-            print(f"{mod.__name__},ERROR,{type(e).__name__}:{e}",
-                  flush=True)
+            print(f"{name},ERROR,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
     return 1 if failed else 0
 

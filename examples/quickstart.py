@@ -1,52 +1,72 @@
 """Quickstart: the StashCache federation in 60 seconds.
 
-Builds the paper's OSG deployment (5 sites, HA redirectors, site proxies),
-publishes a dataset at the origin, and shows the three headline behaviours:
-cold-miss → warm-hit, the stashcp fallback chain, and proxy vs cache on a
-large file.
+Everything goes through the unified data plane (`repro.core.api`): you
+name data by path, the federation (redirectors → namespace → caches)
+resolves and serves it.  The same code runs on the instant *analytic*
+engine here; swap `AnalyticPlane` for `SimulatedPlane` (or run a
+`ScenarioSpec` with `engine="sim"`) to replay it under link contention.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import build_osg_federation
+from repro.core import (AnalyticPlane, FederationSpec, FetchRequest,
+                        ScenarioSpec, WorkloadSpec, run_scenario)
 
 
 def main():
-    fed = build_osg_federation()
-    origin = fed.origins[0]
+    # Build the paper's OSG deployment (5 sites, HA redirectors, site
+    # proxies) and wrap it in a data plane — the only handle you need.
+    plane = AnalyticPlane(FederationSpec.osg().build())
 
-    # A researcher stages data at their origin (authoritative source).
-    data = b"\x42" * 5_000_000
-    origin.put_object("/ligo/frames/L1-GWOSC.gwf", data, mtime=1.0)
-    origin.put_object("/ligo/frames/big.gwf", 3 * 10 ** 9)  # 3 GB synthetic
+    # A researcher publishes a dataset; the namespace routes the path to
+    # the origin that exports its prefix (no origin reference held).
+    plane.publish("/ligo/frames/L1-GWOSC.gwf", b"\x42" * 5_000_000, mtime=1.0)
+    plane.publish("/ligo/frames/big.gwf", 3 * 10 ** 9)  # 3 GB synthetic
 
-    # A job at Nebraska reads through CVMFS: cold then warm.
-    client = fed.client("nebraska", worker=0)
-    _, cold = client.read("/ligo/frames/L1-GWOSC.gwf")
-    client2 = fed.client("nebraska", worker=1)
-    _, warm = client2.read("/ligo/frames/L1-GWOSC.gwf")
-    print(f"cold read : {cold.seconds * 1e3:8.1f} ms "
-          f"({cold.cache_misses} chunk misses)")
-    print(f"warm read : {warm.seconds * 1e3:8.1f} ms "
+    # A job at Nebraska fetches through the federation: cold then warm.
+    cold = plane.fetch(FetchRequest("/ligo/frames/L1-GWOSC.gwf",
+                                    site="nebraska", worker=0))
+    warm = plane.fetch(FetchRequest("/ligo/frames/L1-GWOSC.gwf",
+                                    site="nebraska", worker=1))
+    print(f"cold fetch: {cold.seconds * 1e3:8.1f} ms "
+          f"({cold.cache_misses} chunk misses via {cold.source})")
+    print(f"warm fetch: {warm.seconds * 1e3:8.1f} ms "
           f"({warm.cache_hits} chunk hits) "
           f"→ {cold.seconds / warm.seconds:.1f}× faster")
 
-    # stashcp fallback chain: no CVMFS, no XRootD → curl still works.
-    curl_only = fed.client("syracuse", 0, cvmfs=False, xrootd=False)
-    _, st = curl_only.copy("/ligo/frames/L1-GWOSC.gwf")
-    print(f"stashcp   : method={st.method} ({st.seconds * 1e3:.1f} ms)")
-
     # Large file: the site proxy refuses to cache it, StashCache doesn't.
-    proxy = fed.proxies["nebraska"]
-    meta = origin.meta("/ligo/frames/big.gwf")
-    proxy.get_object(client.node.name, meta, now=0.0)
-    print(f"proxy cached 3GB? {proxy.resident('/ligo/frames/big.gwf', 0.0)} "
-          f"(uncacheable count={proxy.stats.uncacheable})")
-    client.copy("/ligo/frames/big.gwf")
-    cache = fed.caches["nebraska/cache"]
-    print(f"stash cached 3GB? {cache.usage_bytes >= 3e9} "
-          f"(cache usage {cache.usage_bytes / 1e9:.1f} GB)")
+    via_proxy = plane.fetch(FetchRequest("/ligo/frames/big.gwf",
+                                         site="nebraska", method="proxy"))
+    via_stash = plane.fetch(FetchRequest("/ligo/frames/big.gwf",
+                                         site="nebraska", method="stash"))
+    again = plane.fetch(FetchRequest("/ligo/frames/big.gwf",
+                                     site="nebraska", method="proxy"))
+    print(f"3 GB via proxy: {via_proxy.seconds:6.1f} s  "
+          f"(re-fetch still a hit? {again.cache_hit})")
+    print(f"3 GB via stash: {via_stash.seconds:6.1f} s  "
+          f"(warm copy now resident at {via_stash.source})")
+
+    # stat() is the namespace-first metadata lookup.
+    st = plane.stat("/ligo/frames/big.gwf")
+    print(f"stat: {st.size / 1e9:.1f} GB in {st.num_chunks} chunks, "
+          f"exported by {st.origin}")
+
+    # The same scenario, declaratively — and on either engine.  A restart
+    # storm (every worker pulls the same checkpoint at t=0) on the
+    # fluid-flow simulator with max-min link contention:
+    spec = ScenarioSpec(
+        name="quickstart-storm",
+        federation=FederationSpec.fleet(num_pods=2, hosts_per_pod=8),
+        workload=WorkloadSpec(kind="storm", path="/ckpt/step1/params",
+                              size=int(2e9), workers_per_site=8),
+        engine="sim")
+    rep = run_scenario(spec)
+    print(f"storm ({rep.engine}): {len(rep.results)} pulls in "
+          f"{rep.sim_seconds:.1f} s simulated, origin served "
+          f"{rep.origin_egress_bytes / 1e9:.0f} GB "
+          f"(collapsed from {rep.bytes_moved / 1e9:.0f} GB moved)")
 
     # Monitoring flowed end-to-end (paper §3.2).
+    fed = plane.fed
     print(f"monitoring: {fed.aggregator.records} transfer records, "
           f"usage table {fed.aggregator.usage_table()[:2]}")
 

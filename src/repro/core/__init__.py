@@ -4,16 +4,23 @@ A distributed caching federation: data origins, redirectors, caches and
 clients (paper §3), plus the site-HTTP-proxy baseline it is evaluated
 against (§4.1), the monitoring pipeline (§3.2), write-back caching (§6
 future work) and a fluid-flow discrete-event simulator for contended-
-network evaluation.  ``repro.data`` builds the JAX training data pipeline
+network evaluation.  The federation is accessed through one typed data
+plane (``repro.core.api``): ``DataPlane`` with ``AnalyticPlane`` /
+``SimulatedPlane`` engines and declarative ``ScenarioSpec`` +
+``run_scenario``.  ``repro.data`` builds the JAX training data pipeline
 on top of this package; ``repro.train.checkpoint`` uses it for
 restart-storm checkpoint distribution.
 """
+from .api import (AnalyticPlane, DataPlane, FetchRequest, FetchResult,
+                  ScenarioReport, ScenarioSpec, SimulatedPlane, StatResult,
+                  WorkloadSpec, run_scenario)
 from .cache import CacheServer, CacheStats
 from .chunk import (DEFAULT_CHUNK_SIZE, ChunkRef, ObjectMeta, Payload,
                     chunk_object, fnv1a64, synthetic_object)
 from .client import LocalCache, StashClient
-from .federation import (Federation, SiteSpec, build_fleet_federation,
-                         build_osg_federation, OSG_SITE_PROFILES)
+from .federation import (Federation, FederationSpec, SiteSpec,
+                         build_fleet_federation, build_osg_federation,
+                         OSG_SITE_PROFILES)
 from .indexer import Catalog, Indexer
 from .monitoring import (CacheUsagePacket, FileClose, FileOpen, MessageBus,
                          MonitorCollector, TransferRecord, UsageAggregator,
@@ -27,7 +34,7 @@ from .proxy import HTTPProxy
 from .redirector import Redirector, RedirectorGroup, RedirectorPair
 from .ring import CacheGroup, GroupStats, HashRing
 from .simclient import (OutageEvent, OutageSchedule, ScenarioEngine,
-                        ScenarioReport, SimStashClient, first_of)
+                        SimStashClient, apply_outage, first_of)
 from .simulator import (DownloadResult, FluidFlowSim, direct_download,
                         fetch_chunks, proxy_download, stash_download)
 from .topology import BandwidthProfile, Coord, GeoIPService, Link, Node, Topology

@@ -1,0 +1,616 @@
+"""One federation access API — the unified data plane (paper §3).
+
+The paper's value proposition is the *federation interface*: clients name
+data by path, and the federation (redirectors, namespace, caches) resolves
+and serves it.  This module is that interface as a typed protocol with two
+interchangeable engines:
+
+* :class:`AnalyticPlane` — instant execution over the functional
+  federation (:class:`~repro.core.client.StashClient` /
+  :class:`~repro.core.proxy.HTTPProxy`): transfers move real or synthetic
+  bytes immediately and *account* time with the uncontended
+  :class:`~repro.core.transfer.NetworkModel`.
+* :class:`SimulatedPlane` — the same requests replayed as coroutines on
+  the fluid-flow discrete-event simulator
+  (:class:`~repro.core.simclient.SimStashClient` /
+  :class:`~repro.core.simulator.FluidFlowSim`), with max-min link
+  contention, collapsed forwarding, hedged fetches and outage schedules.
+
+Callers write ``plane.fetch("/ospool/file")`` identically on either plane
+and get a :class:`FetchResult` back — the type that unifies the old
+``TransferStats`` (analytic) and ``DownloadResult`` (simulated) shapes.
+Path resolution is namespace-first: the owning origin comes from
+longest-prefix match through :class:`~repro.core.redirector.Redirector` /
+:class:`~repro.core.namespace.Namespace`, never from a held origin or
+cache reference.
+
+On top of the planes sits the declarative layer: a
+:class:`ScenarioSpec` names a federation
+(:class:`~repro.core.federation.FederationSpec`), a workload
+(:class:`WorkloadSpec` or an explicit request list), an optional
+:class:`~repro.core.simclient.OutageSchedule`, the solver and the engine;
+:func:`run_scenario` builds a fresh federation, publishes the workload's
+objects, executes every request on the chosen engine and aggregates a
+:class:`ScenarioReport`.  Because the spec is inert data, the *same*
+scenario runs on both engines — which is what the engine-parity tests
+and the CI smoke assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Dict, Generator, List, Optional, Protocol, Sequence,
+                    Tuple, Union, runtime_checkable)
+
+from .client import StashClient
+from .federation import Federation, FederationSpec
+from .simclient import (OutageSchedule, ScenarioEngine, ScenarioReport,
+                        apply_outage)
+from .simulator import direct_download, proxy_download
+from .transfer import TransferStats
+from .workload import AccessRequest, generate_workload, storm_workload
+
+GB = 10**9
+
+
+# ---------------------------------------------------------------------------
+# Typed request/response models
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FetchRequest:
+    """One named-data fetch: *what* (path), *where from* (site/worker),
+    *how* (method) and *when* (arrival time, simulated plane)."""
+
+    path: str
+    site: str = ""          # requesting site; "" = first worker-bearing site
+    worker: int = 0
+    method: str = "stash"   # "stash" | "cvmfs" | "proxy" | "direct"
+    at: float = 0.0         # arrival time (sim clock; analytic outage clock)
+    size: int = 0           # size hint for publishing synthetic objects
+    streams: int = 0        # 0 = plane default
+
+    METHODS = ("stash", "cvmfs", "proxy", "direct")
+
+    def __post_init__(self) -> None:
+        if self.method not in self.METHODS:
+            raise ValueError(f"unknown fetch method {self.method!r}")
+
+
+@dataclasses.dataclass
+class FetchResult:
+    """What one fetch did — the unification of the analytic path's
+    ``TransferStats`` and the simulator's ``DownloadResult``.
+
+    ``seconds`` is accounted (analytic) or simulated (sim) wall time;
+    ``bytes`` is what crossed the last hop to the worker; chunk-level
+    ``cache_hits``/``cache_misses`` are exact on the analytic plane and
+    derived from the hit/miss status on the simulated plane (per-chunk
+    splits under concurrency live in the federation's ``CacheStats``).
+    """
+
+    path: str
+    size: int = 0
+    method: str = ""
+    plane: str = ""         # "analytic" | "sim"
+    seconds: float = 0.0
+    bytes: int = 0
+    chunks: int = 0
+    cache_hit: bool = False
+    cache_hits: int = 0
+    cache_misses: int = 0
+    waited: bool = False    # collapsed-forwarding wait (sim)
+    hedged: bool = False    # a backup fetch was raced (sim)
+    source: str = ""        # cache/proxy/origin that served the last hop
+    failovers: int = 0
+    start: float = 0.0
+    ok: bool = True
+    error: str = ""
+
+    @classmethod
+    def from_transfer(cls, path: str, stats: TransferStats, *,
+                      method: str, start: float = 0.0) -> "FetchResult":
+        """Analytic-plane constructor: fold a ``TransferStats``."""
+        return cls(path=path, size=stats.bytes, method=method,
+                   plane="analytic", seconds=stats.seconds,
+                   bytes=stats.bytes, chunks=stats.chunks,
+                   cache_hit=(stats.cache_misses == 0
+                              and stats.cache_hits > 0),
+                   cache_hits=stats.cache_hits,
+                   cache_misses=stats.cache_misses,
+                   source=stats.source, start=start)
+
+
+@dataclasses.dataclass
+class StatResult:
+    """Namespace-first metadata lookup: does the federation know the
+    path, how big is it, and which origin exports it."""
+
+    path: str
+    found: bool
+    size: int = 0
+    num_chunks: int = 0
+    chunk_size: int = 0
+    origin: str = ""
+
+
+# ---------------------------------------------------------------------------
+# The protocol both engines implement
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class DataPlane(Protocol):
+    """The one federation access API.
+
+    Implementations hold a :class:`Federation`; callers hold only paths.
+    ``fetch`` accepts a bare path (all defaults) or a
+    :class:`FetchRequest`; ``fetch_all`` executes a workload — under
+    contention with an optional outage schedule on the simulated plane,
+    in request-time order with outage events interleaved on the analytic
+    plane.  ``publish``/``stat`` route through the redirectors'
+    namespace (longest-prefix), so multi-origin federations work without
+    the caller ever naming an origin.
+    """
+
+    name: str
+    fed: Federation
+
+    def stat(self, path: str) -> StatResult: ...
+
+    def publish(self, path: str, data: Union[bytes, int],
+                mtime: float = 0.0) -> StatResult: ...
+
+    def fetch(self, request: Union[str, FetchRequest]) -> FetchResult: ...
+
+    def fetch_all(self, requests: Sequence[FetchRequest],
+                  schedule: Optional[OutageSchedule] = None,
+                  sequential: bool = False) -> List[FetchResult]: ...
+
+
+class _PlaneBase:
+    """Namespace-first resolution shared by both engines."""
+
+    name = ""
+
+    def __init__(self, fed: Federation) -> None:
+        self.fed = fed
+
+    def stat(self, path: str) -> StatResult:
+        try:
+            origin = self.fed.redirectors.locate(path)
+        except ConnectionError:
+            origin = None
+        if origin is None:
+            return StatResult(path=path, found=False)
+        meta = origin.meta(path)
+        return StatResult(path=path, found=True, size=meta.size,
+                          num_chunks=meta.num_chunks,
+                          chunk_size=meta.chunk_size, origin=origin.name)
+
+    def publish(self, path: str, data: Union[bytes, int],
+                mtime: float = 0.0) -> StatResult:
+        origin = self.fed.resolve_origin(path)
+        if origin is None:
+            raise KeyError(f"no origin exports a prefix of {path!r}")
+        meta = origin.put_object(path, data, mtime=mtime)
+        return StatResult(path=path, found=True, size=meta.size,
+                          num_chunks=meta.num_chunks,
+                          chunk_size=meta.chunk_size, origin=origin.name)
+
+    def _default_site(self) -> str:
+        for s in self.fed.sites:
+            if s.workers > 0:
+                return s.name
+        return self.fed.sites[0].name
+
+    def _req(self, request: Union[str, FetchRequest]) -> FetchRequest:
+        req = (FetchRequest(path=request) if isinstance(request, str)
+               else request)
+        if not req.site:
+            req = dataclasses.replace(req, site=self._default_site())
+        return req
+
+
+# ---------------------------------------------------------------------------
+# Engine 1: analytic (functional federation, uncontended accounting)
+# ---------------------------------------------------------------------------
+class AnalyticPlane(_PlaneBase):
+    """Instant execution with :class:`NetworkModel` time accounting.
+
+    ``stash`` fetches go through the real :class:`StashClient` fallback
+    chain restricted to the cache-served methods (``xrootd``/``http``) —
+    the worker-local CVMFS cache is *not* consulted, so the cache tier
+    sees the same lookups the simulated plane produces (engine parity).
+    ``cvmfs`` exposes the POSIX read path (worker-local chunk cache
+    included); ``proxy`` is the squid baseline; ``direct`` bypasses the
+    cache tier entirely.
+    """
+
+    name = "analytic"
+
+    def __init__(self, fed: Federation, streams: int = 8) -> None:
+        super().__init__(fed)
+        self.streams = streams
+        self.clients: Dict[Tuple[str, int], StashClient] = {}
+
+    def client(self, site: str, worker: int = 0) -> StashClient:
+        key = (site, worker)
+        c = self.clients.get(key)
+        if c is None:
+            c = self.fed.client(site, worker)
+            self.clients[key] = c
+        return c
+
+    # -- the one entry point -------------------------------------------------
+    def fetch(self, request: Union[str, FetchRequest]) -> FetchResult:
+        req = self._req(request)
+        try:
+            return self._fetch(req)
+        except (FileNotFoundError, ConnectionError, KeyError) as e:
+            return FetchResult(path=req.path, method=req.method,
+                               plane=self.name, start=req.at,
+                               ok=False, error=f"{type(e).__name__}: {e}")
+
+    def _fetch(self, req: FetchRequest) -> FetchResult:
+        client = self.client(req.site, req.worker)
+        client.now = max(client.now, req.at)
+        if req.method == "stash":
+            try:
+                _, stats = client.copy(req.path, methods=("xrootd", "http"))
+            except (FileNotFoundError, ConnectionError):
+                # Every ranked cache failed: like the simulated client,
+                # the federation degrades to a direct origin pull — but
+                # only if the path actually exists.
+                if not self.stat(req.path).found:
+                    raise
+                client.stats.origin_fallbacks += 1
+                res = self._fetch_direct(req, client)
+                res.method = "origin-direct"
+                res.start = req.at
+                return res
+        elif req.method == "cvmfs":
+            _, stats = client.read(req.path)
+        elif req.method == "proxy":
+            res = self._fetch_proxy(req, client)
+            res.start = req.at
+            return res
+        else:  # direct
+            res = self._fetch_direct(req, client)
+            res.start = req.at
+            return res
+        res = FetchResult.from_transfer(req.path, stats, method=req.method,
+                                        start=req.at)
+        return res
+
+    def _fetch_proxy(self, req: FetchRequest,
+                     client: StashClient) -> FetchResult:
+        proxy = self.fed.proxies.get(req.site)
+        if proxy is None:
+            raise KeyError(f"site {req.site!r} has no HTTP proxy")
+        origin = self.fed.redirectors.locate(req.path)
+        if origin is None:
+            raise FileNotFoundError(req.path)
+        meta = origin.meta(req.path)
+        _, stats = proxy.get_object(client.node.name, meta, now=req.at)
+        return FetchResult(
+            path=req.path, size=meta.size, method="proxy",
+            plane=self.name, seconds=stats.seconds, bytes=stats.bytes,
+            chunks=stats.chunks, cache_hit=stats.cache_hits > 0,
+            cache_hits=stats.cache_hits, cache_misses=stats.cache_misses,
+            source=stats.source)
+
+    def _fetch_direct(self, req: FetchRequest,
+                      client: StashClient) -> FetchResult:
+        origin = self.fed.redirectors.locate(req.path)
+        if origin is None:
+            raise FileNotFoundError(req.path)
+        meta = origin.meta(req.path)
+        streams = req.streams or self.streams
+        seconds = self.fed.net.transfer_time(
+            origin.node.name, client.node.name, meta.size, streams=streams)
+        for ref in meta.chunk_refs():
+            origin.read_chunk(req.path, ref.index)  # egress accounting
+        return FetchResult(
+            path=req.path, size=meta.size, method="direct",
+            plane=self.name, seconds=seconds, bytes=meta.size,
+            chunks=meta.num_chunks, cache_misses=meta.num_chunks,
+            source=origin.name)
+
+    def fetch_all(self, requests: Sequence[FetchRequest],
+                  schedule: Optional[OutageSchedule] = None,
+                  sequential: bool = False) -> List[FetchResult]:
+        """Requests in arrival order, outage events interleaved by time.
+
+        The analytic plane is sequential by construction (transfers are
+        instantaneous), so ``sequential`` is accepted for protocol
+        symmetry and ignored.
+        """
+        events = list(schedule) if schedule is not None else []
+        group_of = {c.name: g for g in self.fed.groups.values()
+                    for c in g.members} if events else {}
+        results: List[Optional[FetchResult]] = [None] * len(requests)
+        order = sorted(range(len(requests)),
+                       key=lambda i: self._req(requests[i]).at)
+        ei = 0
+        for i in order:
+            req = self._req(requests[i])
+            while ei < len(events) and events[ei].time <= req.at:
+                apply_outage(self.fed, events[ei], group_of=group_of)
+                ei += 1
+            results[i] = self.fetch(req)
+        while ei < len(events):
+            apply_outage(self.fed, events[ei], group_of=group_of)
+            ei += 1
+        return [r for r in results if r is not None]
+
+
+# ---------------------------------------------------------------------------
+# Engine 2: simulated (fluid-flow DES, contention + outages)
+# ---------------------------------------------------------------------------
+class SimulatedPlane(_PlaneBase):
+    """The same API, replayed as coroutines under max-min contention.
+
+    Wraps a :class:`~repro.core.simclient.ScenarioEngine` for its sim,
+    per-(site, worker) :class:`SimStashClient` pool and outage
+    controller.  ``fetch`` runs one request to completion; ``fetch_all``
+    spawns the whole workload (concurrently by arrival time, or
+    ``sequential`` for protocols like the paper's 4-download experiment
+    where requests must not compete) and runs the sim once.
+    """
+
+    name = "sim"
+
+    def __init__(self, fed: Federation, solver: str = "auto",
+                 streams: int = 8, hedge_after: Optional[float] = None,
+                 max_attempts: int = 4, rank_limit: Optional[int] = 8,
+                 router: str = "ring") -> None:
+        super().__init__(fed)
+        self.engine = ScenarioEngine(
+            fed, solver=solver, streams=streams, hedge_after=hedge_after,
+            max_attempts=max_attempts, rank_limit=rank_limit, router=router)
+        self.streams = streams
+
+    @property
+    def sim(self):
+        return self.engine.sim
+
+    @property
+    def clients(self):
+        return self.engine._clients
+
+    # -- coroutines ----------------------------------------------------------
+    def _download(self, req: FetchRequest, res: FetchResult) -> Generator:
+        sim = self.sim
+        origin = self.fed.redirectors.locate(req.path)
+        if origin is None:
+            res.ok = False
+            res.error = f"FileNotFoundError: {req.path}"
+            return
+        meta = origin.meta(req.path)
+        res.size = meta.size
+        res.chunks = meta.num_chunks
+        if req.method in ("stash", "cvmfs"):
+            # The simulator models no worker-local cache; cvmfs degrades
+            # to the cache-served path (same chunks, same accounting).
+            sc = self.engine.client(req.site, req.worker)
+            yield from sc.download(req.path, meta=meta, result=res)
+        elif req.method == "proxy":
+            proxy = self.fed.proxies.get(req.site)
+            if proxy is None:
+                res.ok = False
+                res.error = f"KeyError: site {req.site!r} has no HTTP proxy"
+                return
+            wnode = self.engine.client(req.site, req.worker).node_name
+            yield from proxy_download(sim, wnode, proxy, origin.node.name,
+                                      meta, result=res)
+            res.method = "proxy"
+        else:  # direct
+            wnode = self.engine.client(req.site, req.worker).node_name
+            yield from direct_download(sim, wnode, origin.node.name, meta,
+                                       streams=req.streams or self.streams,
+                                       result=res)
+            origin.stats.egress_bytes += meta.size
+            res.source = origin.name
+        if res.seconds > 0:
+            res.bytes = meta.size
+            if res.cache_hit:
+                res.cache_hits = res.chunks
+            else:
+                res.cache_misses = res.chunks
+
+    def _chain(self, pairs: List[Tuple[FetchRequest, FetchResult]]
+               ) -> Generator:
+        for req, res in pairs:
+            if req.at > self.sim.t:
+                yield self.sim.delay(req.at - self.sim.t)
+            yield from self._download(req, res)
+
+    # -- the one entry point -------------------------------------------------
+    def fetch(self, request: Union[str, FetchRequest]) -> FetchResult:
+        return self.fetch_all([self._req(request)], sequential=True)[0]
+
+    def fetch_all(self, requests: Sequence[FetchRequest],
+                  schedule: Optional[OutageSchedule] = None,
+                  sequential: bool = False) -> List[FetchResult]:
+        reqs = [self._req(r) for r in requests]
+        results = [FetchResult(path=r.path, method=r.method,
+                               plane=self.name) for r in reqs]
+        if sequential:
+            self.sim.spawn(self._chain(list(zip(reqs, results))))
+        else:
+            for req, res in zip(reqs, results):
+                # A reused plane's clock has advanced past early arrival
+                # times; never schedule into the past (the sim clock is
+                # monotonic).
+                self.sim.spawn(self._download(req, res),
+                               at=max(req.at, self.sim.t))
+        if schedule is not None and len(schedule):
+            self.sim.spawn(self.engine._outage_controller(schedule))
+        self.sim.run()
+        return results
+
+
+# ---------------------------------------------------------------------------
+# Declarative scenarios
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class WorkloadSpec:
+    """A declarative workload: a restart ``storm`` (every worker pulls
+    the same object) or a production-shaped ``zipf`` trace (Table 2
+    sizes, Table 1 experiment mix).  ``sites=None`` targets every
+    worker-bearing site of the federation."""
+
+    kind: str = "zipf"               # "zipf" | "storm"
+    sites: Optional[Sequence[str]] = None
+    # zipf trace knobs
+    n_requests: int = 100
+    duration: float = 3600.0
+    working_set: int = 64
+    zipf_a: float = 1.2
+    seed: int = 0
+    # storm knobs
+    path: str = "/ckpt/step/params"
+    size: int = 2 * GB
+    at: float = 0.0
+    workers_per_site: int = 1
+    jitter: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("zipf", "storm"):
+            raise ValueError(f"unknown workload kind {self.kind!r}")
+
+    def build(self, fed: Federation, method: str = "stash"
+              ) -> List[FetchRequest]:
+        sites = (list(self.sites) if self.sites
+                 else [s.name for s in fed.sites if s.workers > 0])
+        if self.kind == "storm":
+            trace = storm_workload(sites, path=self.path, size=self.size,
+                                   at=self.at,
+                                   workers_per_site=self.workers_per_site,
+                                   jitter=self.jitter, seed=self.seed)
+        else:
+            trace = generate_workload(sites, self.n_requests,
+                                      duration=self.duration,
+                                      seed=self.seed,
+                                      working_set=self.working_set,
+                                      zipf_a=self.zipf_a)
+        hosts = {s.name: max(1, s.workers) for s in fed.sites}
+        return [FetchRequest(path=r.path, site=r.site,
+                             worker=r.worker % hosts.get(r.site, 1),
+                             method=method, at=r.time, size=r.size)
+                for r in trace]
+
+
+@dataclasses.dataclass
+class ScenarioSpec:
+    """One scenario, declaratively: federation + workload + outages +
+    solver + engine.  Executed by :func:`run_scenario`; the same spec
+    runs on either engine (``engine="sim" | "analytic"``)."""
+
+    name: str
+    federation: FederationSpec
+    workload: Union[WorkloadSpec, Sequence[FetchRequest],
+                    Sequence[AccessRequest]]
+    outages: Optional[OutageSchedule] = None
+    engine: str = "sim"
+    method: str = "stash"            # default for declarative workloads
+    sequential: bool = False         # chain requests (no competition)
+    solver: str = "auto"
+    streams: int = 8
+    hedge_after: Optional[float] = None
+    max_attempts: int = 4
+    rank_limit: Optional[int] = 8
+    router: str = "ring"
+
+    def __post_init__(self) -> None:
+        if self.engine not in ("sim", "analytic"):
+            raise ValueError(f"unknown engine {self.engine!r}")
+
+    def requests(self, fed: Federation) -> List[FetchRequest]:
+        if isinstance(self.workload, WorkloadSpec):
+            return self.workload.build(fed, method=self.method)
+        hosts = {s.name: max(1, s.workers) for s in fed.sites}
+        out: List[FetchRequest] = []
+        for r in self.workload:
+            if isinstance(r, AccessRequest):
+                out.append(FetchRequest(
+                    path=r.path, site=r.site,
+                    worker=r.worker % hosts.get(r.site, 1),
+                    method=self.method, at=r.time, size=r.size))
+            else:
+                out.append(r)
+        return out
+
+    def plane(self, fed: Federation) -> DataPlane:
+        if self.engine == "analytic":
+            return AnalyticPlane(fed, streams=self.streams)
+        return SimulatedPlane(
+            fed, solver=self.solver, streams=self.streams,
+            hedge_after=self.hedge_after, max_attempts=self.max_attempts,
+            rank_limit=self.rank_limit, router=self.router)
+
+
+def run_scenario(spec: ScenarioSpec,
+                 federation: Optional[Federation] = None) -> ScenarioReport:
+    """Execute one declarative scenario end to end.
+
+    Builds a fresh federation from the spec (pass ``federation`` to reuse
+    one), publishes every workload path that no origin holds yet
+    (namespace-routed synthetic objects), executes the workload on the
+    chosen engine, and aggregates the report.
+    """
+    fed = federation if federation is not None else spec.federation.build()
+    plane = spec.plane(fed)
+    reqs = spec.requests(fed)
+    sizes: Dict[str, int] = {}
+    for r in reqs:
+        sizes[r.path] = max(sizes.get(r.path, 0), r.size)
+    for path, size in sizes.items():
+        # Only requests that *declare* a size get a synthetic object; a
+        # sizeless request for an unpublished path must fail visibly
+        # (ok=False / FileNotFoundError), not fetch 0 bytes happily.
+        if size > 0 and not plane.stat(path).found:
+            plane.publish(path, size)
+    # Federation counters are lifetime totals; snapshot them so a reused
+    # federation (``federation=``) reports only *this* scenario's deltas.
+    base = _fed_totals(fed)
+    results = plane.fetch_all(reqs, schedule=spec.outages,
+                              sequential=spec.sequential)
+    rep = _report(spec, fed, plane, results)
+    for field, before in base.items():
+        setattr(rep, field, getattr(rep, field) - before)
+    return rep
+
+
+def _fed_totals(fed: Federation) -> Dict[str, int]:
+    """The federation-lifetime counters a ScenarioReport aggregates."""
+    gstats = [g.stats for g in fed.groups.values()]
+    return {
+        "cache_hits": sum(c.stats.hits for c in fed.caches.values()),
+        "cache_misses": sum(c.stats.misses for c in fed.caches.values()),
+        "origin_egress_bytes": sum(o.stats.egress_bytes
+                                   for o in fed.origins),
+        "group_failovers": sum(s.failovers for s in gstats),
+        "outages": sum(s.outages for s in gstats),
+        "recoveries": sum(s.recoveries for s in gstats),
+    }
+
+
+def _report(spec: ScenarioSpec, fed: Federation, plane: DataPlane,
+            results: List[FetchResult]) -> ScenarioReport:
+    if isinstance(plane, SimulatedPlane):
+        return plane.engine.report(results, name=spec.name)
+    cstats = [c.stats for c in plane.clients.values()]
+    gstats = [g.stats for g in fed.groups.values()]
+    return ScenarioReport(
+        name=spec.name,
+        engine=plane.name,
+        results=results,
+        bytes_moved=sum(r.bytes for r in results),
+        cache_hits=sum(c.stats.hits for c in fed.caches.values()),
+        cache_misses=sum(c.stats.misses for c in fed.caches.values()),
+        origin_egress_bytes=sum(o.stats.egress_bytes for o in fed.origins),
+        cache_failovers=sum(s.cache_failovers for s in cstats),
+        hedged_fetches=sum(s.hedged_fetches for s in cstats),
+        origin_fallbacks=sum(s.origin_fallbacks for s in cstats),
+        group_failovers=sum(s.failovers for s in gstats),
+        outages=sum(s.outages for s in gstats),
+        recoveries=sum(s.recoveries for s in gstats),
+    )

@@ -62,9 +62,13 @@ class LocalCache:
 
     def put(self, path: str, index: int, payload: Payload) -> None:
         key = (path, index)
-        if key in self._lru:
-            self._lru.move_to_end(key)
-            return
+        old = self._lru.pop(key, None)
+        if old is not None:
+            # Re-fetched chunk: the new payload supersedes whatever was
+            # resident (a checksum failure + drop/re-pull race can leave a
+            # stale copy here) — replace it and account the size delta
+            # rather than touching the stale entry and returning.
+            self.usage_bytes -= old.size
         if payload.size > self.capacity_bytes:
             # Refusing outright beats draining the whole cache and then
             # overcommitting: the chunk can never fit, and inserting it
@@ -264,12 +268,22 @@ class StashClient:
     # ------------------------------------------------------------------
     # stashcp: whole-file copy with the 3-way fallback chain
     # ------------------------------------------------------------------
-    def copy(self, path: str) -> Tuple[Optional[bytes], TransferStats]:
+    def copy(self, path: str, methods: Optional[Sequence[str]] = None
+             ) -> Tuple[Optional[bytes], TransferStats]:
+        """Whole-file copy through the fallback chain.  ``methods``
+        restricts/reorders the chain (the unified data plane uses
+        ``("xrootd", "http")`` so both engines fetch from the site cache
+        rather than the worker-local CVMFS cache)."""
+        chain: Tuple[str, ...] = (tuple(methods) if methods
+                                  else ("cvmfs", "xrootd", "http"))
+        unknown = set(chain) - {"cvmfs", "xrootd", "http"}
+        if unknown:
+            raise ValueError(f"unknown copy methods {sorted(unknown)}")
         self.stats.copies += 1
         errors: List[str] = []
         # stashcp pays a remote GeoIP lookup before anything moves (§5).
         startup = self.geoip.lookup_latency
-        for method in ("cvmfs", "xrootd", "http"):
+        for method in chain:
             if method == "cvmfs" and not self.cvmfs_available:
                 errors.append("cvmfs: not mounted")
                 continue

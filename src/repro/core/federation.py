@@ -14,7 +14,7 @@ Two deployment idioms are provided:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .cache import CacheServer
 from .client import StashClient
@@ -101,6 +101,51 @@ class Federation:
         order = self.geoip.nearest(client_node, list(self.caches))
         return self.caches[order[0]]
 
+    # -- namespace-first origin routing -------------------------------------
+    def resolve_origin(self, path: str) -> Optional[Origin]:
+        """The origin whose exported prefix owns ``path``
+        (longest-prefix match through the redirectors' namespace).
+
+        This is how the unified data plane *publishes*: callers name data
+        by path and the federation picks the origin — nobody holds origin
+        references.  Returns None when no export claims the path.
+        """
+        for r in self.redirectors.members:
+            owner = r.namespace.resolve(path)
+            if owner is not None and owner in r.origins:
+                return r.origins[owner]
+        return None
+
+    def add_origin(self, site: str, exports: Sequence[str],
+                   name: Optional[str] = None) -> Origin:
+        """Attach another origin exporting ``exports`` at ``site`` and
+        subscribe it to the redirectors (multi-origin federations)."""
+        prof = self.topology.profile(site)
+        idx = len(self.origins)
+        if name is None:
+            # Never reuse a node name: after remove_origin, a plain
+            # len(origins) counter would mint an existing origin's name
+            # and hijack its node + namespace registration.
+            while f"{site}/origin{idx}" in self.topology.nodes:
+                idx += 1
+            name = f"{site}/origin{idx}"
+        if name in self.topology.nodes:
+            raise ValueError(f"origin node {name!r} already exists")
+        node = self.topology.add_node(name, Coord(site, rack=255, host=idx),
+                                      prof.origin_nic)
+        origin = Origin(node.name, node, exports=exports)
+        self.redirectors.subscribe(origin)
+        self.origins.append(origin)
+        return origin
+
+    def remove_origin(self, origin: Union[Origin, str]) -> None:
+        """Retire an origin: unsubscribe it (which unregisters its
+        namespace prefixes — no dangling longest-prefix matches) and drop
+        it from the federation's origin list."""
+        name = origin.name if isinstance(origin, Origin) else origin
+        self.redirectors.unsubscribe(name)
+        self.origins = [o for o in self.origins if o.name != name]
+
 
 def _build(sites: Sequence[SiteSpec], origin_site: str,
            origin_exports: Sequence[str] = ("/",),
@@ -170,6 +215,80 @@ def _build(sites: Sequence[SiteSpec], origin_site: str,
                       groups, proxies, monitor, bus, aggregator, list(sites))
 
 
+@dataclasses.dataclass
+class FederationSpec:
+    """Declarative federation description — the deployment half of a
+    :class:`~repro.core.api.ScenarioSpec`.
+
+    A spec is data (sites + origin placement + knobs), ``build()`` turns
+    it into a live :class:`Federation`.  The two deployment idioms the
+    repo ships are constructors: :meth:`osg` (paper Fig. 2) and
+    :meth:`fleet` (the TPU mapping).  Because the spec is inert, one
+    ``ScenarioSpec`` can be executed on the analytic *and* the simulated
+    engine, each against its own freshly-built federation.
+    """
+
+    sites: List[SiteSpec] = dataclasses.field(default_factory=list)
+    origin_site: str = ""
+    origin_exports: Tuple[str, ...] = ("/",)
+    redirector_site: Optional[str] = None
+    proxy_max_cacheable: int = 1 * 2**30
+    proxy_ttl: float = 3600.0
+    monitor_drop_rate: float = 0.0
+    geoip_lookup_latency: float = 0.200
+
+    def build(self) -> Federation:
+        if not self.sites:
+            raise ValueError("FederationSpec needs at least one site")
+        return _build(self.sites, self.origin_site or self.sites[0].name,
+                      origin_exports=self.origin_exports,
+                      redirector_site=self.redirector_site,
+                      proxy_max_cacheable=self.proxy_max_cacheable,
+                      proxy_ttl=self.proxy_ttl,
+                      monitor_drop_rate=self.monitor_drop_rate,
+                      geoip_lookup_latency=self.geoip_lookup_latency)
+
+    @classmethod
+    def osg(cls, workers_per_site: int = 4, monitor_drop_rate: float = 0.0,
+            eviction_policy: str = "lru",
+            cache_replicas: int = 1) -> "FederationSpec":
+        """The paper's five-site OSG deployment (Fig. 2, §4.1)."""
+        sites = [SiteSpec(name=n, workers=workers_per_site, profile=p,
+                          eviction_policy=eviction_policy,
+                          cache_replicas=cache_replicas)
+                 for n, p in OSG_SITE_PROFILES.items()]
+        return cls(sites=sites, origin_site="chicago",
+                   monitor_drop_rate=monitor_drop_rate)
+
+    @classmethod
+    def fleet(cls, num_pods: int = 2, hosts_per_pod: int = 64,
+              cache_capacity: float = 32 * TB,
+              monitor_drop_rate: float = 0.0,
+              eviction_policy: str = "lru", cache_replicas: int = 1,
+              ttl_seconds: float = 3600.0,
+              admission_max_fraction: float = 1.0) -> "FederationSpec":
+        """TPU-fleet mapping: one cache group per pod, origin = dataset
+        store.  Intra-pod links are ICI-class, cross-pod is DCN-class,
+        the origin sits behind a storage-fabric link; GeoIP lookup
+        latency is LAN-scale."""
+        prof = BandwidthProfile(worker_nic=25e9, cache_nic=100e9,
+                                proxy_nic=25e9, origin_nic=40e9,
+                                site_uplink=50e9, wan_rtt=0.002,
+                                lan_rtt=0.0002)
+        sites = [SiteSpec(name=f"pod{p}", workers=hosts_per_pod,
+                          cache_capacity=cache_capacity, profile=prof,
+                          eviction_policy=eviction_policy,
+                          cache_replicas=cache_replicas,
+                          ttl_seconds=ttl_seconds,
+                          admission_max_fraction=admission_max_fraction)
+                 for p in range(num_pods)]
+        sites.append(SiteSpec(name="storage", workers=0, has_cache=False,
+                              has_proxy=False, profile=prof))
+        return cls(sites=sites, origin_site="storage",
+                   monitor_drop_rate=monitor_drop_rate,
+                   geoip_lookup_latency=0.002)
+
+
 # Paper Fig. 2 deployment: the five test sites of §4.1 with bandwidth
 # profiles calibrated to reproduce Table 3's signs (see bench docs).
 # Profiles calibrated so the simulator reproduces Table 3's signs; the
@@ -202,12 +321,11 @@ def build_osg_federation(workers_per_site: int = 4,
                          monitor_drop_rate: float = 0.0,
                          eviction_policy: str = "lru",
                          cache_replicas: int = 1) -> Federation:
-    sites = [SiteSpec(name=n, workers=workers_per_site, profile=p,
-                      eviction_policy=eviction_policy,
-                      cache_replicas=cache_replicas)
-             for n, p in OSG_SITE_PROFILES.items()]
-    return _build(sites, origin_site="chicago",
-                  monitor_drop_rate=monitor_drop_rate)
+    return FederationSpec.osg(
+        workers_per_site=workers_per_site,
+        monitor_drop_rate=monitor_drop_rate,
+        eviction_policy=eviction_policy,
+        cache_replicas=cache_replicas).build()
 
 
 def build_fleet_federation(num_pods: int = 2, hosts_per_pod: int = 64,
@@ -224,19 +342,10 @@ def build_fleet_federation(num_pods: int = 2, hosts_per_pod: int = 64,
     ``cache_replicas`` > 1 gives each pod an HA consistent-hash cache
     group; ``eviction_policy`` selects the per-cache policy fleet-wide.
     """
-    prof = BandwidthProfile(worker_nic=25e9, cache_nic=100e9,
-                            proxy_nic=25e9, origin_nic=40e9,
-                            site_uplink=50e9, wan_rtt=0.002,
-                            lan_rtt=0.0002)
-    sites = [SiteSpec(name=f"pod{p}", workers=hosts_per_pod,
-                      cache_capacity=cache_capacity, profile=prof,
-                      eviction_policy=eviction_policy,
-                      cache_replicas=cache_replicas,
-                      ttl_seconds=ttl_seconds,
-                      admission_max_fraction=admission_max_fraction)
-             for p in range(num_pods)]
-    sites.append(SiteSpec(name="storage", workers=0, has_cache=False,
-                          has_proxy=False, profile=prof))
-    return _build(sites, origin_site="storage",
-                  monitor_drop_rate=monitor_drop_rate,
-                  geoip_lookup_latency=0.002)
+    return FederationSpec.fleet(
+        num_pods=num_pods, hosts_per_pod=hosts_per_pod,
+        cache_capacity=cache_capacity,
+        monitor_drop_rate=monitor_drop_rate,
+        eviction_policy=eviction_policy, cache_replicas=cache_replicas,
+        ttl_seconds=ttl_seconds,
+        admission_max_fraction=admission_max_fraction).build()

@@ -9,7 +9,7 @@ between the two, and a dead redirector is skipped transparently.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 from .namespace import Namespace
 from .origin import Origin
@@ -39,6 +39,20 @@ class Redirector:
         self.origins[origin.name] = origin
         for prefix in origin.exports:
             self.namespace.register(prefix, origin.name)
+
+    def unsubscribe(self, origin: Union[Origin, str]) -> None:
+        """Unregister an origin *and* its namespace prefixes.
+
+        Without the prefix cleanup, multi-origin scenarios that retire an
+        origin leave dangling namespace entries whose longest-prefix match
+        makes ``locate`` poll a dead owner forever.  Prefixes are taken
+        from the namespace (not ``origin.exports``) so prefixes registered
+        after subscription are cleaned up too.
+        """
+        name = origin.name if isinstance(origin, Origin) else origin
+        self.origins.pop(name, None)
+        for prefix in self.namespace.exports(name):
+            self.namespace.unregister(prefix)
 
     def locate(self, path: str) -> Optional[Origin]:
         """Find the origin that holds ``path``.
@@ -87,6 +101,10 @@ class RedirectorGroup:
     def subscribe(self, origin: Origin) -> None:
         for r in self.members:
             r.subscribe(origin)
+
+    def unsubscribe(self, origin: Union[Origin, str]) -> None:
+        for r in self.members:
+            r.unsubscribe(origin)
 
     def locate(self, path: str) -> Optional[Origin]:
         for attempt in range(len(self.members)):

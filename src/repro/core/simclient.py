@@ -82,7 +82,8 @@ class SimStashClient:
                  hedge_after: Optional[float] = None,
                  max_attempts: int = 4,
                  rank_limit: Optional[int] = 8,
-                 router: str = "ring") -> None:
+                 router: str = "ring",
+                 redirectors=None) -> None:
         if router not in ("ring", "modulo"):
             raise ValueError(f"unknown router {router!r}")
         self.sim = sim
@@ -94,6 +95,11 @@ class SimStashClient:
         self.max_attempts = max_attempts
         self.rank_limit = rank_limit
         self.router = router
+        # Namespace-first path resolution: with a RedirectorGroup the
+        # owning origin comes from longest-prefix match over the global
+        # namespace (multi-origin federations); ``origin`` is only the
+        # fallback when no export claims the path.
+        self.redirectors = redirectors
 
     @property
     def node_name(self) -> str:
@@ -120,9 +126,22 @@ class SimStashClient:
         return self.client._ranked_caches(path=path, exclude=exclude,
                                           limit=self.rank_limit)
 
+    def _owner(self, path: str) -> Origin:
+        """The origin serving ``path`` — resolved through the
+        redirectors' namespace (longest-prefix), not a held reference."""
+        if self.redirectors is not None:
+            try:
+                origin = self.redirectors.locate(path)
+            except ConnectionError:
+                origin = None
+            if origin is not None:
+                return origin
+        return self.origin
+
     def _meta(self, path: str) -> Optional[ObjectMeta]:
-        if path in self.origin.store:
-            return self.origin.meta(path)
+        owner = self._owner(path)
+        if path in owner.store:
+            return owner.meta(path)
         return self.client._meta(path)
 
     # -- the download coroutine ---------------------------------------------
@@ -136,8 +155,12 @@ class SimStashClient:
         t0 = sim.t
         self.stats.copies += 1
         yield sim.delay(self.client.geoip.lookup_latency)
+        # One namespace resolution per download: every fetch arm (and
+        # the blackout fallback) pulls from the same resolved owner.
+        owner = self._owner(path)
         if meta is None:
-            meta = self._meta(path)
+            meta = (owner.meta(path) if path in owner.store
+                    else self.client._meta(path))
         if meta is None:
             raise FileNotFoundError(path)
         failovers = 0
@@ -151,7 +174,7 @@ class SimStashClient:
                 continue
             attempts += 1
             if self.hedge_after is None:
-                status = yield from self._fetch_chunks(cache, meta)
+                status = yield from self._fetch_chunks(cache, meta, owner)
                 if status is None or not cache.available:
                     # died mid-pull: the key remaps down the ring chain
                     failovers += 1
@@ -161,7 +184,8 @@ class SimStashClient:
                 outcome = {"winner": cache.name, "status": status,
                            "hedged": False}
             else:
-                outcome = yield from self._hedged_attempt(cache, meta)
+                outcome = yield from self._hedged_attempt(cache, meta,
+                                                          owner)
                 if outcome["winner"] is None:
                     failovers += 1
                     self.stats.cache_failovers += 1
@@ -178,25 +202,25 @@ class SimStashClient:
         # Every ranked cache is dead (or attempts exhausted): the
         # federation degrades to the WAN-saturating direct pull.
         self.stats.origin_fallbacks += 1
-        yield sim.flow(self.origin.node.name, self.node_name, meta.size,
+        yield sim.flow(owner.node.name, self.node_name, meta.size,
                        streams=self.streams)
-        self.origin.stats.egress_bytes += meta.size
+        owner.stats.egress_bytes += meta.size
         if result is not None:
             result.seconds = sim.t - t0
             result.start = t0
             result.cache_hit = False
-            result.source = self.origin.name
+            result.source = owner.name
             result.failovers = failovers
             result.method = "origin-direct"
 
-    def _fetch_chunks(self, cache: CacheServer,
-                      meta: ObjectMeta) -> Generator:
+    def _fetch_chunks(self, cache: CacheServer, meta: ObjectMeta,
+                      owner: Origin) -> Generator:
         """Shared collapsed-forwarding fetch (see
-        :func:`~repro.core.simulator.fetch_chunks`), with this client's
-        origin passed through so its egress counters see the pull."""
+        :func:`~repro.core.simulator.fetch_chunks`), pulling from the
+        namespace-resolved owner so its egress counters see the pull."""
         status = yield from fetch_chunks(
-            self.sim, cache, meta, self.origin.node.name,
-            self.redirector_node, origin=self.origin)
+            self.sim, cache, meta, owner.node.name,
+            self.redirector_node, origin=owner)
         return status
 
     def _serve_flow(self, cache: CacheServer, meta: ObjectMeta) -> Generator:
@@ -206,12 +230,13 @@ class SimStashClient:
         cache.stats.bytes_served += meta.size
 
     def _attempt_arm(self, cache: CacheServer, meta: ObjectMeta,
-                     outcome: Dict, done: Event) -> Generator:
+                     owner: Origin, outcome: Dict,
+                     done: Event) -> Generator:
         """One arm of a (possibly hedged) attempt: full fetch through
         ``cache`` (origin pull included) then serve.  Signals ``done``
         whether it won, lost, or failed; a losing arm's bytes still
         move — hedging is modeled as load, not magic."""
-        status = yield from self._fetch_chunks(cache, meta)
+        status = yield from self._fetch_chunks(cache, meta, owner)
         if status is not None and cache.available:
             yield from self._serve_flow(cache, meta)
             if outcome["winner"] is None:
@@ -219,8 +244,8 @@ class SimStashClient:
                 outcome["status"] = status
         done.set()
 
-    def _hedged_attempt(self, cache: CacheServer,
-                        meta: ObjectMeta) -> Generator:
+    def _hedged_attempt(self, cache: CacheServer, meta: ObjectMeta,
+                        owner: Origin) -> Generator:
         """Timer race over the whole per-cache attempt: if ``cache``
         hasn't delivered within ``hedge_after`` seconds — origin pull
         and serve included, that's where stragglers come from — a
@@ -229,7 +254,8 @@ class SimStashClient:
         sim = self.sim
         outcome: Dict = {"winner": None, "status": None, "hedged": False}
         primary_done = sim.event()
-        sim.spawn(self._attempt_arm(cache, meta, outcome, primary_done))
+        sim.spawn(self._attempt_arm(cache, meta, owner, outcome,
+                                    primary_done))
         timer = sim.event()
 
         def alarm() -> Generator:
@@ -248,7 +274,7 @@ class SimStashClient:
                 outcome["hedged"] = True
                 self.stats.hedged_fetches += 1
                 backup_done = sim.event()
-                sim.spawn(self._attempt_arm(backup, meta, outcome,
+                sim.spawn(self._attempt_arm(backup, meta, owner, outcome,
                                             backup_done))
                 pending.append(backup_done)
         pending = [ev for ev in pending if not ev.is_set]
@@ -333,25 +359,69 @@ class OutageSchedule:
         return OutageSchedule(ev)
 
 
+def apply_outage(fed: Federation, ev: OutageEvent,
+                 group_of: Optional[Dict[str, "object"]] = None) -> None:
+    """Apply one liveness transition to a federation.
+
+    Group members go through :meth:`~repro.core.ring.CacheGroup.mark_down`
+    / ``mark_up`` so group stats track the storm; stray caches toggle
+    ``available`` directly (cold recoveries wipe storage).  Shared by the
+    simulated engine's outage controller and the analytic engine's
+    request-time replay, so both planes agree on what an
+    :class:`OutageSchedule` means.
+    """
+    if group_of is None:
+        group_of = {c.name: g for g in fed.groups.values()
+                    for c in g.members}
+    group = group_of.get(ev.cache)
+    if group is not None:
+        if ev.action == "down":
+            group.mark_down(ev.cache)
+        else:
+            group.mark_up(ev.cache, cold=ev.cold)
+        return
+    cache = fed.caches[ev.cache]
+    if ev.action == "down":
+        cache.available = False
+    else:
+        if ev.cold:
+            cache.clear()
+        cache.available = True
+
+
 # ---------------------------------------------------------------------------
 # Scenario engine: trace replay under contention + outages
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class ScenarioReport:
-    """What one replay produced, for benches and tests."""
+    """What one scenario produced, for benches and tests.
 
-    results: List[DownloadResult]
-    sim_seconds: float
-    reallocations: int
-    flow_events: int
-    completed_flows: int
-    cache_failovers: int
-    hedged_fetches: int
-    origin_fallbacks: int
-    group_failovers: int
-    outages: int
-    recoveries: int
-    origin_egress_bytes: int
+    The one report type for *both* execution planes: per-request rows
+    (``DownloadResult`` from :meth:`ScenarioEngine.replay`,
+    :class:`~repro.core.api.FetchResult` from
+    :func:`~repro.core.api.run_scenario` — both carry ``seconds`` /
+    ``cache_hit``) plus federation-level aggregates.  The simulator's
+    event-loop telemetry (``reallocations`` / ``flow_events`` /
+    ``completed_flows``) is zeroed on the analytic engine.
+    """
+
+    name: str = ""
+    engine: str = "sim"
+    results: List = dataclasses.field(default_factory=list)
+    sim_seconds: float = 0.0
+    bytes_moved: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    origin_egress_bytes: int = 0
+    cache_failovers: int = 0
+    hedged_fetches: int = 0
+    origin_fallbacks: int = 0
+    group_failovers: int = 0
+    outages: int = 0
+    recoveries: int = 0
+    reallocations: int = 0
+    flow_events: int = 0
+    completed_flows: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -375,6 +445,8 @@ class ScenarioReport:
     def summary(self) -> Dict:
         done = [r.seconds for r in self.results if r.seconds > 0]
         return {
+            "name": self.name,
+            "engine": self.engine,
             "requests": len(self.results),
             "completed": len(done),
             "sim_seconds": self.sim_seconds,
@@ -382,6 +454,9 @@ class ScenarioReport:
             "mean_seconds": sum(done) / len(done) if done else 0.0,
             "p50_seconds": self.seconds_percentile(50),
             "p95_seconds": self.seconds_percentile(95),
+            "bytes_moved": self.bytes_moved,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
             "cache_failovers": self.cache_failovers,
             "hedged_fetches": self.hedged_fetches,
             "origin_fallbacks": self.origin_fallbacks,
@@ -426,26 +501,13 @@ class ScenarioEngine:
                 self.fed.origins[0], self.redirector_node,
                 streams=self.streams, hedge_after=self.hedge_after,
                 max_attempts=self.max_attempts, rank_limit=self.rank_limit,
-                router=self.router)
+                router=self.router, redirectors=self.fed.redirectors)
             self._clients[key] = sc
         return sc
 
     # -- outages ------------------------------------------------------------
     def apply_outage(self, ev: OutageEvent) -> None:
-        group = self._group_of.get(ev.cache)
-        if group is not None:
-            if ev.action == "down":
-                group.mark_down(ev.cache)
-            else:
-                group.mark_up(ev.cache, cold=ev.cold)
-            return
-        cache = self.fed.caches[ev.cache]
-        if ev.action == "down":
-            cache.available = False
-        else:
-            if ev.cold:
-                cache.clear()
-            cache.available = True
+        apply_outage(self.fed, ev, group_of=self._group_of)
 
     def _outage_controller(self, schedule: OutageSchedule) -> Generator:
         for ev in schedule:
@@ -471,12 +533,25 @@ class ScenarioEngine:
         self.sim.run()
         return self.report(results)
 
-    def report(self, results: List[DownloadResult]) -> ScenarioReport:
+    def report(self, results: List[DownloadResult],
+               name: str = "") -> ScenarioReport:
         cstats = [sc.stats for sc in self._clients.values()]
         gstats = [g.stats for g in self.fed.groups.values()]
+        # Rows may be DownloadResult (no per-row byte counter: a
+        # completed download moved its whole object) or FetchResult
+        # (carries ``bytes`` directly).
+        bytes_moved = sum(
+            getattr(r, "bytes", 0) or (r.size if r.seconds > 0 else 0)
+            for r in results)
         return ScenarioReport(
+            name=name,
+            engine="sim",
             results=results,
             sim_seconds=self.sim.t,
+            bytes_moved=bytes_moved,
+            cache_hits=sum(c.stats.hits for c in self.fed.caches.values()),
+            cache_misses=sum(c.stats.misses
+                             for c in self.fed.caches.values()),
             reallocations=self.sim.reallocations,
             flow_events=self.sim.flow_events,
             completed_flows=self.sim.completed_flows,

@@ -1,0 +1,131 @@
+"""Namespace edge cases the data plane's namespace-first routing
+depends on (paper §3): nested prefixes, normalization, unregister,
+longest-prefix ties — plus redirector unsubscribe semantics."""
+import pytest
+
+from repro.core import (Coord, Namespace, Origin, Redirector,
+                        RedirectorGroup, Topology)
+
+
+def _node(topo, name, site="s"):
+    return topo.add_node(name, Coord(site, rack=255, host=0), 1e9)
+
+
+class TestNamespaceResolution:
+    def test_nested_prefixes_longest_wins(self):
+        ns = Namespace()
+        ns.register("/a", "o1")
+        ns.register("/a/b", "o2")
+        assert ns.resolve("/a/x") == "o1"
+        assert ns.resolve("/a/b") == "o2"
+        assert ns.resolve("/a/b/file") == "o2"
+        assert ns.resolve("/a/bc") == "o1"  # /a/b must not match /a/bc
+        assert ns.resolve("/a") == "o1"
+
+    def test_root_export_is_fallback(self):
+        ns = Namespace()
+        ns.register("/", "root")
+        ns.register("/ligo", "ligo")
+        assert ns.resolve("/anything/else") == "root"
+        assert ns.resolve("/ligo/frames") == "ligo"
+
+    def test_trailing_slash_and_doubled_separators_normalize(self):
+        ns = Namespace()
+        ns.register("/a/b/", "o1")
+        assert ns.resolve("/a/b") == "o1"
+        assert ns.resolve("/a//b/c") == "o1"
+        assert ns.resolve("a/b/c") == "o1"   # missing leading slash
+        # the normalized form is what exports() reports
+        assert ns.exports("o1") == ["/a/b"]
+
+    def test_unregister_then_resolve(self):
+        ns = Namespace()
+        ns.register("/a", "o1")
+        ns.register("/a/b", "o2")
+        ns.unregister("/a/b")
+        assert ns.resolve("/a/b/file") == "o1"  # falls back to the parent
+        ns.unregister("/a")
+        assert ns.resolve("/a/b/file") is None
+        # unregistering accepts the unnormalized spelling too
+        ns.register("/c/d", "o3")
+        ns.unregister("/c/d/")
+        assert ns.resolve("/c/d/x") is None
+
+    def test_longest_prefix_tie_is_same_prefix_conflict(self):
+        """Two same-length matching prefixes are necessarily the *same*
+        normalized prefix — and a second owner for it must be rejected,
+        not silently shadowed."""
+        ns = Namespace()
+        ns.register("/a/b", "o1")
+        with pytest.raises(ValueError):
+            ns.register("/a/b/", "o2")   # normalizes to the same prefix
+        # re-registering the same owner is idempotent
+        ns.register("/a/b", "o1")
+        assert ns.resolve("/a/b/x") == "o1"
+
+    def test_sibling_prefixes_do_not_tie(self):
+        ns = Namespace()
+        ns.register("/aa", "o1")
+        ns.register("/ab", "o2")
+        assert ns.resolve("/aa/x") == "o1"
+        assert ns.resolve("/ab/x") == "o2"
+        assert ns.resolve("/ac/x") is None
+
+
+class TestRedirectorUnsubscribe:
+    def _fed_pieces(self):
+        topo = Topology()
+        topo.add_site("s")
+        r = Redirector("r1", _node(topo, "s/r1"))
+        o1 = Origin("o1", _node(topo, "s/o1"), exports=("/exp1",))
+        o2 = Origin("o2", _node(topo, "s/o2"), exports=("/exp1/nested",))
+        return topo, r, o1, o2
+
+    def test_unsubscribe_removes_prefixes_and_origin(self):
+        _, r, o1, o2 = self._fed_pieces()
+        r.subscribe(o1)
+        r.subscribe(o2)
+        o2.put_object("/exp1/nested/f", 100)
+        o1.put_object("/exp1/g", 100)
+        assert r.locate("/exp1/nested/f") is o2
+        r.unsubscribe(o2)
+        # no dangling prefix: resolution falls back to the parent export
+        assert r.namespace.resolve("/exp1/nested/f") == "o1"
+        assert r.locate("/exp1/g") is o1
+        assert "o2" not in r.origins
+
+    def test_unsubscribe_by_name_and_unknown_is_noop(self):
+        _, r, o1, _ = self._fed_pieces()
+        r.subscribe(o1)
+        r.unsubscribe("o1")
+        assert r.namespace.resolve("/exp1/x") is None
+        r.unsubscribe("never-subscribed")  # must not raise
+
+    def test_group_passthrough(self):
+        topo = Topology()
+        topo.add_site("s")
+        r1 = Redirector("r1", _node(topo, "s/r1"))
+        r2 = Redirector("r2", _node(topo, "s/r2"))
+        group = RedirectorGroup([r1, r2])
+        o = Origin("o1", _node(topo, "s/o1"), exports=("/exp",))
+        group.subscribe(o)
+        assert r1.namespace.resolve("/exp/f") == "o1"
+        assert r2.namespace.resolve("/exp/f") == "o1"
+        group.unsubscribe(o)
+        for r in (r1, r2):
+            assert r.namespace.resolve("/exp/f") is None
+            assert "o1" not in r.origins
+
+    def test_locate_no_longer_polls_dead_owner(self):
+        """The motivating bug: a retired origin's dangling prefix made
+        locate poll it forever.  After unsubscribe, its poll counter
+        stays flat."""
+        _, r, o1, o2 = self._fed_pieces()
+        r.subscribe(o1)
+        r.subscribe(o2)
+        o1.put_object("/exp1/g", 100)
+        r.unsubscribe(o2)
+        before = o2.stats.locate_queries
+        for _ in range(5):
+            r.locate("/exp1/nested/ghost")
+        assert o2.stats.locate_queries == before

@@ -296,6 +296,40 @@ class TestSimAccountingFixes:
         assert lc.usage_bytes == 60
         assert lc.usage_bytes <= lc.capacity_bytes
 
+    def test_local_cache_put_replaces_stale_payload(self):
+        """A re-fetched chunk with different content must replace the
+        resident payload and account the size delta — the old code only
+        move_to_end'd the stale entry and returned."""
+        lc = LocalCache(capacity_bytes=100)
+        lc.put("/a", 0, Payload.synthetic(40, "/a", 0))
+        fresh = Payload.from_bytes(b"\x01" * 60)
+        lc.put("/a", 0, fresh)
+        assert lc.get("/a", 0) is fresh
+        assert lc.usage_bytes == 60
+        # shrinking replacement adjusts usage downward too
+        lc.put("/a", 0, Payload.synthetic(10, "/a", 0))
+        assert lc.usage_bytes == 10
+
+    def test_local_cache_replacement_evicts_to_fit(self):
+        lc = LocalCache(capacity_bytes=100)
+        lc.put("/a", 0, Payload.synthetic(50, "/a", 0))
+        lc.put("/b", 0, Payload.synthetic(40, "/b", 0))
+        # replacing /a with a bigger payload must evict /b (LRU), not
+        # double-count /a's old size.
+        lc.put("/a", 0, Payload.synthetic(90, "/a", 0))
+        assert lc.get("/b", 0) is None
+        assert lc.usage_bytes == 90
+        assert lc.usage_bytes <= lc.capacity_bytes
+
+    def test_local_cache_oversize_replacement_drops_stale(self):
+        """If the replacement itself can never fit, the superseded stale
+        payload must not survive either."""
+        lc = LocalCache(capacity_bytes=100)
+        lc.put("/a", 0, Payload.synthetic(40, "/a", 0))
+        lc.put("/a", 0, Payload.synthetic(500, "/a", 0))
+        assert lc.get("/a", 0) is None
+        assert lc.usage_bytes == 0
+
     def test_proxy_miss_counts_origin_egress(self):
         fed = build_osg_federation()
         origin = fed.origins[0]
