@@ -32,6 +32,7 @@ from repro.core import (CacheGroup, CacheServer, Coord, FluidFlowSim,
                         stash_download)
 
 ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACT_FILES = ('fleet_scale.json',)
 GB = 1e9
 
 

@@ -38,6 +38,7 @@ from repro.core import (FederationSpec, OutageSchedule, ScenarioSpec,
                         WorkloadSpec, run_scenario, storm_workload)
 
 ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACT_FILES = ('outage_storm.json',)
 GB = 1e9
 
 

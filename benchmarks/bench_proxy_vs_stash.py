@@ -28,6 +28,7 @@ from repro.core import (FederationSpec, FetchRequest, PAPER_TABLE3,
                         ScenarioSpec, evaluation_fileset, run_scenario)
 
 ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACT_FILES = ('proxy_vs_stash.json',)
 
 PHASES = ("proxy_cold", "proxy_warm", "stash_cold", "stash_warm")
 

@@ -24,6 +24,7 @@ from repro.core import (FederationSpec, FetchResult, ScenarioSpec,
                         WorkloadSpec, run_scenario)
 
 ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACT_FILES = ('restart_storm.json',)
 
 CKPT_PATH = "/ckpt/run1/step_00001000/params.npy"
 

@@ -34,6 +34,7 @@ HBM_BW = 819e9               # bytes/s per chip
 LINK_BW = 50e9               # bytes/s per ICI link
 
 ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACT_FILES = ('roofline.json',)
 DRYRUN = ARTIFACTS / "dryrun"
 
 

@@ -1,0 +1,151 @@
+"""Batched scenario sweeps: hundreds of ScenarioSpecs per solve.
+
+The paper's claims hold across a *space* of federations — cache replica
+counts, Zipf skews, outage rates — and this bench measures how fast we
+can traverse that space.  One :class:`~repro.core.api.SweepSpec` (a
+ScenarioSpec template × parameter axes) runs twice:
+
+* **serial** — one :func:`~repro.core.api.run_scenario` per cell, a
+  fresh federation and the full per-request client machinery each time
+  (the pre-sweep baseline);
+* **batched** — :func:`~repro.core.api.run_sweep`: pristine federations
+  shared across same-spec cells, numpy first-occurrence hit/miss and
+  egress accounting, and every cell's storm-counterfactual flow problem
+  priced by the pow2-bucketed, vmapped max-min kernel
+  (``repro.kernels.batched_maxmin``) in a handful of jitted calls.
+
+Every cell's ``bytes_moved`` / ``cache_hits`` / ``cache_misses`` /
+``origin_egress_bytes`` must be identical between the two executions —
+the artifact records the parity check, and ``tests/test_sweep.py``
+asserts it independently.
+
+**Artifact** ``artifacts/sweep.json`` (see docs/BENCHMARKS.md): cell and
+axis inventory, wall-clock for both executions, ``speedup`` (the CI
+regression gate holds this ≥ 3× within tolerance), the batched solver
+telemetry (``solve_calls`` per sweep — the "one jitted call prices a
+column" claim), the parity section, and per-axis marginal tables built
+by :class:`~repro.core.monitoring.SweepAggregator`.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import (FederationSpec, ScenarioSpec, SweepAggregator,
+                        SweepSpec, WorkloadSpec, run_sweep)
+
+ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACT_FILES = ("sweep.json",)
+
+PARITY_KEYS = ("bytes_moved", "cache_hits", "cache_misses",
+               "origin_egress_bytes")
+
+
+def sweep_spec(quick: bool = False) -> SweepSpec:
+    """The benchmark sweep: 216 cells (16 quick) over
+    ``cache_replicas × zipf_a × seed × outage_rate``."""
+    base = ScenarioSpec(
+        name="sweep", engine="analytic",
+        federation=FederationSpec.fleet(num_pods=2, hosts_per_pod=2),
+        workload=WorkloadSpec(kind="zipf",
+                              n_requests=30 if quick else 60,
+                              working_set=16, duration=600.0))
+    if quick:
+        axes = {
+            "federation.cache_replicas": [1, 2],
+            "workload.zipf_a": [0.9, 1.3],
+            "workload.seed": [0, 1],
+            "outage_rate": [0.0, 0.5],
+        }
+    else:
+        axes = {
+            "federation.cache_replicas": [1, 2, 3],
+            "workload.zipf_a": [0.7, 0.9, 1.1, 1.3, 1.5, 1.7],
+            "workload.seed": [0, 1, 2, 3],
+            "outage_rate": [0.0, 0.25, 0.5],
+        }
+    return SweepSpec(name="sweep", base=base, axes=axes)
+
+
+def run(quick: bool = False, verbose: bool = False):
+    spec = sweep_spec(quick=quick)
+    n_cells = len(spec)
+
+    t0 = time.perf_counter()
+    batched = run_sweep(spec, batched=True)
+    t_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    serial = run_sweep(spec, batched=False, price_contention=False)
+    t_serial = time.perf_counter() - t0
+
+    mismatches = []
+    for cb, cs in zip(batched.cells, serial.cells):
+        for k in PARITY_KEYS:
+            if cb.summary[k] != cs.summary[k]:
+                mismatches.append({"params": cb.params, "key": k,
+                                   "batched": cb.summary[k],
+                                   "serial": cs.summary[k]})
+    speedup = t_serial / max(t_batched, 1e-9)
+
+    agg = SweepAggregator()
+    for cell in batched.cells:
+        agg.add(cell.params, cell.summary)
+    marginals = {
+        axis: [list(row) for row in agg.marginal(axis, "hit_rate")]
+        for axis in spec.axes
+    }
+
+    sample = batched.cells[0]
+    ARTIFACTS.mkdir(exist_ok=True, parents=True)
+    (ARTIFACTS / "sweep.json").write_text(json.dumps({
+        "cells": n_cells,
+        "quick": quick,
+        "axes": {k: list(v) for k, v in spec.axes.items()},
+        "batched": {
+            "wall_seconds": t_batched,
+            "batched_cells": batched.batched_cells,
+            "serial_cells": batched.serial_cells,
+            "solver": batched.solver,
+        },
+        "serial": {"wall_seconds": t_serial},
+        "speedup": speedup,
+        "parity": {"checked_cells": len(batched.cells),
+                   "keys": list(PARITY_KEYS),
+                   "mismatches": mismatches},
+        "marginals_hit_rate": marginals,
+        "sample_cell": {"params": sample.params,
+                        "summary": sample.summary,
+                        "pricing": sample.pricing},
+    }, indent=1))
+
+    if mismatches:
+        raise AssertionError(
+            f"batched/serial sweep parity broke on {len(mismatches)} "
+            f"cells: {mismatches[:3]}")
+
+    if verbose:
+        print(f"  {n_cells} cells: batched {t_batched:.2f}s "
+              f"(solve_calls={batched.solver.get('solve_calls')}) vs "
+              f"serial {t_serial:.2f}s -> {speedup:.1f}x")
+        for v, cells, mean, lo, hi in agg.marginal("workload.zipf_a",
+                                                   "hit_rate"):
+            print(f"  zipf_a={v}: hit_rate mean {mean:.3f} "
+                  f"[{lo:.3f}, {hi:.3f}] over {cells} cells")
+
+    solve_calls = int(batched.solver.get("solve_calls", 0))
+    return [
+        ("sweep.batched", t_batched * 1e6,
+         f"cells={n_cells},speedup={speedup:.1f}x"),
+        ("sweep.serial", t_serial * 1e6, f"cells={n_cells}"),
+        ("sweep.solver_calls", float(solve_calls),
+         f"priced_cells={batched.solver.get('priced_cells', 0)}"),
+        ("sweep.parity", float(len(mismatches)),
+         f"checked={len(batched.cells)},keys={len(PARITY_KEYS)}"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(verbose=True):
+        print(f"{name},{us:.1f},{derived}")

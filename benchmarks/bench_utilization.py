@@ -18,6 +18,7 @@ from repro.core import (USAGE_BY_EXPERIMENT, build_osg_federation,
                         generate_workload)
 
 ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACT_FILES = ('utilization.json',)
 
 
 def run(n_requests: int = 300, verbose: bool = False):

@@ -17,6 +17,7 @@ from repro.core import (FluidFlowSim, PercentileSampler,
                         stash_download)
 
 ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACT_FILES = ('wan_offload.json',)
 
 
 def run(workers: int = 16, files: int = 24, reuse: int = 9,

@@ -1,0 +1,183 @@
+"""CI perf regression gate: current bench artifacts vs committed baseline.
+
+``baseline.json`` records the metrics the fleet has already won — the
+sweep's batched-vs-serial speedup, the batched waterfill's solve count,
+the outage-storm solve coalescing — with a direction and a tolerance
+per metric.  This script re-derives the same metrics from the artifacts
+a fresh bench run just wrote (``benchmarks/artifacts/*.json``), prints a
+readable diff, and exits non-zero when any metric regressed past its
+tolerance (default: 25%) or fell through its hard floor.
+
+  PYTHONPATH=src python -m benchmarks.check_regression           # gate
+  PYTHONPATH=src python -m benchmarks.check_regression --update  # re-baseline
+
+Metric semantics:
+
+* ``direction: "min"`` — bigger is better; fail when
+  ``current < value * (1 - tolerance)`` (or ``< floor``, if set).
+* ``direction: "max"`` — smaller is better; fail when
+  ``current > value * (1 + tolerance)`` (or ``> ceiling``, if set).
+
+A metric whose artifact is missing fails the gate: the harness deletes
+a failed bench's artifacts precisely so stale numbers cannot pass here.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Tuple
+
+HERE = Path(__file__).parent
+BASELINE = HERE / "baseline.json"
+ARTIFACTS = HERE / "artifacts"
+
+DEFAULT_TOLERANCE = 0.25
+
+# metric name -> (artifact file, extractor)
+EXTRACTORS: Dict[str, Tuple[str, Callable[[dict], float]]] = {
+    "sweep_speedup": ("sweep.json", lambda a: a["speedup"]),
+    "sweep_cells": ("sweep.json", lambda a: a["cells"]),
+    "sweep_batched_cells": (
+        "sweep.json", lambda a: a["batched"]["batched_cells"]),
+    "sweep_solve_calls": (
+        "sweep.json", lambda a: a["batched"]["solver"]["solve_calls"]),
+    "sweep_parity_mismatches": (
+        "sweep.json", lambda a: len(a["parity"]["mismatches"])),
+    "storm_coalescing_ratio": (
+        "outage_storm.json", lambda a: a["storm"]["coalescing_ratio"]),
+    "storm_reallocations": (
+        "outage_storm.json", lambda a: a["storm"]["reallocations"]),
+}
+
+
+def current_metrics(artifacts: Path = ARTIFACTS) -> Dict[str, float]:
+    """Extract every known metric whose artifact exists."""
+    cache: Dict[str, Optional[dict]] = {}
+    out: Dict[str, float] = {}
+    for name, (fname, extract) in EXTRACTORS.items():
+        if fname not in cache:
+            path = artifacts / fname
+            cache[fname] = (json.loads(path.read_text())
+                            if path.exists() else None)
+        art = cache[fname]
+        if art is not None:
+            out[name] = float(extract(art))
+    return out
+
+
+def compare(baseline: Dict, current: Dict[str, float]
+            ) -> Tuple[List[str], List[tuple]]:
+    """Evaluate every baseline metric against the current run.
+
+    Returns ``(failures, rows)`` where rows are
+    ``(metric, baseline, current, bound, verdict)`` for the diff table.
+    """
+    failures: List[str] = []
+    rows: List[tuple] = []
+    for name, spec in baseline["metrics"].items():
+        base = float(spec["value"])
+        direction = spec.get("direction", "min")
+        tol = float(spec.get("tolerance", DEFAULT_TOLERANCE))
+        cur = current.get(name)
+        if cur is None:
+            fname = EXTRACTORS.get(name, ("<unknown>",))[0]
+            failures.append(f"{name}: no current value "
+                            f"(artifact {fname} missing or stale-discarded)")
+            rows.append((name, base, None, None, "MISSING"))
+            continue
+        if direction == "min":
+            bound = base * (1.0 - tol)
+            floor = spec.get("floor")
+            if floor is not None:
+                bound = max(bound, float(floor))
+            ok = cur >= bound
+            verdict = "ok" if ok else "REGRESSED"
+            if not ok:
+                failures.append(
+                    f"{name}: {cur:.4g} < allowed minimum {bound:.4g} "
+                    f"(baseline {base:.4g}, tolerance {tol:.0%}"
+                    + (f", floor {floor}" if floor is not None else "")
+                    + ")")
+        else:
+            bound = base * (1.0 + tol)
+            ceiling = spec.get("ceiling")
+            if ceiling is not None:
+                bound = min(bound, float(ceiling))
+            ok = cur <= bound
+            verdict = "ok" if ok else "REGRESSED"
+            if not ok:
+                failures.append(
+                    f"{name}: {cur:.4g} > allowed maximum {bound:.4g} "
+                    f"(baseline {base:.4g}, tolerance {tol:.0%}"
+                    + (f", ceiling {ceiling}" if ceiling is not None else "")
+                    + ")")
+        rows.append((name, base, cur, bound, verdict))
+    return failures, rows
+
+
+def format_table(rows: List[tuple]) -> str:
+    header = f"{'metric':<28} {'baseline':>12} {'current':>12} " \
+             f"{'bound':>12}  verdict"
+    lines = [header, "-" * len(header)]
+    for name, base, cur, bound, verdict in rows:
+        cur_s = f"{cur:>12.4g}" if cur is not None else f"{'--':>12}"
+        bound_s = f"{bound:>12.4g}" if bound is not None else f"{'--':>12}"
+        lines.append(f"{name:<28} {base:>12.4g} {cur_s} {bound_s}  {verdict}")
+    return "\n".join(lines)
+
+
+def update_baseline(baseline: Dict, current: Dict[str, float],
+                    path: Path = BASELINE) -> List[str]:
+    """Rewrite every baseline value from ``current``.
+
+    Refuses (writes nothing, returns the missing names) when any gated
+    metric has no current value — a partial update would silently keep
+    values from an unknown earlier run, which is exactly the staleness
+    the artifact-discard machinery exists to prevent."""
+    missing = [name for name in baseline["metrics"] if name not in current]
+    if missing:
+        return missing
+    for name, spec in baseline["metrics"].items():
+        spec["value"] = current[name]
+    path.write_text(json.dumps(baseline, indent=1) + "\n")
+    return []
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.check_regression",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", type=Path, default=BASELINE)
+    ap.add_argument("--artifacts", type=Path, default=ARTIFACTS)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline's values from the current "
+                         "artifacts instead of gating")
+    args = ap.parse_args(argv)
+    baseline = json.loads(args.baseline.read_text())
+    current = current_metrics(args.artifacts)
+    if args.update:
+        missing = update_baseline(baseline, current, args.baseline)
+        if missing:
+            print("baseline NOT updated — no current value for: "
+                  + ", ".join(missing)
+                  + " (rerun the gate-profile benches first)",
+                  file=sys.stderr)
+            return 1
+        print(f"baseline updated with {len(baseline['metrics'])} metrics")
+        return 0
+    failures, rows = compare(baseline, current)
+    print(format_table(rows))
+    if failures:
+        print(f"\n{len(failures)} metric(s) regressed past tolerance:",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(rows)} gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

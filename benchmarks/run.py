@@ -5,6 +5,13 @@ exposes ``run() -> [(name, us_per_call, derived), ...]`` is picked up
 (the old hard-coded import list silently skipped new benches).  Prints
 ``name,us_per_call,derived`` CSV rows.
 
+A module that raises makes the harness exit non-zero *and* discards the
+artifacts that module owns (its ``ARTIFACT_FILES`` names under
+``benchmarks/artifacts/``): a failing bench used to leave whatever
+artifact a previous run wrote — or a partial write — on disk, and the
+CI regression gate would happily diff stale numbers.  No artifact is
+better than a wrong one.
+
   python -m benchmarks.run                      # every bench
   python -m benchmarks.run --list               # discovered modules
   python -m benchmarks.run --only outage_storm  # substring/name select
@@ -16,6 +23,7 @@ exposes ``run() -> [(name, us_per_call, derived), ...]`` is picked up
   bench_restart_storm    fleet: checkpoint fan-in through pod caches
   bench_fleet_scale      fleet: 1000-site storm, churn, eviction policies
   bench_outage_storm     fleet: simulator-native clients under outage storms
+  bench_sweep            fleet: batched 216-cell scenario sweep vs serial
   bench_loader           fleet: federated training-data path
   bench_micro            federation hot-path micro-benchmarks
   bench_roofline         §Roofline terms from the dry-run artifacts
@@ -27,6 +35,7 @@ import importlib
 import pkgutil
 import sys
 import traceback
+from pathlib import Path
 from typing import Dict, List, Optional
 
 
@@ -36,6 +45,20 @@ def discover() -> Dict[str, object]:
     names = sorted(m.name for m in pkgutil.iter_modules(benchmarks.__path__)
                    if m.name.startswith("bench_"))
     return {n: importlib.import_module(f"benchmarks.{n}") for n in names}
+
+
+def discard_artifacts(mod: object) -> List[str]:
+    """Remove the artifacts a failed bench owns so no stale (or
+    truncated) JSON survives for downstream tooling to mistake for a
+    fresh result.  Modules declare ownership via ``ARTIFACT_FILES``."""
+    artifacts = Path(__file__).parent / "artifacts"
+    removed: List[str] = []
+    for name in getattr(mod, "ARTIFACT_FILES", ()):
+        path = artifacts / name
+        if path.exists():
+            path.unlink()
+            removed.append(name)
+    return removed
 
 
 def select(modules: Dict[str, object],
@@ -79,6 +102,10 @@ def main(argv: Optional[List[str]] = None) -> int:
             failed += 1
             print(f"{name},ERROR,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+            removed = discard_artifacts(mod)
+            if removed:
+                print(f"{name}: discarded stale artifacts "
+                      f"{', '.join(removed)}", file=sys.stderr)
     return 1 if failed else 0
 
 

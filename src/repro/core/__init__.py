@@ -13,7 +13,8 @@ restart-storm checkpoint distribution.
 """
 from .api import (AnalyticPlane, DataPlane, FetchRequest, FetchResult,
                   ScenarioReport, ScenarioSpec, SimulatedPlane, StatResult,
-                  WorkloadSpec, run_scenario)
+                  SweepCell, SweepReport, SweepSpec, WorkloadSpec,
+                  run_scenario, run_sweep)
 from .cache import CacheServer, CacheStats
 from .chunk import (DEFAULT_CHUNK_SIZE, ChunkRef, ObjectMeta, Payload,
                     chunk_object, fnv1a64, synthetic_object)
@@ -23,8 +24,8 @@ from .federation import (Federation, FederationSpec, SiteSpec,
                          OSG_SITE_PROFILES)
 from .indexer import Catalog, Indexer
 from .monitoring import (CacheUsagePacket, FileClose, FileOpen, MessageBus,
-                         MonitorCollector, TransferRecord, UsageAggregator,
-                         UserLogin, experiment_of)
+                         MonitorCollector, SweepAggregator, TransferRecord,
+                         UsageAggregator, UserLogin, experiment_of)
 from .namespace import Namespace
 from .origin import ChunkStore, Origin
 from .policies import (AdmissionPolicy, EVICTION_POLICIES, EvictionPolicy,
@@ -36,7 +37,8 @@ from .ring import CacheGroup, GroupStats, HashRing
 from .simclient import (OutageEvent, OutageSchedule, ScenarioEngine,
                         SimStashClient, apply_outage, first_of)
 from .simulator import (DownloadResult, FluidFlowSim, direct_download,
-                        fetch_chunks, proxy_download, stash_download)
+                        fetch_chunks, proxy_download, sparse_flow_problem,
+                        stash_download)
 from .topology import BandwidthProfile, Coord, GeoIPService, Link, Node, Topology
 from .transfer import NetworkModel, TransferStats
 from .workload import (FILESIZE_PERCENTILES, PAPER_TABLE3, PROBE_10GB,

@@ -38,14 +38,20 @@ and the CI smoke assert.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import math
+import time
 from typing import (Dict, Generator, List, Optional, Protocol, Sequence,
                     Tuple, Union, runtime_checkable)
 
+import numpy as np
+
 from .client import StashClient
-from .federation import Federation, FederationSpec
+from .federation import Federation, FederationSpec, SiteSpec
 from .simclient import (OutageSchedule, ScenarioEngine, ScenarioReport,
                         apply_outage)
-from .simulator import direct_download, proxy_download
+from .simulator import direct_download, proxy_download, sparse_flow_problem
+from .topology import Coord
 from .transfer import TransferStats
 from .workload import AccessRequest, generate_workload, storm_workload
 
@@ -614,3 +620,647 @@ def _report(spec: ScenarioSpec, fed: Federation, plane: DataPlane,
         outages=sum(s.outages for s in gstats),
         recoveries=sum(s.recoveries for s in gstats),
     )
+
+
+# ---------------------------------------------------------------------------
+# Batched scenario sweeps
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SweepSpec:
+    """A ScenarioSpec template crossed with parameter axes.
+
+    ``axes`` maps an axis name to its values; the sweep is the full
+    cross product in axis order (last axis fastest).  Axis names route
+    to the template:
+
+    * ``"workload.<field>"`` — a :class:`WorkloadSpec` field
+      (``zipf_a``, ``working_set``, ``n_requests``, ``seed``, ...);
+    * ``"federation.<field>"`` — a :class:`~repro.core.federation.
+      FederationSpec` field, or a :class:`~repro.core.federation.
+      SiteSpec` field (``cache_replicas``, ``cache_capacity``,
+      ``eviction_policy``, ``workers``, ...) applied to every matching
+      site;
+    * ``"outage_rate"`` — synthetic axis: that fraction of the
+      federation's caches cold-restarts mid-run (a
+      :meth:`~repro.core.simclient.OutageSchedule.restart_storm` at
+      half the workload horizon, down for a quarter of it);
+    * any other name — a :class:`ScenarioSpec` field (``engine``,
+      ``method``, ``streams``, ``router``, ...).
+
+    The spec is inert data, like :class:`ScenarioSpec`: the same sweep
+    runs batched (:func:`run_sweep`) or serially (one
+    :func:`run_scenario` per cell), which is what the parity tests
+    compare.
+    """
+
+    name: str
+    base: ScenarioSpec
+    axes: Dict[str, Sequence] = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        n = 1
+        for vals in self.axes.values():
+            n *= len(vals)
+        return n
+
+    def cells(self) -> List[Tuple[Dict[str, object], ScenarioSpec]]:
+        """Materialize every cell: ``(params, scenario)`` pairs in
+        cross-product order."""
+        names = list(self.axes)
+        out: List[Tuple[Dict[str, object], ScenarioSpec]] = []
+        for combo in itertools.product(*(self.axes[n] for n in names)):
+            params = dict(zip(names, combo))
+            spec = self.base
+            outage_rate = 0.0
+            for axis, value in params.items():
+                if axis == "outage_rate":
+                    outage_rate = float(value)
+                else:
+                    spec = _apply_axis(spec, axis, value)
+            if outage_rate > 0.0:
+                storm = _outage_storm_for(spec, outage_rate)
+                outages = (spec.outages.merge(storm)
+                           if spec.outages is not None else storm)
+                spec = dataclasses.replace(spec, outages=outages)
+            tag = ",".join(f"{k}={v}" for k, v in params.items())
+            spec = dataclasses.replace(
+                spec, name=f"{self.name}/{tag}" if tag else self.name)
+            out.append((params, spec))
+        return out
+
+
+_SCENARIO_FIELDS = {f.name for f in dataclasses.fields(ScenarioSpec)}
+
+
+def _apply_axis(spec: ScenarioSpec, axis: str, value) -> ScenarioSpec:
+    if axis.startswith("workload."):
+        field = axis[len("workload."):]
+        if not isinstance(spec.workload, WorkloadSpec):
+            raise ValueError(f"axis {axis!r} needs a WorkloadSpec workload")
+        if field not in {f.name for f in dataclasses.fields(WorkloadSpec)}:
+            raise ValueError(f"unknown workload axis {axis!r}")
+        return dataclasses.replace(
+            spec, workload=dataclasses.replace(spec.workload,
+                                               **{field: value}))
+    if axis.startswith("federation."):
+        field = axis[len("federation."):]
+        fed = spec.federation
+        fed_fields = {f.name for f in dataclasses.fields(FederationSpec)}
+        site_fields = {f.name for f in dataclasses.fields(SiteSpec)}
+        if field in fed_fields and field != "sites":
+            return dataclasses.replace(
+                spec, federation=dataclasses.replace(fed, **{field: value}))
+        if field not in site_fields or field == "name":
+            # "name" would rename every site identically — reject it
+            # like any other unsweepable axis rather than no-op.
+            raise ValueError(f"unknown federation axis {axis!r}")
+        # Site-level knob: apply to every site the field is meaningful
+        # for (cache knobs to cache-bearing sites, workers to
+        # worker-bearing ones), leaving pure-storage sites intact.
+        cache_knobs = field not in ("workers", "profile")
+        sites = [dataclasses.replace(s, **{field: value})
+                 if (s.has_cache if cache_knobs else s.workers > 0)
+                 else s
+                 for s in fed.sites]
+        return dataclasses.replace(
+            spec, federation=dataclasses.replace(fed, sites=sites))
+    if axis in _SCENARIO_FIELDS and axis not in ("name", "federation",
+                                                 "workload", "outages"):
+        return dataclasses.replace(spec, **{axis: value})
+    raise ValueError(f"unknown sweep axis {axis!r}")
+
+
+def _workload_horizon(workload) -> float:
+    if isinstance(workload, WorkloadSpec):
+        if workload.kind == "zipf":
+            return workload.duration
+        return workload.at + workload.jitter + 60.0
+    times = [r.at if isinstance(r, FetchRequest) else r.time
+             for r in workload]
+    return (max(times) if times else 0.0) + 60.0
+
+
+def _outage_storm_for(spec: ScenarioSpec, rate: float) -> OutageSchedule:
+    caches = spec.federation.cache_names()
+    k = min(len(caches), max(1, math.ceil(rate * len(caches))))
+    horizon = _workload_horizon(spec.workload)
+    return OutageSchedule.restart_storm(
+        caches[:k], at=0.5 * horizon, downtime=0.25 * horizon,
+        stagger=0.0, cold=True)
+
+
+@dataclasses.dataclass
+class SweepCell:
+    """One executed sweep cell: its parameter point, how it ran, and the
+    :meth:`~repro.core.simclient.ScenarioReport.summary` gauges (exactly
+    what a serial :func:`run_scenario` of the same cell reports — the
+    parity tests hold the two equal).  ``pricing`` carries the batched
+    max-min gauges for cells priced by the vmapped waterfill."""
+
+    params: Dict[str, object]
+    name: str
+    engine: str
+    executor: str                     # "batched" | "serial"
+    summary: Dict[str, object]
+    pricing: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class SweepReport:
+    """What :func:`run_sweep` produced: every cell plus execution
+    telemetry (how many cells took the vectorized path, how many jitted
+    waterfill calls priced the whole sweep)."""
+
+    name: str
+    axes: Dict[str, List]
+    cells: List[SweepCell]
+    wall_seconds: float = 0.0
+    batched_cells: int = 0
+    serial_cells: int = 0
+    solver: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    def cell(self, **params) -> SweepCell:
+        for c in self.cells:
+            if all(c.params.get(k) == v for k, v in params.items()):
+                return c
+        raise KeyError(f"no cell matches {params!r}")
+
+    def marginal(self, axis: str, metric: str) -> List[Tuple[object, float]]:
+        """Mean of ``metric`` per value of ``axis`` (cross-cell
+        aggregate, in axis-value order)."""
+        agg: Dict[object, List[float]] = {}
+        for c in self.cells:
+            agg.setdefault(c.params.get(axis), []).append(
+                float(c.summary.get(metric, 0.0)))
+        return [(v, sum(agg[v]) / len(agg[v]))
+                for v in self.axes.get(axis, sorted(agg))]
+
+    def summary(self) -> Dict:
+        return {
+            "name": self.name,
+            "cells": len(self.cells),
+            "axes": {k: list(v) for k, v in self.axes.items()},
+            "wall_seconds": self.wall_seconds,
+            "batched_cells": self.batched_cells,
+            "serial_cells": self.serial_cells,
+            "solver": dict(self.solver),
+        }
+
+
+def _sweep_batchable(spec: ScenarioSpec) -> bool:
+    """Static eligibility for the vectorized analytic executor."""
+    if spec.engine != "analytic":
+        return False
+    if spec.method not in ("stash", "direct"):
+        return False
+    if not isinstance(spec.workload, WorkloadSpec):
+        for r in spec.workload:
+            if isinstance(r, FetchRequest) and r.method not in ("stash",
+                                                                "direct"):
+                return False
+    for s in spec.federation.sites:
+        if s.has_cache and (s.eviction_policy != "lru"
+                            or s.admission_max_fraction < 1.0):
+            return False
+    return True
+
+
+class _SharedFederations:
+    """Pristine federations shared across same-spec sweep cells.
+
+    The vectorized executor never publishes objects or mutates cache
+    storage, so every cell with an equal :class:`FederationSpec` can
+    route against one built federation — and share its liveness-
+    independent ``(site, path) -> ranked cache names`` table, which is
+    the expensive part of analytic routing."""
+
+    def __init__(self) -> None:
+        self._entries: List[Tuple[FederationSpec, Federation, Dict]] = []
+
+    def get(self, spec: FederationSpec) -> Tuple[Federation, Dict]:
+        for known, fed, routes in self._entries:
+            if known == spec:
+                return fed, routes
+        fed = spec.build()
+        state: Dict = {"routes": {}, "clients": {}}
+        self._entries.append((spec, fed, state))
+        return fed, state
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+def _ranked_names(fed: Federation, state: Dict, site: str,
+                  path: str) -> List[str]:
+    key = (site, path)
+    chain = state["routes"].get(key)
+    if chain is None:
+        client = state["clients"].get(site)
+        if client is None:
+            client = state["clients"][site] = fed.client(site, 0)
+        chain = [c.name for c in client._ranked_caches(path=path)]
+        state["routes"][key] = chain
+    return chain
+
+
+def _worker_node(fed: Federation, site: str, worker: int) -> str:
+    """Ensure the worker node exists (mirrors ``Federation.client``
+    without paying for a StashClient)."""
+    name = f"{site}/worker{worker}"
+    if name not in fed.topology.nodes:
+        prof = fed.topology.profile(site)
+        fed.topology.add_node(name, Coord(site, rack=0, host=worker),
+                              prof.worker_nic)
+    return name
+
+
+def _run_cell_vectorized(spec: ScenarioSpec, fed: Federation, state: Dict):
+    """One analytic cell as numpy accounting instead of per-request
+    Python: first-occurrence hit/miss per (cache, path), closed-form
+    chunk timing, outage epochs at request boundaries — byte-exact
+    against a serial :func:`run_scenario` of the same cell.
+
+    Returns ``(ScenarioReport, (flow_specs, flow_bytes))`` or ``None``
+    when the cell leaves the vectorizable regime (cache working set
+    exceeding capacity, unresolvable namespace), in which case the
+    caller falls back to the serial executor.
+    """
+    reqs = spec.requests(fed)
+    n = len(reqs)
+    default_site = next((s.name for s in fed.sites if s.workers > 0),
+                        fed.sites[0].name)
+
+    # ---- request arrays (original order) -----------------------------------
+    path_ids: Dict[str, int] = {}
+    sizes: List[int] = []
+    pid = np.empty(n, np.int64)
+    at = np.empty(n, np.float64)
+    sites: List[str] = []
+    workers = np.empty(n, np.int64)
+    methods: List[str] = []
+    streams = np.empty(n, np.int64)
+    for i, r in enumerate(reqs):
+        p = path_ids.setdefault(r.path, len(path_ids))
+        if p == len(sizes):
+            sizes.append(0)
+        sizes[p] = max(sizes[p], r.size)
+        pid[i] = p
+        at[i] = r.at
+        sites.append(r.site or default_site)
+        workers[i] = r.worker
+        methods.append(r.method)
+        streams[i] = r.streams or spec.streams
+    P = len(path_ids)
+    paths = list(path_ids)
+    size = np.asarray(sizes, np.int64)
+    found = size > 0
+
+    owners: List[Optional[object]] = []
+    for p in range(P):
+        owner = fed.resolve_origin(paths[p])
+        if owner is None and found[p]:
+            return None  # serial run_scenario raises KeyError here
+        owners.append(owner)
+    # chunk count per path, from the owning origin's chunking (what a
+    # serial run_scenario's publish would have produced)
+    nchunks = np.asarray(
+        [-(-size[p] // owners[p].chunk_size) if found[p] else 1
+         for p in range(P)], np.int64)
+
+    site_ids: Dict[str, int] = {}
+    sid = np.asarray([site_ids.setdefault(s, len(site_ids)) for s in sites])
+    site_names = list(site_ids)
+    method_is_direct = np.asarray([m == "direct" for m in methods])
+
+    # ---- routing (liveness-independent chains, shared across cells) --------
+    cache_ids = {name: ci for ci, name in enumerate(fed.caches)}
+    chains: Dict[Tuple[int, int], List[int]] = {}
+    for si, pi in {(int(s), int(p))
+                   for s, p, d in zip(sid, pid, method_is_direct) if not d}:
+        names = _ranked_names(fed, state, site_names[si], paths[pi])
+        chains[(si, pi)] = [cache_ids[nm] for nm in names]
+    group_of = {c.name: g for g in fed.groups.values() for c in g.members}
+    # primary cache (nearest group's ring owner) per chain — the one
+    # whose liveness decides a counted group failover.
+    primary: Dict[Tuple[int, int], int] = {}
+    cache_names = list(fed.caches)
+    for key, chain in chains.items():
+        prim = -1
+        for ci in chain:
+            if cache_names[ci] in group_of:
+                prim = ci
+                break
+        primary[key] = prim if prim >= 0 else (chain[0] if chain else -1)
+
+    # ---- network constants (per site / cache / owner) ----------------------
+    net, topo = fed.net, fed.topology
+    wnode: Dict[Tuple[int, int], str] = {}
+    for si, w in {(int(s), int(w)) for s, w in zip(sid, workers)}:
+        wnode[(si, w)] = _worker_node(fed, site_names[si], w)
+
+    # ---- chronological epochs between outage events ------------------------
+    order = np.argsort(at, kind="stable")
+    events = list(spec.outages) if spec.outages is not None else []
+    for ev in events:
+        if ev.cache not in group_of and ev.cache not in fed.caches:
+            raise KeyError(ev.cache)  # same failure as the serial plane
+    alive = np.ones(len(cache_ids), bool)
+    was_counted = {"outages": 0, "recoveries": 0}
+    resident = np.zeros((len(cache_ids), P), bool)
+    admitted = np.zeros((len(cache_ids), P), bool)  # capacity accounting
+
+    chosen = np.full(n, -1, np.int64)        # serving cache (-1: none)
+    dead_before = np.zeros(n, np.int64)
+    primary_dead = np.zeros(n, bool)
+    is_hit = np.zeros(n, bool)
+    is_miss = np.zeros(n, bool)
+    fallback = np.zeros(n, bool)
+    ok = np.ones(n, bool)
+
+    def apply_event(ev) -> None:
+        ci = cache_ids[ev.cache]
+        if ev.action == "down":
+            if alive[ci]:
+                alive[ci] = False
+                if ev.cache in group_of:
+                    was_counted["outages"] += 1
+        else:
+            if not alive[ci]:
+                alive[ci] = True
+                if ev.cache in group_of:
+                    was_counted["recoveries"] += 1
+                if ev.cold:
+                    resident[ci, :] = False
+
+    def run_epoch(idx: np.ndarray) -> None:
+        """Vectorized accounting for one liveness epoch (``idx`` are
+        request indices in arrival order)."""
+        if idx.size == 0:
+            return
+        allstash = idx[~method_is_direct[idx]]
+        stash = allstash[found[pid[allstash]]]
+        # liveness-resolved serving cache per (site, path) this epoch
+        for key, chain in chains.items():
+            si, pi = key
+            sel = allstash[(sid[allstash] == si) & (pid[allstash] == pi)]
+            if sel.size == 0:
+                continue
+            # every stash request — found or not — walks the ranked
+            # chain, so a dead ring owner counts its group failovers
+            primary_dead[sel] = (primary[key] >= 0
+                                 and not alive[primary[key]])
+            fsel = sel[found[pid[sel]]]
+            if fsel.size == 0:
+                continue
+            serve, dead = -1, 0
+            for ci in chain:
+                if alive[ci]:
+                    serve = ci
+                    break
+                dead += 1
+            chosen[fsel] = serve
+            dead_before[fsel] = dead
+        fallback[stash] = chosen[stash] < 0
+        served = stash[chosen[stash] >= 0]
+        # first-occurrence per (cache, path) in arrival order → miss
+        key = chosen[served] * P + pid[served]
+        already = resident[chosen[served], pid[served]]
+        fresh = served[~already]
+        _, first_pos = np.unique(key[~already], return_index=True)
+        miss = fresh[np.sort(first_pos)]
+        is_miss[miss] = True
+        is_hit[served] = True
+        is_hit[miss] = False
+        resident[chosen[served], pid[served]] = True
+        admitted[chosen[miss], pid[miss]] = True
+        # not-found stash requests fail visibly, as on the serial plane
+        nf = idx[~method_is_direct[idx] & ~found[pid[idx]]]
+        ok[nf] = False
+        direct = idx[method_is_direct[idx]]
+        ok[direct] = found[pid[direct]]
+
+    ei = 0
+    pending: List[int] = []
+    for i in order:
+        while ei < len(events) and events[ei].time <= at[i]:
+            run_epoch(np.asarray(pending, np.int64))
+            pending = []
+            apply_event(events[ei])
+            ei += 1
+        pending.append(int(i))
+    run_epoch(np.asarray(pending, np.int64))
+    while ei < len(events):
+        apply_event(events[ei])
+        ei += 1
+
+    # ---- capacity eligibility: no evictions may ever have happened ---------
+    cap = np.asarray([c.capacity_bytes for c in fed.caches.values()],
+                     np.float64)
+    if (admitted @ size.astype(np.float64) > cap).any():
+        return None
+
+    # ---- closed-form timing -------------------------------------------------
+    lookup = fed.geoip.lookup_latency
+    bw_serve: Dict[Tuple[int, int], float] = {}
+    rtt_serve: Dict[Tuple[int, int], float] = {}
+    rpc_red: Dict[int, float] = {}
+    bw_pull: Dict[int, float] = {}
+    rtt_pull: Dict[int, float] = {}
+    caches = list(fed.caches.values())
+    red_node = fed.redirectors.members[0].node.name
+    seconds = np.zeros(n, np.float64)
+    nreq = nchunks[pid]
+    szreq = size[pid].astype(np.float64)
+    for i in np.nonzero(ok & (is_hit | is_miss))[0]:
+        ci, si, w = int(chosen[i]), int(sid[i]), int(workers[i])
+        wn = wnode[(si, w)]
+        cnode = caches[ci].node.name
+        k = (ci, si)
+        if k not in bw_serve:
+            bw_serve[k] = net.effective_bandwidth(cnode, wn, streams=8)
+            rtt_serve[k] = topo.rtt(cnode, wn)
+        cap_serve = caches[ci].serve_rate_cap(int(size[pid[i]]))
+        bw = min(bw_serve[k], cap_serve) if cap_serve else bw_serve[k]
+        seconds[i] = lookup + nreq[i] * rtt_serve[k] + szreq[i] / bw
+        if is_miss[i]:
+            onode = owners[pid[i]].node.name
+            if ci not in bw_pull:
+                bw_pull[ci] = net.effective_bandwidth(onode, cnode,
+                                                     streams=8)
+                rtt_pull[ci] = topo.rtt(onode, cnode)
+                rpc_red[ci] = net.rpc_time(cnode, red_node)
+            seconds[i] += (nreq[i] * (rpc_red[ci] + rtt_pull[ci])
+                           + szreq[i] / bw_pull[ci])
+    direct_like = ok & (fallback | method_is_direct)
+    for i in np.nonzero(direct_like)[0]:
+        onode = owners[pid[i]].node.name
+        wn = wnode[(int(sid[i]), int(workers[i]))]
+        seconds[i] = net.transfer_time(onode, wn, int(size[pid[i]]),
+                                       streams=int(streams[i]))
+
+    # ---- aggregates ---------------------------------------------------------
+    sz_int = size[pid]  # int64: keep byte counters exact, not float sums
+    moved = ok & (is_hit | is_miss | fallback | method_is_direct)
+    bytes_moved = int(sz_int[moved].sum())
+    hits = int(nreq[is_hit].sum())
+    misses = int(nreq[is_miss].sum())
+    egress = int(sz_int[ok & (is_miss | fallback | method_is_direct)].sum())
+    served_mask = is_hit | is_miss
+    cache_failovers = int((nreq[served_mask] * dead_before[served_mask])
+                          .sum())
+    ranked_len = np.asarray([len(chains.get((int(s), int(p)), []))
+                             for s, p in zip(sid, pid)])
+    cache_failovers += int(2 * ranked_len[fallback].sum())
+    # ranked-cache calls per request: n+2 (served), 6 (fallback: two
+    # method attempts of meta+monitor+chunk0), 2 (not found: meta per
+    # method) — each counting one group failover iff the nearest ring
+    # owner is dead.
+    stash_mask = ~method_is_direct
+    calls = np.zeros(n, np.int64)
+    calls[served_mask] = nreq[served_mask] + 2
+    calls[fallback] = 6
+    calls[stash_mask & ~ok] = 2
+    group_failovers = int(calls[primary_dead].sum())
+    origin_fallbacks = int(fallback.sum())
+
+    # ---- per-request rows ---------------------------------------------------
+    results: List[FetchResult] = []
+    for i in range(n):
+        p = int(pid[i])
+        if not ok[i]:
+            results.append(FetchResult(
+                path=paths[p], method=methods[i], plane="analytic",
+                start=at[i], ok=False,
+                error=f"FileNotFoundError: {paths[p]}"))
+            continue
+        if method_is_direct[i]:
+            results.append(FetchResult(
+                path=paths[p], size=int(size[p]), method="direct",
+                plane="analytic", seconds=seconds[i], bytes=int(size[p]),
+                chunks=int(nchunks[p]), cache_misses=int(nchunks[p]),
+                source=owners[p].name, start=at[i]))
+        elif fallback[i]:
+            results.append(FetchResult(
+                path=paths[p], size=int(size[p]), method="origin-direct",
+                plane="analytic", seconds=seconds[i], bytes=int(size[p]),
+                chunks=int(nchunks[p]), cache_misses=int(nchunks[p]),
+                source=owners[p].name, start=at[i]))
+        else:
+            hit = bool(is_hit[i])
+            results.append(FetchResult(
+                path=paths[p], size=int(size[p]), method="stash",
+                plane="analytic", seconds=seconds[i], bytes=int(size[p]),
+                chunks=int(nchunks[p]), cache_hit=hit,
+                cache_hits=int(nchunks[p]) if hit else 0,
+                cache_misses=0 if hit else int(nchunks[p]),
+                source=cache_names[int(chosen[i])], start=at[i]))
+
+    report = ScenarioReport(
+        name=spec.name, engine="analytic", results=results,
+        bytes_moved=bytes_moved, cache_hits=hits, cache_misses=misses,
+        origin_egress_bytes=egress, cache_failovers=cache_failovers,
+        origin_fallbacks=origin_fallbacks,
+        group_failovers=group_failovers,
+        outages=was_counted["outages"],
+        recoveries=was_counted["recoveries"])
+
+    # ---- contention-pricing flow set (the storm counterfactual) ------------
+    flow_specs: List[Tuple[List, float]] = []
+    flow_bytes: List[float] = []
+    pulled: set = set()
+    for i in range(n):
+        if not ok[i]:
+            continue
+        p = int(pid[i])
+        wn = wnode[(int(sid[i]), int(workers[i]))]
+        if method_is_direct[i] or fallback[i]:
+            src = owners[p].node.name
+            links = topo.path(src, wn)
+            cap_f = max(1, int(streams[i])) * net.per_stream_cap(
+                topo.rtt(src, wn))
+        else:
+            ci = int(chosen[i])
+            cnode = caches[ci].node.name
+            if is_miss[i] and (ci, p) not in pulled:
+                pulled.add((ci, p))
+                onode = owners[p].node.name
+                plinks = topo.path(onode, cnode)
+                pcap = 4 * net.per_stream_cap(topo.rtt(onode, cnode))
+                flow_specs.append((plinks, pcap))
+                flow_bytes.append(float(size[p]))
+            links = topo.path(cnode, wn)
+            cap_f = max(1, spec.streams) * net.per_stream_cap(
+                topo.rtt(cnode, wn))
+            rc = caches[ci].serve_rate_cap(int(size[p]))
+            if rc:
+                cap_f = min(cap_f, rc)
+        flow_specs.append((links, cap_f))
+        flow_bytes.append(float(size[p]))
+    return report, (flow_specs, flow_bytes)
+
+
+def run_sweep(spec: SweepSpec, batched: bool = True,
+              price_contention: bool = True) -> SweepReport:
+    """Execute every cell of a sweep.
+
+    ``batched=True`` routes eligible analytic cells through the
+    vectorized executor (shared pristine federations, numpy
+    accounting) and prices every batched cell's contention — the
+    all-at-once storm counterfactual of its workload — with the
+    pow2-bucketed, vmapped max-min kernel: a handful of jitted calls
+    for the whole sweep (``report.solver``).  Ineligible cells (sim
+    engine, proxy/cvmfs methods, evicting caches) fall back to a serial
+    :func:`run_scenario`, so a mixed sweep still completes with
+    identical semantics.  ``batched=False`` is the all-serial baseline
+    the benchmarks and parity tests compare against.
+    """
+    t0 = time.perf_counter()
+    shared = _SharedFederations()
+    cells: List[SweepCell] = []
+    problems = []
+    problem_bytes = []
+    problem_cells: List[SweepCell] = []
+    batched_cells = serial_cells = 0
+    for params, cspec in spec.cells():
+        res = None
+        if batched and _sweep_batchable(cspec):
+            fed, state = shared.get(cspec.federation)
+            res = _run_cell_vectorized(cspec, fed, state)
+        if res is not None:
+            report, (flow_specs, flow_bytes) = res
+            executor = "batched"
+            batched_cells += 1
+        else:
+            report = run_scenario(cspec)
+            flow_specs = flow_bytes = None
+            executor = "serial"
+            serial_cells += 1
+        cell = SweepCell(params=dict(params), name=cspec.name,
+                         engine=cspec.engine, executor=executor,
+                         summary=report.summary())
+        if executor == "batched" and price_contention and flow_specs:
+            problems.append(sparse_flow_problem(flow_specs))
+            problem_bytes.append(np.asarray(flow_bytes))
+            problem_cells.append(cell)
+        cells.append(cell)
+    solver: Dict[str, object] = {"solve_calls": 0, "priced_cells": 0}
+    if problems:
+        from repro.kernels.batched_maxmin import maxmin_rates_batch
+        stats: Dict = {}
+        rates = maxmin_rates_batch(problems, stats=stats)
+        solver.update(stats)
+        solver["priced_cells"] = len(problems)
+        for cell, nbytes, r in zip(problem_cells, problem_bytes, rates):
+            r = np.maximum(r, 1e-9)
+            cell.pricing = {
+                "peak_flows": int(len(r)),
+                "min_rate": float(r.min()) if len(r) else 0.0,
+                "mean_rate": float(r.mean()) if len(r) else 0.0,
+                "storm_finish_seconds": float((nbytes / r).max())
+                if len(r) else 0.0,
+            }
+    return SweepReport(
+        name=spec.name, axes={k: list(v) for k, v in spec.axes.items()},
+        cells=cells, wall_seconds=time.perf_counter() - t0,
+        batched_cells=batched_cells, serial_cells=serial_cells,
+        solver=solver)

@@ -57,6 +57,16 @@ class SiteSpec:
     ttl_seconds: float = 3600.0
     admission_max_fraction: float = 1.0
 
+    def cache_names(self) -> List[str]:
+        """Cache-server names this site contributes to a built
+        federation, in replica order — the one naming authority shared
+        by ``_build`` and anything that must address caches before a
+        federation exists (sweep outage axes)."""
+        if not self.has_cache:
+            return []
+        return [f"{self.name}/cache" if i == 0 else f"{self.name}/cache{i}"
+                for i in range(max(1, self.cache_replicas))]
+
 
 @dataclasses.dataclass
 class Federation:
@@ -189,9 +199,8 @@ def _build(sites: Sequence[SiteSpec], origin_site: str,
             admission = (SizeAwareAdmission(s.admission_max_fraction)
                          if s.admission_max_fraction < 1.0 else None)
             members = []
-            for i in range(max(1, s.cache_replicas)):
-                suffix = "cache" if i == 0 else f"cache{i}"
-                node = topo.add_node(f"{s.name}/{suffix}",
+            for i, cache_name in enumerate(s.cache_names()):
+                node = topo.add_node(cache_name,
                                      Coord(s.name, rack=253, host=i),
                                      prof.cache_nic)
                 cache = CacheServer(
@@ -236,6 +245,11 @@ class FederationSpec:
     proxy_ttl: float = 3600.0
     monitor_drop_rate: float = 0.0
     geoip_lookup_latency: float = 0.200
+
+    def cache_names(self) -> List[str]:
+        """Every cache-server name ``build()`` will create, in build
+        order (site order, then replica index)."""
+        return [n for s in self.sites for n in s.cache_names()]
 
     def build(self) -> Federation:
         if not self.sites:

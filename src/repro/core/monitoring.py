@@ -205,6 +205,60 @@ class MonitorCollector:
         self.bus.publish(record)
 
 
+class SweepAggregator:
+    """Per-cell aggregates for parameter sweeps (monitoring-side view).
+
+    Ingests one ``(params, summary)`` row per sweep cell — exactly what
+    :class:`~repro.core.api.SweepCell` carries — and answers the
+    questions an operator asks of a sweep: *how does a metric move along
+    one axis, marginalized over the others?*  The tables sit next to
+    :meth:`MonitorCollector.policy_table` as the aggregate surface the
+    fleet benches publish.
+    """
+
+    def __init__(self) -> None:
+        self.rows: List[tuple] = []   # (params, summary) per cell
+
+    def add(self, params: Dict, summary: Dict) -> None:
+        self.rows.append((dict(params), dict(summary)))
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def axes(self) -> Dict[str, List]:
+        """Observed axis values, in first-seen order per axis."""
+        out: Dict[str, List] = {}
+        for params, _ in self.rows:
+            for k, v in params.items():
+                vals = out.setdefault(k, [])
+                if v not in vals:
+                    vals.append(v)
+        return out
+
+    def marginal(self, axis: str, metric: str) -> List[tuple]:
+        """``(value, cells, mean, min, max)`` of ``metric`` per value of
+        ``axis``, marginalized over every other axis."""
+        agg: Dict[object, List[float]] = {}
+        order: List[object] = []
+        for params, summary in self.rows:
+            v = params.get(axis)
+            if v not in agg:
+                agg[v] = []
+                order.append(v)
+            agg[v].append(float(summary.get(metric, 0.0)))
+        return [(v, len(agg[v]), sum(agg[v]) / len(agg[v]),
+                 min(agg[v]), max(agg[v])) for v in order]
+
+    def table(self, metric: str) -> List[tuple]:
+        """One marginal row set per axis: ``(axis, value, cells, mean,
+        min, max)`` — the flat per-cell aggregate a dashboard ingests."""
+        out = []
+        for axis in self.axes():
+            for row in self.marginal(axis, metric):
+                out.append((axis,) + row)
+        return out
+
+
 class UsageAggregator:
     """Builds Table 1 (usage by experiment) and Fig. 4 (usage over time)."""
 

@@ -42,6 +42,38 @@ from .topology import Link, Topology
 from .transfer import NetworkModel
 
 
+def sparse_flow_problem(flow_specs) -> Tuple[List[float], List[List[int]],
+                                             List[float]]:
+    """Index a set of flows into the sparse max-min problem layout.
+
+    ``flow_specs`` is an iterable of ``(links, cap)`` pairs — each a
+    flow's traversed :class:`~repro.core.topology.Link` objects and its
+    TCP ceiling.  Links are deduplicated by identity into a compact
+    index space; the result ``(link_caps, flow_links, flow_caps)`` feeds
+    ``repro.kernels.maxmin.maxmin_rates_sparse`` directly (one problem)
+    or ``repro.kernels.batched_maxmin.maxmin_rates_batch`` (one problem
+    per sweep cell).  Shared by the simulator's vector solver and the
+    sweep engine's contention pricing so the two can never disagree on
+    what a flow set means.
+    """
+    link_index: Dict[int, int] = {}
+    link_caps: List[float] = []
+    flow_links: List[List[int]] = []
+    flow_caps: List[float] = []
+    for links, cap in flow_specs:
+        row = []
+        for link in links:
+            lid = id(link)
+            idx = link_index.get(lid)
+            if idx is None:
+                idx = link_index[lid] = len(link_caps)
+                link_caps.append(link.bandwidth)
+            row.append(idx)
+        flow_links.append(row)
+        flow_caps.append(cap)
+    return link_caps, flow_links, flow_caps
+
+
 class _Waitable:
     pass
 
@@ -197,21 +229,9 @@ class FluidFlowSim:
         flows = self.active
         if not flows:
             return
-        link_index: Dict[int, int] = {}
-        link_caps: List[float] = []
-        flow_links: List[List[int]] = []
-        for f in flows:
-            row = []
-            for link in f.links:
-                lid = id(link)
-                idx = link_index.get(lid)
-                if idx is None:
-                    idx = link_index[lid] = len(link_caps)
-                    link_caps.append(link.bandwidth)
-                row.append(idx)
-            flow_links.append(row)
-        rates = maxmin_rates_sparse(link_caps, flow_links,
-                                    [f.cap for f in flows])
+        link_caps, flow_links, flow_caps = sparse_flow_problem(
+            (f.links, f.cap) for f in flows)
+        rates = maxmin_rates_sparse(link_caps, flow_links, flow_caps)
         for f, r in zip(flows, rates):
             f.rate = float(r)
 

@@ -33,12 +33,18 @@ import jax.numpy as jnp
 import numpy as np
 
 
-@jax.jit
-def _solve(link_caps: jax.Array, link_ids: jax.Array,
-           flow_caps: jax.Array) -> jax.Array:
-    """link_caps: (L,) with a trailing dummy-inf slot; link_ids: (F, K)
+def solve_waterfill(link_caps: jax.Array, link_ids: jax.Array,
+                    flow_caps: jax.Array) -> jax.Array:
+    """The batchable waterfilling core (unjitted, vmappable).
+
+    link_caps: (L,) with a trailing dummy-inf slot; link_ids: (F, K)
     int32 rows of link indices (padding points at the dummy slot);
-    flow_caps: (F,) → per-flow rates (F,)."""
+    flow_caps: (F,) → per-flow rates (F,).
+
+    Every op is shape-static and the while-loop body is idempotent once
+    ``active`` empties, so ``jax.vmap(solve_waterfill)`` solves a whole
+    batch of same-shaped problems in one call — that is what
+    :mod:`repro.kernels.batched_maxmin` builds on for sweep pricing."""
     num_flows, width = link_ids.shape
     num_links = link_caps.shape[0]
     inf = jnp.float32(jnp.inf)
@@ -98,11 +104,44 @@ def _solve(link_caps: jax.Array, link_ids: jax.Array,
     return rates
 
 
+_solve = jax.jit(solve_waterfill)
+
+
 def _next_pow2(n: int, floor: int = 8) -> int:
     p = floor
     while p < n:
         p *= 2
     return p
+
+
+def pad_problem(link_caps: Sequence[float],
+                flow_links: Sequence[Sequence[int]],
+                flow_caps: Sequence[float],
+                Fp: int, Lp: int, width: int):
+    """Pad one (flows, links) problem into the ``solve_waterfill`` layout.
+
+    Returns ``(caps, ids, fcaps)`` numpy arrays of shapes (Lp,), (Fp,
+    width), (Fp,): real link capacities followed by infinite-capacity
+    slots (the last is the dummy every padding id points at), per-flow
+    link-index rows, zero-capped padding flows.  Shared by the
+    single-problem path below and the pow2-bucketed batch packer in
+    :mod:`repro.kernels.batched_maxmin`."""
+    F, L = len(flow_links), len(link_caps)
+    if L + 1 > Lp or F > Fp:
+        raise ValueError(f"problem ({F} flows, {L} links) exceeds "
+                         f"bucket (Fp={Fp}, Lp={Lp})")
+    dummy = Lp - 1
+    ids = np.full((Fp, width), dummy, np.int32)
+    for fi, ls in enumerate(flow_links):
+        if len(ls) > width:
+            raise ValueError(f"flow {fi} crosses {len(ls)} links > "
+                             f"bucket width {width}")
+        ids[fi, :len(ls)] = ls
+    caps = np.full(Lp, np.inf, np.float32)
+    caps[:L] = link_caps
+    fcaps = np.zeros(Fp, np.float32)
+    fcaps[:F] = flow_caps
+    return caps, ids, fcaps
 
 
 def maxmin_rates_sparse(link_caps: Sequence[float],
@@ -119,14 +158,8 @@ def maxmin_rates_sparse(link_caps: Sequence[float],
     width = _next_pow2(max((len(ls) for ls in flow_links), default=1),
                        floor=4)
     Fp, Lp = _next_pow2(F), _next_pow2(L + 1)
-    dummy = Lp - 1
-    ids = np.full((Fp, width), dummy, np.int32)
-    for fi, ls in enumerate(flow_links):
-        ids[fi, :len(ls)] = ls
-    caps = np.full(Lp, np.inf, np.float32)
-    caps[:L] = link_caps
-    fcaps = np.zeros(Fp, np.float32)
-    fcaps[:F] = flow_caps
+    caps, ids, fcaps = pad_problem(link_caps, flow_links, flow_caps,
+                                   Fp, Lp, width)
     rates = _solve(jnp.asarray(caps), jnp.asarray(ids), jnp.asarray(fcaps))
     out = np.array(rates[:F])
     # Flows crossing no capacity-bearing link (loopback transfers) look
