@@ -19,12 +19,22 @@ Every cell's ``bytes_moved`` / ``cache_hits`` / ``cache_misses`` /
 the artifact records the parity check, and ``tests/test_sweep.py``
 asserts it independently.
 
+A second, **eviction-regime** profile sweeps the axes that used to be
+serial-only — ``cache_capacity × eviction_policy {lru,fifo} ×
+admission_max_fraction`` with working sets far beyond the smallest
+capacities — through the stack-distance / cache-state-machine kernels
+(:mod:`repro.kernels.stack_distance`).  Parity there additionally
+covers ``evictions`` / ``bytes_evicted`` / ``admission_rejects``, and
+any cell falling back to the serial executor fails the bench.
+
 **Artifact** ``artifacts/sweep.json`` (see docs/BENCHMARKS.md): cell and
 axis inventory, wall-clock for both executions, ``speedup`` (the CI
 regression gate holds this ≥ 3× within tolerance), the batched solver
 telemetry (``solve_calls`` per sweep — the "one jitted call prices a
-column" claim), the parity section, and per-axis marginal tables built
-by :class:`~repro.core.monitoring.SweepAggregator`.
+column" claim), the parity section, per-axis marginal tables built
+by :class:`~repro.core.monitoring.SweepAggregator`, and the
+``eviction`` section (same schema + ``total_evictions`` and per-policy
+marginals; its ``speedup`` is gated ≥ 3× too).
 """
 from __future__ import annotations
 
@@ -40,6 +50,8 @@ ARTIFACT_FILES = ("sweep.json",)
 
 PARITY_KEYS = ("bytes_moved", "cache_hits", "cache_misses",
                "origin_egress_bytes")
+EVICTION_PARITY_KEYS = PARITY_KEYS + ("evictions", "bytes_evicted",
+                                      "admission_rejects")
 
 
 def sweep_spec(quick: bool = False) -> SweepSpec:
@@ -68,26 +80,63 @@ def sweep_spec(quick: bool = False) -> SweepSpec:
     return SweepSpec(name="sweep", base=base, axes=axes)
 
 
-def run(quick: bool = False, verbose: bool = False):
-    spec = sweep_spec(quick=quick)
-    n_cells = len(spec)
+def eviction_sweep_spec(quick: bool = False) -> SweepSpec:
+    """The eviction-regime profile: capacity × eviction policy ×
+    size-aware admission, with working sets far beyond the smallest
+    capacities so most cells churn — the axes that were serial-only
+    before the stack-distance / state-machine kernels landed."""
+    base = ScenarioSpec(
+        name="evict", engine="analytic",
+        federation=FederationSpec.fleet(num_pods=2, hosts_per_pod=2),
+        workload=WorkloadSpec(kind="zipf",
+                              n_requests=30 if quick else 60,
+                              working_set=16, duration=600.0))
+    if quick:
+        axes = {
+            "federation.cache_capacity": [3e8, 32e12],
+            "federation.eviction_policy": ["lru", "fifo"],
+            "federation.admission_max_fraction": [1.0, 0.3],
+        }
+    else:
+        axes = {
+            "federation.cache_capacity": [2e8, 4e8, 8e8, 1.6e9, 3.2e9,
+                                          32e12],
+            "federation.eviction_policy": ["lru", "fifo"],
+            "federation.admission_max_fraction": [1.0, 0.5, 0.25],
+            "workload.seed": [0, 1, 2],
+        }
+    return SweepSpec(name="evict", base=base, axes=axes)
 
+
+def _run_both(spec: SweepSpec, parity_keys):
+    """One sweep, batched then serial, with per-cell parity."""
     t0 = time.perf_counter()
     batched = run_sweep(spec, batched=True)
     t_batched = time.perf_counter() - t0
-
     t0 = time.perf_counter()
     serial = run_sweep(spec, batched=False, price_contention=False)
     t_serial = time.perf_counter() - t0
-
     mismatches = []
     for cb, cs in zip(batched.cells, serial.cells):
-        for k in PARITY_KEYS:
+        for k in parity_keys:
             if cb.summary[k] != cs.summary[k]:
                 mismatches.append({"params": cb.params, "key": k,
                                    "batched": cb.summary[k],
                                    "serial": cs.summary[k]})
     speedup = t_serial / max(t_batched, 1e-9)
+    return batched, t_batched, t_serial, speedup, mismatches
+
+
+def run(quick: bool = False, verbose: bool = False):
+    spec = sweep_spec(quick=quick)
+    n_cells = len(spec)
+    (batched, t_batched, t_serial,
+     speedup, mismatches) = _run_both(spec, PARITY_KEYS)
+
+    espec = eviction_sweep_spec(quick=quick)
+    (ebatched, et_batched, et_serial,
+     espeedup, emismatches) = _run_both(espec, EVICTION_PARITY_KEYS)
+    total_evictions = sum(c.summary["evictions"] for c in ebatched.cells)
 
     agg = SweepAggregator()
     for cell in batched.cells:
@@ -96,6 +145,9 @@ def run(quick: bool = False, verbose: bool = False):
         axis: [list(row) for row in agg.marginal(axis, "hit_rate")]
         for axis in spec.axes
     }
+    eagg = SweepAggregator()
+    for cell in ebatched.cells:
+        eagg.add(cell.params, cell.summary)
 
     sample = batched.cells[0]
     ARTIFACTS.mkdir(exist_ok=True, parents=True)
@@ -118,12 +170,34 @@ def run(quick: bool = False, verbose: bool = False):
         "sample_cell": {"params": sample.params,
                         "summary": sample.summary,
                         "pricing": sample.pricing},
+        "eviction": {
+            "cells": len(espec),
+            "axes": {k: list(v) for k, v in espec.axes.items()},
+            "batched": {
+                "wall_seconds": et_batched,
+                "batched_cells": ebatched.batched_cells,
+                "serial_cells": ebatched.serial_cells,
+                "solver": ebatched.solver,
+            },
+            "serial": {"wall_seconds": et_serial},
+            "speedup": espeedup,
+            "total_evictions": total_evictions,
+            "parity": {"checked_cells": len(ebatched.cells),
+                       "keys": list(EVICTION_PARITY_KEYS),
+                       "mismatches": emismatches},
+            "policy_marginals": [list(r) for r in eagg.policy_marginals()],
+        },
     }, indent=1))
 
-    if mismatches:
+    if mismatches or emismatches:
+        bad = mismatches + emismatches
         raise AssertionError(
-            f"batched/serial sweep parity broke on {len(mismatches)} "
-            f"cells: {mismatches[:3]}")
+            f"batched/serial sweep parity broke on {len(bad)} "
+            f"cells: {bad[:3]}")
+    if ebatched.serial_cells:
+        raise AssertionError(
+            f"{ebatched.serial_cells} eviction-regime cells fell back to "
+            f"the serial executor")
 
     if verbose:
         print(f"  {n_cells} cells: batched {t_batched:.2f}s "
@@ -133,6 +207,13 @@ def run(quick: bool = False, verbose: bool = False):
                                                    "hit_rate"):
             print(f"  zipf_a={v}: hit_rate mean {mean:.3f} "
                   f"[{lo:.3f}, {hi:.3f}] over {cells} cells")
+        print(f"  eviction regime, {len(espec)} cells: batched "
+              f"{et_batched:.2f}s vs serial {et_serial:.2f}s -> "
+              f"{espeedup:.1f}x ({total_evictions} evictions)")
+        for row in eagg.policy_marginals():
+            print(f"  policy={row[0]}: hit_rate {row[2]:.3f}, "
+                  f"evictions {row[3]:.0f}, rejects {row[5]:.0f} "
+                  f"over {row[1]} cells")
 
     solve_calls = int(batched.solver.get("solve_calls", 0))
     return [
@@ -143,6 +224,13 @@ def run(quick: bool = False, verbose: bool = False):
          f"priced_cells={batched.solver.get('priced_cells', 0)}"),
         ("sweep.parity", float(len(mismatches)),
          f"checked={len(batched.cells)},keys={len(PARITY_KEYS)}"),
+        ("sweep.eviction_batched", et_batched * 1e6,
+         f"cells={len(espec)},speedup={espeedup:.1f}x,"
+         f"evictions={total_evictions}"),
+        ("sweep.eviction_serial_cells", float(ebatched.serial_cells),
+         f"cells={len(espec)}"),
+        ("sweep.eviction_parity", float(len(emismatches)),
+         f"checked={len(ebatched.cells)},keys={len(EVICTION_PARITY_KEYS)}"),
     ]
 
 

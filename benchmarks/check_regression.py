@@ -45,6 +45,12 @@ EXTRACTORS: Dict[str, Tuple[str, Callable[[dict], float]]] = {
         "sweep.json", lambda a: a["batched"]["solver"]["solve_calls"]),
     "sweep_parity_mismatches": (
         "sweep.json", lambda a: len(a["parity"]["mismatches"])),
+    "eviction_sweep_speedup": (
+        "sweep.json", lambda a: a["eviction"]["speedup"]),
+    "eviction_sweep_serial_cells": (
+        "sweep.json", lambda a: a["eviction"]["batched"]["serial_cells"]),
+    "eviction_sweep_parity_mismatches": (
+        "sweep.json", lambda a: len(a["eviction"]["parity"]["mismatches"])),
     "storm_coalescing_ratio": (
         "outage_storm.json", lambda a: a["storm"]["coalescing_ratio"]),
     "storm_reallocations": (

@@ -42,7 +42,7 @@ import itertools
 import math
 import time
 from typing import (Dict, Generator, List, Optional, Protocol, Sequence,
-                    Tuple, Union, runtime_checkable)
+                    Set, Tuple, Union, runtime_checkable)
 
 import numpy as np
 
@@ -588,11 +588,15 @@ def run_scenario(spec: ScenarioSpec,
 def _fed_totals(fed: Federation) -> Dict[str, int]:
     """The federation-lifetime counters a ScenarioReport aggregates."""
     gstats = [g.stats for g in fed.groups.values()]
+    cstats = [c.stats for c in fed.caches.values()]
     return {
-        "cache_hits": sum(c.stats.hits for c in fed.caches.values()),
-        "cache_misses": sum(c.stats.misses for c in fed.caches.values()),
+        "cache_hits": sum(c.hits for c in cstats),
+        "cache_misses": sum(c.misses for c in cstats),
         "origin_egress_bytes": sum(o.stats.egress_bytes
                                    for o in fed.origins),
+        "evictions": sum(c.evictions for c in cstats),
+        "bytes_evicted": sum(c.bytes_evicted for c in cstats),
+        "admission_rejects": sum(c.admission_rejects for c in cstats),
         "group_failovers": sum(s.failovers for s in gstats),
         "outages": sum(s.outages for s in gstats),
         "recoveries": sum(s.recoveries for s in gstats),
@@ -613,6 +617,11 @@ def _report(spec: ScenarioSpec, fed: Federation, plane: DataPlane,
         cache_hits=sum(c.stats.hits for c in fed.caches.values()),
         cache_misses=sum(c.stats.misses for c in fed.caches.values()),
         origin_egress_bytes=sum(o.stats.egress_bytes for o in fed.origins),
+        evictions=sum(c.stats.evictions for c in fed.caches.values()),
+        bytes_evicted=sum(c.stats.bytes_evicted
+                          for c in fed.caches.values()),
+        admission_rejects=sum(c.stats.admission_rejects
+                              for c in fed.caches.values()),
         cache_failovers=sum(s.cache_failovers for s in cstats),
         hedged_fetches=sum(s.hedged_fetches for s in cstats),
         origin_fallbacks=sum(s.origin_fallbacks for s in cstats),
@@ -808,7 +817,15 @@ class SweepReport:
 
 
 def _sweep_batchable(spec: ScenarioSpec) -> bool:
-    """Static eligibility for the vectorized analytic executor."""
+    """Static eligibility for the vectorized analytic executor.
+
+    Evicting caches are *in* the regime: LRU cells resolve through the
+    stack-distance kernel, FIFO and size-aware-admission cells through
+    the vectorized cache state machine (both in
+    :mod:`repro.kernels.stack_distance`).  Only victim orders the
+    kernels don't model (LFU frequency buckets, TTL expiry against the
+    accounted clock) still fall back to a serial :func:`run_scenario`.
+    """
     if spec.engine != "analytic":
         return False
     if spec.method not in ("stash", "direct"):
@@ -819,20 +836,50 @@ def _sweep_batchable(spec: ScenarioSpec) -> bool:
                                                                 "direct"):
                 return False
     for s in spec.federation.sites:
-        if s.has_cache and (s.eviction_policy != "lru"
-                            or s.admission_max_fraction < 1.0):
+        if s.has_cache and s.eviction_policy not in ("lru", "fifo"):
             return False
     return True
+
+
+# The per-site knobs that select cache *policy* rather than routing:
+# ranked chains, GeoIP order and ring ownership never read them, so
+# cells differing only here share one pristine federation, one routing
+# table and one set of per-cache request streams.
+_POLICY_KNOBS = ("cache_capacity", "eviction_policy", "ttl_seconds",
+                 "admission_max_fraction")
+_SITE_KNOB_DEFAULTS = {f.name: f.default
+                       for f in dataclasses.fields(SiteSpec)
+                       if f.name in _POLICY_KNOBS}
+
+
+def _routing_fedspec(fed: FederationSpec) -> FederationSpec:
+    """``fed`` with every cache-bearing site's policy knobs canonicalized
+    — the sharing key for federations, routing tables and streams."""
+    sites = [dataclasses.replace(s, **_SITE_KNOB_DEFAULTS)
+             if s.has_cache else s for s in fed.sites]
+    return dataclasses.replace(fed, sites=sites)
+
+
+def _cache_knobs(fed: FederationSpec) -> Dict[str, Tuple[float, str, float]]:
+    """Per cache-server name: ``(capacity_bytes, policy, admission
+    fraction)`` — the cell-specific half the shared federation lacks."""
+    out: Dict[str, Tuple[float, str, float]] = {}
+    for s in fed.sites:
+        for name in s.cache_names():
+            out[name] = (float(s.cache_capacity), s.eviction_policy,
+                         float(s.admission_max_fraction))
+    return out
 
 
 class _SharedFederations:
     """Pristine federations shared across same-spec sweep cells.
 
     The vectorized executor never publishes objects or mutates cache
-    storage, so every cell with an equal :class:`FederationSpec` can
-    route against one built federation — and share its liveness-
-    independent ``(site, path) -> ranked cache names`` table, which is
-    the expensive part of analytic routing."""
+    storage, so every cell with an equal *routing-normalized*
+    :class:`FederationSpec` (policy knobs canonicalized — see
+    :func:`_routing_fedspec`) can route against one built federation —
+    and share its liveness-independent ``(site, path) -> ranked cache
+    names`` table, which is the expensive part of analytic routing."""
 
     def __init__(self) -> None:
         self._entries: List[Tuple[FederationSpec, Federation, Dict]] = []
@@ -842,7 +889,7 @@ class _SharedFederations:
             if known == spec:
                 return fed, routes
         fed = spec.build()
-        state: Dict = {"routes": {}, "clients": {}}
+        state: Dict = {"routes": {}, "clients": {}, "cells": []}
         self._entries.append((spec, fed, state))
         return fed, state
 
@@ -874,16 +921,83 @@ def _worker_node(fed: Federation, site: str, worker: int) -> str:
     return name
 
 
-def _run_cell_vectorized(spec: ScenarioSpec, fed: Federation, state: Dict):
-    """One analytic cell as numpy accounting instead of per-request
-    Python: first-occurrence hit/miss per (cache, path), closed-form
-    chunk timing, outage epochs at request boundaries — byte-exact
-    against a serial :func:`run_scenario` of the same cell.
+class _CacheStream:
+    """One cache server's chunk reference stream for one routing cell —
+    everything a hit/miss kernel needs, all of it capacity- and
+    policy-independent (eviction never feeds back into routing: a cache
+    with nothing resident still *serves*, it just pulls first)."""
 
-    Returns ``(ScenarioReport, (flow_specs, flow_bytes))`` or ``None``
-    when the cell leaves the vectorizable regime (cache working set
-    exceeding capacity, unresolvable namespace), in which case the
-    caller falls back to the serial executor.
+    __slots__ = ("req", "size", "prev", "reset", "seg", "eff_obj",
+                 "miss_sec", "keys", "n_keys", "key_sizes",
+                 "total_key_bytes", "eff_const", "variants")
+
+    def __init__(self) -> None:
+        self.req: List[int] = []       # request index per reference
+        self.keys: List[int] = []      # stream-local (path, chunk) key id
+        self.size: List[int] = []      # chunk bytes per reference
+        self.prev: List[int] = []      # previous same-key ref (same
+        #                                cold-restart segment), else -1
+        self.reset: List[bool] = []    # cold restart before this ref
+        self.seg: List[int] = []       # cold-restart segment per ref
+        self.eff_obj: List[int] = []   # object size admission sees (the
+        #                                chunk itself until the serving
+        #                                cache has located the meta)
+        self.miss_sec: List[float] = []  # redirector RPC + origin pull
+        self.key_sizes: List[int] = []
+        # stack-distance variants, keyed by admitted-key signature: the
+        # stream with one admission filter class applied (refused keys
+        # dropped — they never enter the stack), with byte distances
+        # and segment-end residency.  Shared by every cell whose
+        # (fraction × capacity) threshold induces the same filter.
+        self.variants: Dict[bytes, Dict[str, np.ndarray]] = {}
+
+    def arrays(self) -> None:
+        self.req = np.asarray(self.req, np.int64)
+        self.keys = np.asarray(self.keys, np.int32)
+        self.size = np.asarray(self.size, np.int64)
+        self.prev = np.asarray(self.prev, np.int64)
+        self.reset = np.asarray(self.reset, bool)
+        self.seg = np.asarray(self.seg, np.int64)
+        self.eff_obj = np.asarray(self.eff_obj, np.int64)
+        self.miss_sec = np.asarray(self.miss_sec, np.float64)
+        self.key_sizes = np.asarray(self.key_sizes, np.int64)
+        self.n_keys = len(self.key_sizes)
+        # conservative residency bound: a capacity at or above the whole
+        # distinct-key working set can never evict — those cells answer
+        # hit/miss by compulsory-miss logic alone, no kernel involved
+        self.total_key_bytes = int(self.key_sizes.sum())
+        # is the admission-relevant object size constant per key?  (It
+        # is, unless an outage made a non-head cache serve before the
+        # meta was located.)  Constant → a size-aware filter refuses a
+        # key always-or-never, which is what the filtered stack model
+        # needs; varying → the slot state machine.
+        if self.n_keys:
+            lo = np.full(self.n_keys, np.iinfo(np.int64).max, np.int64)
+            hi = np.zeros(self.n_keys, np.int64)
+            np.minimum.at(lo, self.keys, self.eff_obj)
+            np.maximum.at(hi, self.keys, self.eff_obj)
+            self.eff_const = bool((lo[self.keys] == hi[self.keys]).all())
+        else:
+            self.eff_const = True
+
+
+class _CellRouting:
+    """The cell-policy-independent product of the vectorized executor:
+    routing, liveness epochs, timing constants and per-cache reference
+    streams (with stack distances precomputed).  Shared by every sweep
+    cell that differs only in cache capacity / eviction policy /
+    admission — the axes the hit/miss kernels resolve per cell."""
+
+
+def _cell_routing(spec: ScenarioSpec, fed: Federation, state: Dict,
+                  telemetry: Dict) -> Optional[_CellRouting]:
+    """Route one analytic cell without touching cache policy: numpy
+    epoch accounting over liveness-independent ranked chains, exactly as
+    a serial :func:`run_scenario` would resolve it.
+
+    Returns ``None`` when the cell leaves the vectorizable regime
+    (unresolvable namespace — the serial path raises ``KeyError``),
+    in which case the caller falls back to the serial executor.
     """
     reqs = spec.requests(fed)
     n = len(reqs)
@@ -960,20 +1074,22 @@ def _run_cell_vectorized(spec: ScenarioSpec, fed: Federation, state: Dict):
 
     # ---- chronological epochs between outage events ------------------------
     order = np.argsort(at, kind="stable")
+    op = np.empty(n, np.int64)               # arrival rank per request
+    op[order] = np.arange(n)
     events = list(spec.outages) if spec.outages is not None else []
     for ev in events:
         if ev.cache not in group_of and ev.cache not in fed.caches:
             raise KeyError(ev.cache)  # same failure as the serial plane
     alive = np.ones(len(cache_ids), bool)
     was_counted = {"outages": 0, "recoveries": 0}
-    resident = np.zeros((len(cache_ids), P), bool)
-    admitted = np.zeros((len(cache_ids), P), bool)  # capacity accounting
+    # cold-restart positions per cache, as arrival ranks: requests with
+    # op >= the recorded rank see that cache's disk wiped
+    resets: Dict[int, List[int]] = {}
+    processed = 0
 
     chosen = np.full(n, -1, np.int64)        # serving cache (-1: none)
     dead_before = np.zeros(n, np.int64)
     primary_dead = np.zeros(n, bool)
-    is_hit = np.zeros(n, bool)
-    is_miss = np.zeros(n, bool)
     fallback = np.zeros(n, bool)
     ok = np.ones(n, bool)
 
@@ -990,11 +1106,13 @@ def _run_cell_vectorized(spec: ScenarioSpec, fed: Federation, state: Dict):
                 if ev.cache in group_of:
                     was_counted["recoveries"] += 1
                 if ev.cold:
-                    resident[ci, :] = False
+                    resets.setdefault(ci, []).append(processed)
 
     def run_epoch(idx: np.ndarray) -> None:
-        """Vectorized accounting for one liveness epoch (``idx`` are
-        request indices in arrival order)."""
+        """Vectorized routing for one liveness epoch (``idx`` are
+        request indices in arrival order).  Hit/miss is *not* resolved
+        here — that is the kernels' job, per cell — only which cache
+        serves whom."""
         if idx.size == 0:
             return
         allstash = idx[~method_is_direct[idx]]
@@ -1021,18 +1139,6 @@ def _run_cell_vectorized(spec: ScenarioSpec, fed: Federation, state: Dict):
             chosen[fsel] = serve
             dead_before[fsel] = dead
         fallback[stash] = chosen[stash] < 0
-        served = stash[chosen[stash] >= 0]
-        # first-occurrence per (cache, path) in arrival order → miss
-        key = chosen[served] * P + pid[served]
-        already = resident[chosen[served], pid[served]]
-        fresh = served[~already]
-        _, first_pos = np.unique(key[~already], return_index=True)
-        miss = fresh[np.sort(first_pos)]
-        is_miss[miss] = True
-        is_hit[served] = True
-        is_hit[miss] = False
-        resident[chosen[served], pid[served]] = True
-        admitted[chosen[miss], pid[miss]] = True
         # not-found stash requests fail visibly, as on the serial plane
         nf = idx[~method_is_direct[idx] & ~found[pid[idx]]]
         ok[nf] = False
@@ -1044,68 +1150,128 @@ def _run_cell_vectorized(spec: ScenarioSpec, fed: Federation, state: Dict):
     for i in order:
         while ei < len(events) and events[ei].time <= at[i]:
             run_epoch(np.asarray(pending, np.int64))
+            processed += len(pending)
             pending = []
             apply_event(events[ei])
             ei += 1
         pending.append(int(i))
     run_epoch(np.asarray(pending, np.int64))
+    processed += len(pending)
     while ei < len(events):
         apply_event(events[ei])
         ei += 1
+    served_mask = chosen >= 0
 
-    # ---- capacity eligibility: no evictions may ever have happened ---------
-    cap = np.asarray([c.capacity_bytes for c in fed.caches.values()],
-                     np.float64)
-    if (admitted @ size.astype(np.float64) > cap).any():
-        return None
+    # ---- when does each cache learn an object's size? ----------------------
+    # Admission sees the whole object only once the serving cache has
+    # the meta cached — and only the liveness-independent chain *head*
+    # is ever asked to locate it (``StashClient._meta`` returns at the
+    # first non-None ``locate_meta``).  So a non-head cache serving
+    # under an outage judges admission by the chunk payload until some
+    # request whose chain it heads has touched the path.
+    meta_rank: Dict[Tuple[int, int], int] = {}
+    for i in range(n):
+        if method_is_direct[i] or not found[pid[i]]:
+            continue
+        chain = chains.get((int(sid[i]), int(pid[i])))
+        if chain:
+            key = (chain[0], int(pid[i]))
+            r = meta_rank.get(key)
+            if r is None or op[i] < r:
+                meta_rank[key] = int(op[i])
 
-    # ---- closed-form timing -------------------------------------------------
+    # ---- timing constants + per-cache chunk reference streams --------------
     lookup = fed.geoip.lookup_latency
     bw_serve: Dict[Tuple[int, int], float] = {}
     rtt_serve: Dict[Tuple[int, int], float] = {}
     rpc_red: Dict[int, float] = {}
-    bw_pull: Dict[int, float] = {}
-    rtt_pull: Dict[int, float] = {}
+    bw_pull: Dict[Tuple[int, int], float] = {}
+    rtt_pull: Dict[Tuple[int, int], float] = {}
     caches = list(fed.caches.values())
     red_node = fed.redirectors.members[0].node.name
-    seconds = np.zeros(n, np.float64)
     nreq = nchunks[pid]
-    szreq = size[pid].astype(np.float64)
-    for i in np.nonzero(ok & (is_hit | is_miss))[0]:
-        ci, si, w = int(chosen[i]), int(sid[i]), int(workers[i])
-        wn = wnode[(si, w)]
+    serve_base = np.zeros(n, np.float64)   # hit-path seconds per request
+    streams_by_cache: Dict[int, _CacheStream] = {}
+    key_ids: Dict[int, Dict[Tuple[int, int], int]] = {}
+    last_ref: Dict[int, Dict[int, Tuple[int, int]]] = {}
+    last_seg: Dict[int, int] = {}
+
+    def _chunk_len(p: int, j: int) -> int:
+        cs = owners[p].chunk_size
+        return int(min(cs, size[p] - j * cs)) if size[p] else 0
+
+    for i in order:
+        if chosen[i] < 0:
+            continue
+        i, ci, p = int(i), int(chosen[i]), int(pid[i])
+        si = int(sid[i])
+        wn = wnode[(si, int(workers[i]))]
         cnode = caches[ci].node.name
         k = (ci, si)
         if k not in bw_serve:
             bw_serve[k] = net.effective_bandwidth(cnode, wn, streams=8)
             rtt_serve[k] = topo.rtt(cnode, wn)
-        cap_serve = caches[ci].serve_rate_cap(int(size[pid[i]]))
-        bw = min(bw_serve[k], cap_serve) if cap_serve else bw_serve[k]
-        seconds[i] = lookup + nreq[i] * rtt_serve[k] + szreq[i] / bw
-        if is_miss[i]:
-            onode = owners[pid[i]].node.name
-            if ci not in bw_pull:
-                bw_pull[ci] = net.effective_bandwidth(onode, cnode,
-                                                     streams=8)
-                rtt_pull[ci] = topo.rtt(onode, cnode)
+        pk = (ci, p)
+        if pk not in bw_pull:
+            onode = owners[p].node.name
+            bw_pull[pk] = net.effective_bandwidth(onode, cnode, streams=8)
+            rtt_pull[pk] = topo.rtt(onode, cnode)
+            if ci not in rpc_red:
                 rpc_red[ci] = net.rpc_time(cnode, red_node)
-            seconds[i] += (nreq[i] * (rpc_red[ci] + rtt_pull[ci])
-                           + szreq[i] / bw_pull[ci])
+        stream = streams_by_cache.get(ci)
+        if stream is None:
+            stream = streams_by_cache[ci] = _CacheStream()
+            key_ids[ci] = {}
+            last_ref[ci] = {}
+            last_seg[ci] = 0
+        cuts = resets.get(ci, ())
+        seg = sum(1 for c in cuts if c <= op[i])
+        fresh_seg = seg != last_seg[ci] and len(stream.req) > 0
+        last_seg[ci] = seg
+        known = meta_rank.get((ci, p), n + 1) <= op[i]
+        secs = lookup + nreq[i] * rtt_serve[k]
+        miss_base = rpc_red[ci] + rtt_pull[pk]
+        for j in range(int(nchunks[p])):
+            csize = _chunk_len(p, j)
+            kid = key_ids[ci].setdefault((p, j), len(key_ids[ci]))
+            if kid == len(stream.key_sizes):
+                stream.key_sizes.append(csize)
+            prev_entry = last_ref[ci].get(kid)
+            prev = (prev_entry[0] if prev_entry is not None
+                    and prev_entry[1] == seg else -1)
+            last_ref[ci][kid] = (len(stream.req), seg)
+            basis = int(size[p]) if known else csize
+            cap = caches[ci].serve_rate_cap(basis)
+            secs += csize / (min(bw_serve[k], cap) if cap else bw_serve[k])
+            stream.req.append(i)
+            stream.keys.append(kid)
+            stream.size.append(csize)
+            stream.prev.append(prev)
+            stream.reset.append(fresh_seg and j == 0)
+            stream.seg.append(seg)
+            stream.eff_obj.append(int(size[p]) if known else csize)
+            stream.miss_sec.append(miss_base + csize / bw_pull[pk])
+        serve_base[i] = secs
+
     direct_like = ok & (fallback | method_is_direct)
+    direct_sec = np.zeros(n, np.float64)
     for i in np.nonzero(direct_like)[0]:
         onode = owners[pid[i]].node.name
         wn = wnode[(int(sid[i]), int(workers[i]))]
-        seconds[i] = net.transfer_time(onode, wn, int(size[pid[i]]),
-                                       streams=int(streams[i]))
+        direct_sec[i] = net.transfer_time(onode, wn, int(size[pid[i]]),
+                                          streams=int(streams[i]))
 
-    # ---- aggregates ---------------------------------------------------------
-    sz_int = size[pid]  # int64: keep byte counters exact, not float sums
-    moved = ok & (is_hit | is_miss | fallback | method_is_direct)
-    bytes_moved = int(sz_int[moved].sum())
-    hits = int(nreq[is_hit].sum())
-    misses = int(nreq[is_miss].sum())
-    egress = int(sz_int[ok & (is_miss | fallback | method_is_direct)].sum())
-    served_mask = is_hit | is_miss
+    for stream in streams_by_cache.values():
+        stream.arrays()
+    # The distance/replay scans are O(N) per reference (O(N²) per
+    # stream); surface the longest stream so a sweep that drifts into
+    # that regime is diagnosable from report.solver.
+    if streams_by_cache:
+        telemetry["max_stream_refs"] = max(
+            telemetry.get("max_stream_refs", 0),
+            max(len(s.req) for s in streams_by_cache.values()))
+
+    # ---- cell-independent counters and flow constants ----------------------
     cache_failovers = int((nreq[served_mask] * dead_before[served_mask])
                           .sum())
     ranked_len = np.asarray([len(chains.get((int(s), int(p)), []))
@@ -1120,54 +1286,9 @@ def _run_cell_vectorized(spec: ScenarioSpec, fed: Federation, state: Dict):
     calls[served_mask] = nreq[served_mask] + 2
     calls[fallback] = 6
     calls[stash_mask & ~ok] = 2
-    group_failovers = int(calls[primary_dead].sum())
-    origin_fallbacks = int(fallback.sum())
 
-    # ---- per-request rows ---------------------------------------------------
-    results: List[FetchResult] = []
-    for i in range(n):
-        p = int(pid[i])
-        if not ok[i]:
-            results.append(FetchResult(
-                path=paths[p], method=methods[i], plane="analytic",
-                start=at[i], ok=False,
-                error=f"FileNotFoundError: {paths[p]}"))
-            continue
-        if method_is_direct[i]:
-            results.append(FetchResult(
-                path=paths[p], size=int(size[p]), method="direct",
-                plane="analytic", seconds=seconds[i], bytes=int(size[p]),
-                chunks=int(nchunks[p]), cache_misses=int(nchunks[p]),
-                source=owners[p].name, start=at[i]))
-        elif fallback[i]:
-            results.append(FetchResult(
-                path=paths[p], size=int(size[p]), method="origin-direct",
-                plane="analytic", seconds=seconds[i], bytes=int(size[p]),
-                chunks=int(nchunks[p]), cache_misses=int(nchunks[p]),
-                source=owners[p].name, start=at[i]))
-        else:
-            hit = bool(is_hit[i])
-            results.append(FetchResult(
-                path=paths[p], size=int(size[p]), method="stash",
-                plane="analytic", seconds=seconds[i], bytes=int(size[p]),
-                chunks=int(nchunks[p]), cache_hit=hit,
-                cache_hits=int(nchunks[p]) if hit else 0,
-                cache_misses=0 if hit else int(nchunks[p]),
-                source=cache_names[int(chosen[i])], start=at[i]))
-
-    report = ScenarioReport(
-        name=spec.name, engine="analytic", results=results,
-        bytes_moved=bytes_moved, cache_hits=hits, cache_misses=misses,
-        origin_egress_bytes=egress, cache_failovers=cache_failovers,
-        origin_fallbacks=origin_fallbacks,
-        group_failovers=group_failovers,
-        outages=was_counted["outages"],
-        recoveries=was_counted["recoveries"])
-
-    # ---- contention-pricing flow set (the storm counterfactual) ------------
-    flow_specs: List[Tuple[List, float]] = []
-    flow_bytes: List[float] = []
-    pulled: set = set()
+    serve_flow: Dict[int, Tuple[List, float]] = {}
+    pull_flow: Dict[Tuple[int, int], Tuple[List, float]] = {}
     for i in range(n):
         if not ok[i]:
             continue
@@ -1181,22 +1302,312 @@ def _run_cell_vectorized(spec: ScenarioSpec, fed: Federation, state: Dict):
         else:
             ci = int(chosen[i])
             cnode = caches[ci].node.name
-            if is_miss[i] and (ci, p) not in pulled:
-                pulled.add((ci, p))
+            if (ci, p) not in pull_flow:
                 onode = owners[p].node.name
-                plinks = topo.path(onode, cnode)
-                pcap = 4 * net.per_stream_cap(topo.rtt(onode, cnode))
-                flow_specs.append((plinks, pcap))
-                flow_bytes.append(float(size[p]))
+                pull_flow[(ci, p)] = (
+                    topo.path(onode, cnode),
+                    4 * net.per_stream_cap(topo.rtt(onode, cnode)))
             links = topo.path(cnode, wn)
             cap_f = max(1, spec.streams) * net.per_stream_cap(
                 topo.rtt(cnode, wn))
             rc = caches[ci].serve_rate_cap(int(size[p]))
             if rc:
                 cap_f = min(cap_f, rc)
-        flow_specs.append((links, cap_f))
-        flow_bytes.append(float(size[p]))
-    return report, (flow_specs, flow_bytes)
+        serve_flow[i] = (links, cap_f)
+
+    routing = _CellRouting()
+    routing.n = n
+    routing.paths = paths
+    routing.size = size
+    routing.pid = pid
+    routing.at = at
+    routing.nchunks = nchunks
+    routing.nreq = nreq
+    routing.methods = methods
+    routing.method_is_direct = method_is_direct
+    routing.owner_names = [o.name if o is not None else "" for o in owners]
+    routing.cache_names = cache_names
+    routing.chosen = chosen
+    routing.fallback = fallback
+    routing.ok = ok
+    routing.served_mask = served_mask
+    routing.serve_base = serve_base
+    routing.direct_sec = direct_sec
+    routing.streams = streams_by_cache
+    routing.counters = {
+        "cache_failovers": cache_failovers,
+        "group_failovers": int(calls[primary_dead].sum()),
+        "origin_fallbacks": int(fallback.sum()),
+        "outages": was_counted["outages"],
+        "recoveries": was_counted["recoveries"],
+    }
+    routing.serve_flow = serve_flow
+    routing.pull_flow = pull_flow
+    # byte counters that never depend on cache policy
+    sz_int = size[pid]
+    moved = ok & (served_mask | fallback | method_is_direct)
+    routing.bytes_moved = int(sz_int[moved].sum())
+    routing.direct_egress = int(
+        sz_int[ok & (fallback | method_is_direct)].sum())
+    return routing
+
+
+def _resolve_distances(wanted: Sequence[Tuple[_CacheStream, bytes,
+                                              np.ndarray]],
+                       telemetry: Dict) -> None:
+    """Build every stack-distance variant the sweep's cells asked for —
+    one bucketed kernel call for the whole sweep, which is the "one
+    pass prices every capacity in the column" contract.
+
+    A variant is the stream restricted to one admission filter class
+    (``mask`` marks admitted keys; refused keys never perturb the LRU
+    stack, so dropping their references is exact)."""
+    from repro.kernels.stack_distance import stack_distances_batch
+    pending: List[Tuple[_CacheStream, bytes, np.ndarray]] = []
+    seen_sigs: Set[Tuple[int, bytes]] = set()
+    for stream, sig, mask in wanted:
+        if sig in stream.variants or (id(stream), sig) in seen_sigs:
+            continue
+        seen_sigs.add((id(stream), sig))
+        pending.append((stream, sig, mask))
+    if not pending:
+        return
+    problems = []
+    selections = []
+    for stream, sig, mask in pending:
+        sel = np.nonzero(mask[stream.keys])[0]
+        fkeys, fseg = stream.keys[sel], stream.seg[sel]
+        prev: List[int] = []
+        last: Dict[int, Tuple[int, int]] = {}
+        for fi, (k, sg) in enumerate(zip(fkeys, fseg)):
+            entry = last.get(int(k))
+            prev.append(entry[0] if entry is not None
+                        and entry[1] == sg else -1)
+            last[int(k)] = (fi, int(sg))
+        selections.append((sel, fkeys, fseg))
+        problems.append((prev, stream.size[sel].astype(np.float64)))
+    kstats: Dict = {}
+    dists = stack_distances_batch(problems, stats=kstats)
+    telemetry["stack_calls"] = (telemetry.get("stack_calls", 0)
+                                + kstats["solve_calls"])
+    telemetry["stack_variants"] = (telemetry.get("stack_variants", 0)
+                                   + len(pending))
+    for (stream, sig, _), (sel, fkeys, fseg), dist in zip(
+            pending, selections, dists):
+        fsizes = stream.size[sel]
+        # distance from each key's final per-segment reference to its
+        # segment's end: resident at the wipe (or run end) iff
+        # end_dist + size <= capacity, so at capacity C the eviction
+        # count is (admitted misses) − (keys resident at segment ends)
+        end_dist, end_size = [], []
+        tot: Dict[int, int] = {}
+        seen: Set[Tuple[int, int]] = set()
+        for r in range(len(sel) - 1, -1, -1):
+            sk = (int(fseg[r]), int(fkeys[r]))
+            if sk in seen:
+                continue
+            seen.add(sk)
+            end_dist.append(tot.get(sk[0], 0))
+            end_size.append(int(fsizes[r]))
+            tot[sk[0]] = tot.get(sk[0], 0) + int(fsizes[r])
+        stream.variants[sig] = {
+            "sel": sel, "dist": dist, "sizes": fsizes,
+            "end_dist": np.asarray(end_dist, np.float64),
+            "end_size": np.asarray(end_size, np.int64),
+        }
+
+
+class _CellPlan:
+    """One batched cell, waiting on its hit/miss resolution.
+
+    Construction decides, per cache, how the cell's policy point is
+    evaluated against the shared :class:`_CellRouting` streams:
+
+    * capacity at or above the stream's whole distinct-key working set
+      with nothing refused → nothing can ever evict: hit iff not a
+      compulsory miss, no kernel involved;
+    * ``lru`` whose admission filter is constant per key (always, bar
+      outage meta-location races) → stack distances over the filtered
+      stream (refused keys never enter the stack), computed lazily in
+      one batched kernel call for the whole sweep and shared by every
+      cell with the same filter class: ``hit iff distance + size <=
+      capacity``; evictions = admitted misses − keys resident at each
+      segment end;
+    * ``fifo`` → the O(N log N) byte-frontier replay
+      (:func:`~repro.kernels.stack_distance.fifo_sim_batch`), which
+      takes per-reference admit bits directly;
+    * the residue (LRU whose admission basis flips mid-stream) → the
+      exact slot state machine
+      (:func:`~repro.kernels.stack_distance.cache_sim_batch`).
+
+    ``finalize`` then folds per-reference hits into the cell's
+    :class:`~repro.core.simclient.ScenarioReport` and pricing flow set.
+    """
+
+    def __init__(self, cspec: ScenarioSpec, routing: _CellRouting) -> None:
+        self.spec = cspec
+        self.routing = routing
+        self.offset = 0                  # slot in the global sim problem list
+        self.fifo_offset = 0             # slot in the global fifo list
+        self.problems: List[Tuple] = []      # pending cache_sim problems
+        self.fifo_problems: List[Tuple] = []  # pending fifo_sim problems
+        self.dist_wanted: List[Tuple[_CacheStream, bytes, np.ndarray]] = []
+        self._order: List[Tuple[int, str, object]] = []  # (cache, mode, arg)
+        self.knobs = knobs = _cache_knobs(cspec.federation)
+        for ci in sorted(routing.streams):
+            stream = routing.streams[ci]
+            if not len(stream.req):
+                continue
+            cap, policy, frac = knobs[routing.cache_names[ci]]
+            refused = stream.size > cap
+            if frac < 1.0:
+                refused = refused | (stream.eff_obj > frac * cap)
+            if not refused.any() and cap >= stream.total_key_bytes:
+                self._order.append((ci, "fits", None))
+            elif policy == "fifo":
+                self._order.append((ci, "fifo", len(self.fifo_problems)))
+                self.fifo_problems.append(
+                    (stream.keys, stream.size.astype(np.float64),
+                     ~refused, stream.reset, stream.n_keys, float(cap)))
+            elif stream.eff_const:
+                # the filter refuses a key always or never → exact as a
+                # filtered stack; cells sharing the filter class share
+                # the variant
+                admitted = np.ones(stream.n_keys, bool)
+                admitted[stream.keys[refused]] = False
+                sig = admitted.tobytes()
+                self._order.append((ci, "dist", sig))
+                self.dist_wanted.append((stream, sig, admitted))
+            else:
+                self._order.append((ci, "sim", len(self.problems)))
+                self.problems.append(
+                    (stream.keys, ~refused, stream.reset,
+                     stream.key_sizes.astype(np.float64),
+                     float(cap), False))
+
+    def finalize(self, sim_results: List,
+                 fifo_results: List) -> Tuple[ScenarioReport, Tuple]:
+        r = self.routing
+        knobs = self.knobs
+        n = r.n
+        hit_chunks = np.zeros(n, np.int64)
+        miss_chunks = np.zeros(n, np.int64)
+        miss_secs = np.zeros(n, np.float64)
+        egress = r.direct_egress
+        evictions = bytes_evicted = admission_rejects = 0
+        req_pulled = np.zeros(n, bool)       # request had >= 1 miss
+        for ci, mode, arg in self._order:
+            stream = r.streams[ci]
+            cap, policy, frac = knobs[r.cache_names[ci]]
+            policy_refused = (stream.eff_obj > frac * cap if frac < 1.0
+                              else None)
+            if mode == "fits":
+                hits = stream.prev >= 0
+            elif mode == "dist":
+                v = stream.variants[arg]
+                fhits = v["dist"] + v["sizes"] <= cap
+                hits = np.zeros(len(stream.req), bool)
+                hits[v["sel"][fhits]] = True
+                resident = v["end_dist"] + v["end_size"] <= cap
+                evictions += int((~fhits).sum() - resident.sum())
+                bytes_evicted += int(v["sizes"][~fhits].sum()
+                                     - v["end_size"][resident].sum())
+                if policy_refused is not None:
+                    # a constantly-refused key is never resident: every
+                    # one of its references re-asks admission
+                    admission_rejects += int(policy_refused.sum())
+            else:
+                results = fifo_results if mode == "fifo" else sim_results
+                base = (self.fifo_offset if mode == "fifo"
+                        else self.offset)
+                hits, ev, evb = results[base + arg]
+                evictions += ev
+                bytes_evicted += evb
+                if policy_refused is not None:
+                    admission_rejects += int(
+                        (~hits & policy_refused).sum())
+            miss = ~hits
+            np.add.at(hit_chunks, stream.req[hits], 1)
+            np.add.at(miss_chunks, stream.req[miss], 1)
+            np.add.at(miss_secs, stream.req[miss], stream.miss_sec[miss])
+            egress += int(stream.size[miss].sum())
+            req_pulled[stream.req[miss]] = True
+
+        seconds = r.serve_base + miss_secs + r.direct_sec
+
+        results: List[FetchResult] = []
+        flow_specs: List[Tuple[List, float]] = []
+        flow_bytes: List[float] = []
+        pulled: set = set()
+        for i in range(n):
+            p = int(r.pid[i])
+            if not r.ok[i]:
+                results.append(FetchResult(
+                    path=r.paths[p], method=r.methods[i], plane="analytic",
+                    start=r.at[i], ok=False,
+                    error=f"FileNotFoundError: {r.paths[p]}"))
+                continue
+            if r.method_is_direct[i] or r.fallback[i]:
+                results.append(FetchResult(
+                    path=r.paths[p], size=int(r.size[p]),
+                    method=("direct" if r.method_is_direct[i]
+                            else "origin-direct"),
+                    plane="analytic", seconds=seconds[i],
+                    bytes=int(r.size[p]), chunks=int(r.nchunks[p]),
+                    cache_misses=int(r.nchunks[p]),
+                    source=r.owner_names[p], start=r.at[i]))
+            else:
+                ci = int(r.chosen[i])
+                if req_pulled[i] and (ci, p) not in pulled:
+                    pulled.add((ci, p))
+                    links, cap_f = r.pull_flow[(ci, p)]
+                    flow_specs.append((links, cap_f))
+                    flow_bytes.append(float(r.size[p]))
+                hit = miss_chunks[i] == 0
+                results.append(FetchResult(
+                    path=r.paths[p], size=int(r.size[p]), method="stash",
+                    plane="analytic", seconds=seconds[i],
+                    bytes=int(r.size[p]), chunks=int(r.nchunks[p]),
+                    cache_hit=bool(hit), cache_hits=int(hit_chunks[i]),
+                    cache_misses=int(miss_chunks[i]),
+                    source=r.cache_names[ci], start=r.at[i]))
+            links, cap_f = r.serve_flow[i]
+            flow_specs.append((links, cap_f))
+            flow_bytes.append(float(r.size[p]))
+
+        report = ScenarioReport(
+            name=self.spec.name, engine="analytic", results=results,
+            bytes_moved=r.bytes_moved,
+            cache_hits=int(hit_chunks.sum()),
+            cache_misses=int(miss_chunks.sum()),
+            origin_egress_bytes=egress,
+            evictions=evictions, bytes_evicted=bytes_evicted,
+            admission_rejects=admission_rejects,
+            **r.counters)
+        return report, (flow_specs, flow_bytes)
+
+
+def _plan_cell_vectorized(cspec: ScenarioSpec, routing_fed: FederationSpec,
+                          fed: Federation, state: Dict,
+                          telemetry: Dict) -> Optional[_CellPlan]:
+    """Build (or reuse) the cell's routing product and wrap it in a
+    policy-point plan.  Routing is cached by the cell spec with its
+    *name* cleared and its federation replaced by ``routing_fed`` (the
+    normalized spec the caller already built to pick the shared
+    federation) — the whole cache-policy sweep column shares one
+    entry."""
+    key = dataclasses.replace(cspec, name="", federation=routing_fed)
+    routing = None
+    for known, cached in state["cells"]:
+        if known == key:
+            routing = cached
+            break
+    if routing is None:
+        routing = _cell_routing(key, fed, state, telemetry)
+        if routing is None:
+            return None
+        state["cells"].append((key, routing))
+    return _CellPlan(cspec, routing)
 
 
 def run_sweep(spec: SweepSpec, batched: bool = True,
@@ -1204,38 +1615,78 @@ def run_sweep(spec: SweepSpec, batched: bool = True,
     """Execute every cell of a sweep.
 
     ``batched=True`` routes eligible analytic cells through the
-    vectorized executor (shared pristine federations, numpy
-    accounting) and prices every batched cell's contention — the
-    all-at-once storm counterfactual of its workload — with the
-    pow2-bucketed, vmapped max-min kernel: a handful of jitted calls
-    for the whole sweep (``report.solver``).  Ineligible cells (sim
-    engine, proxy/cvmfs methods, evicting caches) fall back to a serial
+    vectorized executor: pristine federations, routing tables and
+    per-cache request streams shared across each cache-policy sweep
+    column; hit/miss resolved by the stack-distance kernel (one pass
+    answers every LRU capacity in the column) or the batched LRU/FIFO
+    state machine (capacity × policy × admission points of one stream
+    share a device call); and every cell's contention — the all-at-once
+    storm counterfactual of its workload — priced by the pow2-bucketed,
+    vmapped max-min kernel.  A handful of jitted calls covers the whole
+    sweep (``report.solver``).  Ineligible cells (sim engine,
+    proxy/cvmfs methods, LFU/TTL victim orders) fall back to a serial
     :func:`run_scenario`, so a mixed sweep still completes with
     identical semantics.  ``batched=False`` is the all-serial baseline
     the benchmarks and parity tests compare against.
     """
     t0 = time.perf_counter()
     shared = _SharedFederations()
+    telemetry: Dict[str, object] = {}
+    entries: List[Tuple[Dict, ScenarioSpec, Optional[_CellPlan],
+                        Optional[ScenarioReport]]] = []
+    sim_problems: List[Tuple] = []
+    fifo_problems: List[Tuple] = []
+    dist_wanted: List[Tuple[_CacheStream, bytes, np.ndarray]] = []
+    batched_cells = serial_cells = 0
+    for params, cspec in spec.cells():
+        plan = None
+        if batched and _sweep_batchable(cspec):
+            routing_fed = _routing_fedspec(cspec.federation)
+            fed, state = shared.get(routing_fed)
+            plan = _plan_cell_vectorized(cspec, routing_fed, fed, state,
+                                         telemetry)
+        if plan is not None:
+            plan.offset = len(sim_problems)
+            plan.fifo_offset = len(fifo_problems)
+            sim_problems.extend(plan.problems)
+            fifo_problems.extend(plan.fifo_problems)
+            dist_wanted.extend(plan.dist_wanted)
+            batched_cells += 1
+            entries.append((dict(params), cspec, plan, None))
+        else:
+            serial_cells += 1
+            entries.append((dict(params), cspec, None, run_scenario(cspec)))
+
+    if dist_wanted:
+        _resolve_distances(dist_wanted, telemetry)
+    sim_results: List = []
+    fifo_results: List = []
+    if fifo_problems:
+        from repro.kernels.stack_distance import fifo_sim_batch
+        fifo_stats: Dict = {}
+        fifo_results = fifo_sim_batch(fifo_problems, stats=fifo_stats)
+        telemetry["fifo_calls"] = fifo_stats["solve_calls"]
+        telemetry["fifo_problems"] = fifo_stats["problems"]
+    if sim_problems:
+        from repro.kernels.stack_distance import cache_sim_batch
+        sim_stats: Dict = {}
+        sim_results = cache_sim_batch(sim_problems, stats=sim_stats)
+        telemetry["cache_sim_calls"] = sim_stats["solve_calls"]
+        telemetry["cache_sim_problems"] = sim_stats["problems"]
+
     cells: List[SweepCell] = []
     problems = []
     problem_bytes = []
     problem_cells: List[SweepCell] = []
-    batched_cells = serial_cells = 0
-    for params, cspec in spec.cells():
-        res = None
-        if batched and _sweep_batchable(cspec):
-            fed, state = shared.get(cspec.federation)
-            res = _run_cell_vectorized(cspec, fed, state)
-        if res is not None:
-            report, (flow_specs, flow_bytes) = res
+    for params, cspec, plan, report in entries:
+        if plan is not None:
+            report, (flow_specs, flow_bytes) = plan.finalize(sim_results,
+                                                            fifo_results)
             executor = "batched"
-            batched_cells += 1
         else:
-            report = run_scenario(cspec)
             flow_specs = flow_bytes = None
             executor = "serial"
-            serial_cells += 1
-        cell = SweepCell(params=dict(params), name=cspec.name,
+        cell = SweepCell(params=params, name=cspec.name,
                          engine=cspec.engine, executor=executor,
                          summary=report.summary())
         if executor == "batched" and price_contention and flow_specs:
@@ -1244,20 +1695,21 @@ def run_sweep(spec: SweepSpec, batched: bool = True,
             problem_cells.append(cell)
         cells.append(cell)
     solver: Dict[str, object] = {"solve_calls": 0, "priced_cells": 0}
+    solver.update(telemetry)
     if problems:
         from repro.kernels.batched_maxmin import maxmin_rates_batch
         stats: Dict = {}
         rates = maxmin_rates_batch(problems, stats=stats)
         solver.update(stats)
         solver["priced_cells"] = len(problems)
-        for cell, nbytes, r in zip(problem_cells, problem_bytes, rates):
-            r = np.maximum(r, 1e-9)
+        for cell, nbytes, rr in zip(problem_cells, problem_bytes, rates):
+            rr = np.maximum(rr, 1e-9)
             cell.pricing = {
-                "peak_flows": int(len(r)),
-                "min_rate": float(r.min()) if len(r) else 0.0,
-                "mean_rate": float(r.mean()) if len(r) else 0.0,
-                "storm_finish_seconds": float((nbytes / r).max())
-                if len(r) else 0.0,
+                "peak_flows": int(len(rr)),
+                "min_rate": float(rr.min()) if len(rr) else 0.0,
+                "mean_rate": float(rr.mean()) if len(rr) else 0.0,
+                "storm_finish_seconds": float((nbytes / rr).max())
+                if len(rr) else 0.0,
             }
     return SweepReport(
         name=spec.name, axes={k: list(v) for k, v in spec.axes.items()},

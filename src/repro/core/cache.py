@@ -46,6 +46,8 @@ class CacheStats:
     bytes_evicted: int = 0
     ttl_expired: int = 0
     admission_rejects: int = 0
+    oversize_rejects: int = 0
+    replacements: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -126,16 +128,29 @@ class CacheServer:
               force: bool = False) -> bool:
         """Insert a chunk, evicting cold chunks to make room.  In-flight
         (pinned) chunks are never evicted.  Returns False when the
-        admission policy refuses the object (size-aware admission);
-        ``force`` bypasses admission (write-back dirty data must land)."""
+        admission policy refuses the object (size-aware admission) or
+        when the payload alone exceeds ``capacity_bytes`` (it can never
+        fit); ``force`` bypasses both (write-back dirty data must land,
+        even over-committed)."""
         key = (path, index)
         if key in self._lru:
             if self.policy.expired(key, self.clock):
                 self._remove(key)  # stale entry: fall through to re-admit
                 self.stats.ttl_expired += 1
-            else:
+            elif (self._lru[key].size == payload.size
+                  and self._lru[key].digest == payload.digest):
+                # Identical replica (collapsed-forwarding re-admit race):
+                # a pure touch.
                 self.policy.on_access(key, self.clock)
                 return True
+            else:
+                # Re-published chunk: the resident copy is stale.  Serving
+                # it would hand out old bytes and leave any size delta
+                # unaccounted — replace it (the LocalCache.put fix):
+                # remove without counting an eviction, then fall through
+                # to a fresh admission of the new payload.
+                self._remove(key)
+                self.stats.replacements += 1
         if object_size is None:
             meta = self._metas.get(path)
             object_size = meta.size if meta is not None else payload.size
@@ -143,6 +158,12 @@ class CacheServer:
                 key, object_size, payload.size,
                 self.capacity_bytes, self.usage_bytes):
             self.stats.admission_rejects += 1
+            return False
+        if not force and payload.size > self.capacity_bytes:
+            # Refusing outright beats draining the whole cache and then
+            # over-committing: the chunk can never fit, and inserting it
+            # anyway would leave usage_bytes > capacity_bytes forever.
+            self.stats.oversize_rejects += 1
             return False
         self.evict_until(payload.size)
         self._lru[key] = payload
@@ -294,6 +315,7 @@ class CacheServer:
             bytes_evicted=self.stats.bytes_evicted,
             ttl_expired=self.stats.ttl_expired,
             admission_rejects=self.stats.admission_rejects,
+            oversize_rejects=self.stats.oversize_rejects,
             time=self.clock if now is None else now)
         if self.monitor:
             self.monitor.cache_usage(pkt)

@@ -69,6 +69,7 @@ class CacheUsagePacket:
     ttl_expired: int
     admission_rejects: int
     time: float
+    oversize_rejects: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -257,6 +258,32 @@ class SweepAggregator:
             for row in self.marginal(axis, metric):
                 out.append((axis,) + row)
         return out
+
+    POLICY_METRICS = ("hit_rate", "evictions", "bytes_evicted",
+                      "admission_rejects")
+
+    def policy_marginals(self, axis: Optional[str] = None) -> List[tuple]:
+        """Per-eviction-policy marginals, the sweep-side sibling of
+        :meth:`MonitorCollector.policy_table`.
+
+        Rows: ``(policy, cells, hit_rate, evictions, bytes_evicted,
+        admission_rejects)`` — means over every cell sharing the policy
+        value, marginalized over all other axes.  ``axis`` defaults to
+        the first observed axis whose name ends with
+        ``"eviction_policy"`` (the sweep executor's spelling is
+        ``"federation.eviction_policy"``).
+        """
+        if axis is None:
+            axis = next((a for a in self.axes()
+                         if a.endswith("eviction_policy")), None)
+            if axis is None:
+                return []
+        means = {metric: {v: mean for v, _, mean, _, _
+                          in self.marginal(axis, metric)}
+                 for metric in self.POLICY_METRICS}
+        return [(value, cells) + tuple(means[m][value]
+                                       for m in self.POLICY_METRICS)
+                for value, cells, *_ in self.marginal(axis, "hit_rate")]
 
 
 class UsageAggregator:

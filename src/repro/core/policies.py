@@ -24,6 +24,7 @@ cache capacity — one multi-TB dataset must not flush a whole site cache
 """
 from __future__ import annotations
 
+import copy
 from collections import OrderedDict
 from typing import Dict, Optional, Set, Tuple
 
@@ -203,9 +204,16 @@ EVICTION_POLICIES = {
 
 
 def make_eviction_policy(spec, ttl_seconds: float = 3600.0) -> EvictionPolicy:
-    """Build a policy from a name (``"lru"``...) or pass one through."""
+    """Build a policy from a name (``"lru"``...) or copy an instance.
+
+    An *instance* spec is deep-copied, never passed through: one policy
+    object handed to ``SiteSpec``/``build_*_federation`` with
+    ``cache_replicas > 1`` would otherwise be silently shared across
+    every cache server of the site, cross-contaminating victim order
+    (an access on replica A reordering replica B's LRU stack).
+    """
     if isinstance(spec, EvictionPolicy):
-        return spec
+        return copy.deepcopy(spec)
     try:
         cls = EVICTION_POLICIES[spec]
     except KeyError:

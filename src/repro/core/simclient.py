@@ -318,6 +318,16 @@ class OutageSchedule:
     def __len__(self) -> int:
         return len(self.events)
 
+    def __eq__(self, other: object) -> bool:
+        # Value equality lets the sweep executor share one routing/
+        # stream computation across cells whose schedules are merely
+        # equal-by-construction (e.g. the same outage_rate axis value).
+        if not isinstance(other, OutageSchedule):
+            return NotImplemented
+        return self.events == other.events
+
+    __hash__ = None  # mutable value type, like a list
+
     def merge(self, other: "OutageSchedule") -> "OutageSchedule":
         return OutageSchedule([*self.events, *other.events])
 
@@ -413,6 +423,9 @@ class ScenarioReport:
     cache_hits: int = 0
     cache_misses: int = 0
     origin_egress_bytes: int = 0
+    evictions: int = 0
+    bytes_evicted: int = 0
+    admission_rejects: int = 0
     cache_failovers: int = 0
     hedged_fetches: int = 0
     origin_fallbacks: int = 0
@@ -457,6 +470,9 @@ class ScenarioReport:
             "bytes_moved": self.bytes_moved,
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
+            "evictions": self.evictions,
+            "bytes_evicted": self.bytes_evicted,
+            "admission_rejects": self.admission_rejects,
             "cache_failovers": self.cache_failovers,
             "hedged_fetches": self.hedged_fetches,
             "origin_fallbacks": self.origin_fallbacks,
@@ -552,6 +568,12 @@ class ScenarioEngine:
             cache_hits=sum(c.stats.hits for c in self.fed.caches.values()),
             cache_misses=sum(c.stats.misses
                              for c in self.fed.caches.values()),
+            evictions=sum(c.stats.evictions
+                          for c in self.fed.caches.values()),
+            bytes_evicted=sum(c.stats.bytes_evicted
+                              for c in self.fed.caches.values()),
+            admission_rejects=sum(c.stats.admission_rejects
+                                  for c in self.fed.caches.values()),
             reallocations=self.sim.reallocations,
             flow_events=self.sim.flow_events,
             completed_flows=self.sim.completed_flows,

@@ -29,9 +29,39 @@ class TestPolicySelection:
         with pytest.raises(ValueError):
             make_eviction_policy("clock")
 
-    def test_policy_instance_passthrough(self):
+    def test_policy_instance_is_copied_not_shared(self):
+        """One policy instance handed to several caches must not be
+        shared: victim order on cache A would otherwise be perturbed by
+        accesses on cache B (the cache_replicas > 1 contamination bug)."""
         p = make_eviction_policy("lfu")
-        assert make_eviction_policy(p) is p
+        built = make_eviction_policy(p)
+        assert built is not p
+        assert type(built) is type(p)
+        # mutating the copy leaves the original untouched
+        built.on_admit(("/f", 0), 10, 0.0)
+        assert built.victim(set()) == ("/f", 0)
+        assert p.victim(set()) is None
+
+    def test_replica_caches_get_distinct_policy_objects(self):
+        """A 2-replica site built from one SiteSpec: each CacheServer
+        owns its own policy; touching one replica's keys must not
+        reorder the other's LRU stack."""
+        from repro.core import FederationSpec, SiteSpec
+        spec = FederationSpec(
+            sites=[SiteSpec(name="s", cache_replicas=2, cache_capacity=30)],
+            origin_site="s")
+        fed = spec.build()
+        a, b = [fed.caches[n] for n in spec.cache_names()]
+        assert a.policy is not b.policy
+        for i in range(3):
+            a.admit("/f", i, Payload.synthetic(10, "/f", i))
+            b.admit("/f", i, Payload.synthetic(10, "/f", i))
+        a.lookup("/f", 0)                 # touch only replica A
+        a.admit("/g", 0, Payload.synthetic(10, "/g", 0))
+        b.admit("/g", 0, Payload.synthetic(10, "/g", 0))
+        assert a.resident("/f", 0) and not a.resident("/f", 1)
+        # replica B's own LRU order was not contaminated by A's touch
+        assert not b.resident("/f", 0) and b.resident("/f", 1)
 
     @pytest.mark.parametrize("name", ["lru", "lfu", "ttl", "fifo"])
     def test_all_policies_respect_capacity(self, name):
@@ -118,6 +148,95 @@ class TestAdmission:
                         Payload.synthetic(50, f"/scan/{i}", 0),
                         object_size=50)
             assert all(c.resident(p, 0) for p, _ in hot) is hot_survives
+
+
+class TestAdmitOversize:
+    def test_oversize_payload_is_refused_not_overcommitted(self):
+        """A payload larger than the whole cache can never fit;
+        admitting it used to drain the cache via evict_until and then
+        insert anyway, leaving usage_bytes > capacity_bytes forever."""
+        c = _cache(100)
+        for i in range(5):
+            assert c.admit("/hot", i, Payload.synthetic(10, "/hot", i))
+        ok = c.admit("/giant", 0, Payload.synthetic(150, "/giant", 0),
+                     object_size=150)
+        assert not ok
+        assert not c.resident("/giant", 0)
+        assert c.stats.oversize_rejects == 1
+        # the hot set was NOT drained to make room for the impossible
+        assert all(c.resident("/hot", i) for i in range(5))
+        assert c.usage_bytes == 50
+        assert c.stats.evictions == 0
+
+    def test_force_still_lands_oversize_dirty_data(self):
+        """Write-back dirty data must land even over-committed — the
+        documented force-path exception."""
+        c = _cache(100)
+        assert c.admit("/dirty", 0, Payload.synthetic(150, "/dirty", 0),
+                       force=True)
+        assert c.resident("/dirty", 0)
+        assert c.usage_bytes == 150  # over-commit, by contract
+
+    def test_oversize_refusal_still_serves_through(self):
+        """The networked path keeps serving a refused chunk (it just is
+        not cached): every access is a miss + origin re-pull."""
+        from repro.core import (Coord, Origin, Redirector, RedirectorPair,
+                                Topology)
+        from repro.core.transfer import NetworkModel
+        topo = Topology()
+        topo.add_site("s")
+        n_o = topo.add_node("o", Coord("s", rack=255), 1e10)
+        n_r = topo.add_node("r", Coord("s", rack=254), 1e10)
+        n_c = topo.add_node("c", Coord("s", rack=253), 1e10)
+        origin = Origin("o", n_o)
+        pair = RedirectorPair(Redirector("r1", n_r), Redirector("r2", n_r))
+        pair.subscribe(origin)
+        net = NetworkModel(topo)
+        cache = CacheServer("c", n_c, 100, pair, net)
+        origin.put_object("/big", 150)
+        for _ in range(2):
+            payload, stats = cache.get_chunk("o", "/big", 0)
+            assert payload is not None and stats.cache_misses == 1
+        assert cache.stats.oversize_rejects == 2
+        assert origin.stats.egress_bytes == 300  # re-pulled every time
+
+
+class TestAdmitReplacement:
+    def test_republished_chunk_replaces_stale_payload(self):
+        """admit() on a resident key with *different* content must not
+        touch-and-return the stale bytes (the LocalCache.put fix,
+        mirrored): the new payload replaces it, size delta accounted."""
+        c = _cache(100)
+        old = Payload.from_bytes(b"a" * 10)
+        new = Payload.from_bytes(b"b" * 30)
+        assert c.admit("/f", 0, old)
+        assert c.admit("/f", 0, new)
+        assert c.lookup("/f", 0).data == new.data
+        assert c.usage_bytes == 30
+        assert c.stats.replacements == 1
+        assert c.stats.evictions == 0    # replacement is not an eviction
+
+    def test_identical_payload_readmit_is_a_touch(self):
+        """Collapsed-forwarding races re-admit the same bytes; that must
+        stay a pure LRU touch (no churn, no accounting drift)."""
+        c = _cache(30)
+        for i in range(3):
+            c.admit("/f", i, Payload.synthetic(10, "/f", i))
+        assert c.admit("/f", 0, Payload.synthetic(10, "/f", 0))  # touch
+        assert c.stats.replacements == 0
+        c.admit("/g", 0, Payload.synthetic(10, "/g", 0))
+        assert c.resident("/f", 0)       # touched → survived
+        assert not c.resident("/f", 1)   # LRU victim instead
+        assert c.usage_bytes == 30
+
+    def test_replacement_that_no_longer_fits_drops_the_key(self):
+        """If the replacement payload is refused (oversize), the stale
+        copy must already be gone — never keep serving old bytes."""
+        c = _cache(100)
+        c.admit("/f", 0, Payload.from_bytes(b"a" * 10))
+        assert not c.admit("/f", 0, Payload.from_bytes(b"x" * 150))
+        assert not c.resident("/f", 0)
+        assert c.usage_bytes == 0
 
 
 class TestMonitoringSurface:

@@ -1,0 +1,176 @@
+"""Stack-distance / cache state-machine kernels vs a scalar
+``CacheServer`` oracle replay.
+
+The sweep executor's cell-exact parity rests on these kernels answering
+hit/miss/eviction questions byte-identically to the real cache state
+machine, so the oracle here is the :class:`~repro.core.cache.CacheServer`
+itself (``lookup``/``admit``/``clear``), not a reimplementation.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (CacheServer, Coord, Payload, SizeAwareAdmission,
+                        Topology)
+from repro.kernels.stack_distance import (cache_sim_batch, lru_hits,
+                                          stack_distances_batch)
+
+
+def _cache(capacity, policy="lru", admission=None):
+    topo = Topology()
+    topo.add_site("s")
+    node = topo.add_node(f"c-{policy}-{capacity}", Coord("s"), 1e10)
+    return CacheServer(node.name, node, int(capacity), policy=policy,
+                       admission=admission)
+
+
+def _trace(seed, n=300, n_keys=14, max_size=20, reset_rate=0.02):
+    """A random keyed reference stream with sizes and cold restarts."""
+    rng = random.Random(seed)
+    sizes = [rng.randint(1, max_size) for _ in range(n_keys)]
+    keys = [rng.randrange(n_keys) for _ in range(n)]
+    resets = [i > 0 and rng.random() < reset_rate for i in range(n)]
+    return keys, sizes, resets
+
+
+def _oracle(keys, sizes, resets, capacity, policy="lru", fraction=None):
+    """Replay the stream through a real CacheServer."""
+    admission = SizeAwareAdmission(fraction) if fraction is not None else None
+    c = _cache(capacity, policy=policy, admission=admission)
+    hits = []
+    for k, r in zip(keys, resets):
+        if r:
+            c.clear()
+        path = f"/k{k}"
+        if c.lookup(path, 0) is not None:
+            hits.append(True)
+            continue
+        hits.append(False)
+        c.admit(path, 0, Payload.synthetic(sizes[k], path, 0),
+                object_size=sizes[k])
+    return (np.asarray(hits), c.stats.evictions, c.stats.bytes_evicted,
+            c.stats.admission_rejects, c.stats.oversize_rejects)
+
+
+def _prev_indices(keys, resets):
+    prev, last = [], {}
+    for i, (k, r) in enumerate(zip(keys, resets)):
+        if r:
+            last = {}
+        prev.append(last.get(k, -1))
+        last[k] = i
+    return prev
+
+
+class TestStackDistances:
+    def test_lru_hits_match_cache_server_at_every_capacity(self):
+        """One distance pass answers every capacity in a sweep column —
+        the Mattson inclusion property with byte-granular evict_until."""
+        keys, sizes, resets = _trace(seed=1)
+        ref_sizes = np.asarray([sizes[k] for k in keys], float)
+        dist = stack_distances_batch([(_prev_indices(keys, resets),
+                                       ref_sizes)])[0]
+        for capacity in (20, 25, 33, 47, 64, 100, 10_000):
+            hits = lru_hits(dist, ref_sizes, capacity)
+            oracle_hits, *_ = _oracle(keys, sizes, resets, capacity)
+            assert (hits == oracle_hits).all(), capacity
+
+    def test_compulsory_misses_are_inf(self):
+        dist = stack_distances_batch([([-1, -1, 0, -1], [3.0] * 4)])[0]
+        assert np.isinf(dist[[0, 1, 3]]).all()
+        assert dist[2] == 3.0  # one distinct key (ref 1) in between
+
+    def test_distance_counts_distinct_key_bytes(self):
+        # stream A B C B A: A's reuse distance = |B| + |C| (B once)
+        keys = [0, 1, 2, 1, 0]
+        sizes = {0: 5.0, 1: 7.0, 2: 11.0}
+        prev = _prev_indices(keys, [False] * 5)
+        dist = stack_distances_batch(
+            [(prev, [sizes[k] for k in keys])])[0]
+        assert dist[4] == 7.0 + 11.0
+        assert dist[3] == 11.0
+
+    def test_bucketing_telemetry(self):
+        """Same-bucket streams share one jitted call; ragged lengths
+        land in O(log) buckets (floored so short streams coalesce),
+        batch padded to a power of two."""
+        problems = [(_prev_indices(*t), [1.0] * len(t[0]))
+                    for t in (([0] * 5, [False] * 5),
+                              ([1] * 7, [False] * 7),
+                              ([2] * 300, [False] * 300))]
+        stats = {}
+        stack_distances_batch(problems, stats=stats)
+        assert stats["problems"] == 3
+        assert stats["solve_calls"] == 2          # {256-floor ×2, 512 ×1}
+        assert sorted(stats["buckets"]) == [(1, 512), (2, 256)]
+        assert stats["padded_problems"] == 0      # both batches pow2 already
+
+
+class TestCacheStateMachine:
+    @pytest.mark.parametrize("policy", ["lru", "fifo"])
+    @pytest.mark.parametrize("capacity", [25, 40, 77, 1000])
+    def test_hits_and_evictions_match_cache_server(self, policy, capacity):
+        keys, sizes, resets = _trace(seed=2)
+        admit = np.asarray([sizes[k] <= capacity for k in keys])
+        (hits, ev, evb), = cache_sim_batch(
+            [(keys, admit, resets, np.asarray(sizes, float),
+              float(capacity), policy == "fifo")])
+        o_hits, o_ev, o_evb, *_ = _oracle(keys, sizes, resets, capacity,
+                                          policy=policy)
+        assert (hits == o_hits).all()
+        assert (ev, evb) == (o_ev, o_evb)
+
+    def test_admission_filter_respects_resident_copies(self):
+        """The size-aware filter applies on *miss*, not on lookup: a
+        copy admitted while the filter allowed it keeps hitting."""
+        keys, sizes, resets = _trace(seed=3, max_size=40)
+        capacity, fraction = 120, 0.2
+        admit = np.asarray([sizes[k] <= fraction * capacity for k in keys])
+        (hits, ev, evb), = cache_sim_batch(
+            [(keys, admit, resets, np.asarray(sizes, float),
+              float(capacity), False)])
+        o_hits, o_ev, o_evb, o_rej, _ = _oracle(
+            keys, sizes, resets, capacity, fraction=fraction)
+        assert (hits == o_hits).all()
+        assert (ev, evb) == (o_ev, o_evb)
+        # policy rejects derive from the hit mask outside the kernel
+        assert int((~hits & ~admit).sum()) == o_rej
+
+    def test_oversize_chunks_never_insert(self):
+        """Chunks larger than the cache: always a miss, never perturb
+        the stack — mirrors the CacheServer.admit oversize refusal."""
+        keys, sizes, resets = _trace(seed=4, max_size=60)
+        capacity = 50
+        admit = np.asarray([sizes[k] <= capacity for k in keys])
+        (hits, ev, evb), = cache_sim_batch(
+            [(keys, admit, resets, np.asarray(sizes, float),
+              float(capacity), False)])
+        o_hits, o_ev, o_evb, _, o_over = _oracle(keys, sizes, resets,
+                                                 capacity)
+        assert (hits == o_hits).all()
+        assert (ev, evb) == (o_ev, o_evb)
+        assert int((~hits & ~admit).sum()) == o_over
+
+    def test_capacity_policy_column_shares_one_call(self):
+        """A capacity × policy sweep column over one stream is vmapped
+        data, not separate compiles — one bucket, one device call."""
+        keys, sizes, resets = _trace(seed=5)
+        ksz = np.asarray(sizes, float)
+        problems = []
+        for capacity in (30, 50, 90, 200):
+            for fifo in (False, True):
+                admit = np.asarray([sizes[k] <= capacity for k in keys])
+                problems.append((keys, admit, resets, ksz,
+                                 float(capacity), fifo))
+        stats = {}
+        results = cache_sim_batch(problems, stats=stats)
+        assert stats["solve_calls"] == 1
+        assert stats["problems"] == 8
+        for (hits, ev, evb), (capacity, fifo) in zip(
+                results, [(c, f) for c in (30, 50, 90, 200)
+                          for f in (False, True)]):
+            o_hits, o_ev, o_evb, *_ = _oracle(
+                keys, sizes, resets, capacity,
+                policy="fifo" if fifo else "lru")
+            assert (hits == o_hits).all() and (ev, evb) == (o_ev, o_evb)

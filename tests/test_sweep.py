@@ -12,7 +12,8 @@ from repro.core import (FederationSpec, FetchRequest, ScenarioSpec,
                         run_scenario, run_sweep)
 
 PARITY_INTS = ("requests", "completed", "bytes_moved", "cache_hits",
-               "cache_misses", "origin_egress_bytes", "cache_failovers",
+               "cache_misses", "origin_egress_bytes", "evictions",
+               "bytes_evicted", "admission_rejects", "cache_failovers",
                "origin_fallbacks", "group_failovers", "outages",
                "recoveries")
 PARITY_FLOATS = ("hit_rate", "mean_seconds", "p50_seconds", "p95_seconds")
@@ -205,17 +206,132 @@ class TestSerialFallback:
         rep = run_sweep(sweep, batched=True)
         assert rep.cells[0].executor == "serial"
 
-    def test_evicting_cache_falls_back_and_stays_exact(self):
-        """A cache too small for its working set leaves the vectorized
-        regime (evictions would break first-occurrence accounting); the
-        sweep must detect that and produce serial-exact numbers."""
+    def test_lfu_and_ttl_policies_fall_back(self):
+        """Victim orders the kernels don't model (LFU frequency buckets,
+        TTL expiry) still run serially — with identical semantics."""
+        sweep = SweepSpec(name="pol", base=base_spec(n_requests=8),
+                          axes={"federation.eviction_policy":
+                                ["lru", "fifo", "lfu", "ttl"]})
+        rep = run_sweep(sweep, batched=True)
+        by_policy = {c.params["federation.eviction_policy"]: c.executor
+                     for c in rep.cells}
+        assert by_policy == {"lru": "batched", "fifo": "batched",
+                             "lfu": "serial", "ttl": "serial"}
+
+    def test_policy_instance_axis_falls_back(self):
+        """A non-string eviction_policy (a policy *instance*) cannot be
+        introspected by the kernels; the cell must go serial."""
+        from repro.core import LRUPolicy
+        sweep = SweepSpec(name="inst", base=base_spec(n_requests=6),
+                          axes={"federation.eviction_policy":
+                                [LRUPolicy()]})
+        rep = run_sweep(sweep, batched=True)
+        assert rep.cells[0].executor == "serial"
+
+
+class TestEvictionParity:
+    """The regime PR 5 closes: capacity / policy / admission axes run
+    batched (stack-distance + state-machine kernels) with cell-exact
+    counters — including evictions, bytes_evicted and re-pull egress."""
+
+    @pytest.fixture(scope="class")
+    def reports(self):
+        # working set (~8 objects × ~hundreds of MB) far exceeds the
+        # smallest capacities → heavy eviction churn in half the cells
+        sweep = SweepSpec(name="evict", base=base_spec(n_requests=40), axes={
+            "federation.cache_capacity": [2e8, 5e8, 1e9, 32e12],
+            "federation.eviction_policy": ["lru", "fifo"],
+            "federation.admission_max_fraction": [1.0, 0.3],
+        })
+        batched = run_sweep(sweep, batched=True)
+        serial = run_sweep(sweep, batched=False, price_contention=False)
+        return batched, serial
+
+    def test_acceptance_no_serial_cells(self, reports):
+        """ISSUE-5 acceptance: the capacity × {lru,fifo} × admission
+        sweep runs wholly through the batched executor."""
+        batched, _ = reports
+        assert batched.serial_cells == 0
+        assert batched.batched_cells == len(batched.cells) == 16
+
+    def test_every_cell_is_byte_exact(self, reports):
+        batched, serial = reports
+        for cb, cs in zip(batched.cells, serial.cells):
+            assert cb.params == cs.params
+            for k in PARITY_INTS:
+                assert cb.summary[k] == cs.summary[k], (cb.params, k)
+            for k in PARITY_FLOATS:
+                assert cb.summary[k] == pytest.approx(cs.summary[k],
+                                                      rel=1e-9), \
+                    (cb.params, k)
+
+    def test_evictions_actually_happen_and_drive_egress(self, reports):
+        batched, _ = reports
+        tiny = [c for c in batched.cells
+                if c.params["federation.cache_capacity"] == 2e8
+                and c.params["federation.admission_max_fraction"] == 1.0]
+        huge = [c for c in batched.cells
+                if c.params["federation.cache_capacity"] == 32e12
+                and c.params["federation.admission_max_fraction"] == 1.0]
+        assert all(c.summary["evictions"] > 0 for c in tiny)
+        assert all(c.summary["bytes_evicted"] > 0 for c in tiny)
+        assert all(c.summary["evictions"] == 0 for c in huge)
+        # re-pulls of evicted chunks show up as extra origin egress
+        for t, h in zip(tiny, huge):
+            assert (t.summary["origin_egress_bytes"]
+                    > h.summary["origin_egress_bytes"])
+
+    def test_admission_rejects_are_counted(self, reports):
+        batched, _ = reports
+        filtered = [c for c in batched.cells
+                    if c.params["federation.admission_max_fraction"] < 1.0
+                    and c.params["federation.cache_capacity"] <= 1e9]
+        assert any(c.summary["admission_rejects"] > 0 for c in filtered)
+
+    def test_eviction_cells_under_outage_stay_exact(self):
+        """Cold restarts interleave with eviction churn: segment-aware
+        distances and state-machine resets must both stay exact."""
+        sweep = SweepSpec(name="stormy", base=base_spec(n_requests=30),
+                          axes={
+                              "federation.cache_capacity": [4e8],
+                              "federation.eviction_policy": ["lru", "fifo"],
+                              "outage_rate": [0.5],
+                          })
+        b = run_sweep(sweep, batched=True, price_contention=False)
+        s = run_sweep(sweep, batched=False, price_contention=False)
+        assert b.serial_cells == 0
+        for cb, cs in zip(b.cells, s.cells):
+            for k in PARITY_INTS:
+                assert cb.summary[k] == cs.summary[k], (cb.params, k)
+            assert cb.summary["evictions"] > 0
+
+    def test_single_evicting_cell_matches_run_scenario(self):
+        """Straight against run_scenario, not just the serial sweep."""
         sweep = SweepSpec(name="tiny", base=base_spec(n_requests=20),
                           axes={"federation.cache_capacity": [5e8]})
         rep = run_sweep(sweep, batched=True)
-        assert rep.cells[0].executor == "serial"
-        serial = run_scenario(sweep.cells()[0][1])
-        assert (rep.cells[0].summary["origin_egress_bytes"]
-                == serial.summary()["origin_egress_bytes"])
+        assert rep.cells[0].executor == "batched"
+        serial = run_scenario(sweep.cells()[0][1]).summary()
+        for k in PARITY_INTS:
+            assert rep.cells[0].summary[k] == serial[k], k
+
+    def test_policy_marginals_surface(self):
+        """SweepAggregator groups the eviction axis for dashboards."""
+        from repro.core import SweepAggregator
+        sweep = SweepSpec(name="pm", base=base_spec(n_requests=16), axes={
+            "federation.eviction_policy": ["lru", "fifo"],
+            "federation.cache_capacity": [3e8, 1e12],
+        })
+        rep = run_sweep(sweep, batched=True, price_contention=False)
+        agg = SweepAggregator()
+        for cell in rep.cells:
+            agg.add(cell.params, cell.summary)
+        rows = agg.policy_marginals()
+        assert {r[0] for r in rows} == {"lru", "fifo"}
+        by_policy = {r[0]: r for r in rows}
+        # (policy, cells, hit_rate, evictions, bytes_evicted, rejects)
+        assert by_policy["lru"][1] == 2
+        assert by_policy["lru"][3] > 0   # mean evictions over the column
 
 
 class TestSweepAggregator:
