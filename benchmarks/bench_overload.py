@@ -1,0 +1,153 @@
+"""Overload control: p99 latency and goodput with and without throttling.
+
+The control-plane experiment (ISSUE 6): drive one fleet federation at
+1x / 2x / 4x its saturating arrival rate, once *unthrottled* (no
+control plane: excess load just contends on links, and aggressive
+hedging — every straggler spawns a duplicate transfer — burns the spare
+capacity that remains) and once *throttled* (admission queues with
+bounded depth shed the excess explicitly; breakers and backoff keep
+clients from hammering). Load shedding is the point: a cache that
+refuses 60% of a 4x storm outright serves the admitted remainder at
+near-line rate, while the work-conserving free-for-all drags every
+transfer past the hedge deadline and doubles its own traffic.
+
+All runs share one federation shape and one Zipf trace family; load is
+the arrival *window* (same bytes, compressed schedule). The saturation
+window is where uncontrolled goodput peaks (~9 GB/s on this shape) —
+found empirically, pinned here, and cheap to re-derive by sweeping
+``--window``.
+
+Artifact ``artifacts/overload.json`` (see docs/BENCHMARKS.md):
+
+* ``baseline`` — the uncontended 1x-rate reference summary;
+* ``profile``  — per load factor, ``unthrottled`` / ``throttled``
+  ScenarioReport summaries (p99_seconds, goodput, shed_rate, ...);
+* ``derived``  — the gated ratios: ``p99_degradation_unthrottled``
+  (target >= 2 at 4x), ``goodput_ratio_throttled`` (target >= 0.8 of
+  the uncontended baseline), ``throttled_vs_unthrottled_goodput``
+  (target >= 1: throttling must *win* at the overload point), and the
+  4x ``shed_rate``.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import (ControlPlaneSpec, FederationSpec, ScenarioSpec,
+                        WorkloadSpec, run_scenario)
+
+ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACT_FILES = ("overload.json",)
+
+# One cache pod pair, 8 workers each; 240 Zipf requests over a 4 s
+# window offer ~9 GB/s — the empirical saturation point of this shape.
+SATURATION_WINDOW = 4.0
+UNCONTENDED_WINDOW = 15.0
+HEDGE_AFTER = 0.5
+CONTROL = ControlPlaneSpec(max_concurrent=12, queue_depth=8)
+
+
+def _scenario(name: str, n: int, window: float, seed: int,
+              control: ControlPlaneSpec | None) -> ScenarioSpec:
+    return ScenarioSpec(
+        name=f"overload/{name}", engine="sim",
+        federation=FederationSpec.fleet(num_pods=2, hosts_per_pod=8),
+        workload=WorkloadSpec(kind="zipf", n_requests=n, working_set=64,
+                              duration=window, seed=seed),
+        hedge_after=HEDGE_AFTER,
+        control=control)
+
+
+def _run(name: str, n: int, window: float, seed: int,
+         control: ControlPlaneSpec | None) -> dict:
+    rep = run_scenario(_scenario(name, n, window, seed, control))
+    s = rep.summary()
+    s["window_seconds"] = window
+    return s
+
+
+def overload_profile(n: int = 240, seed: int = 11,
+                     loads: tuple = (1, 2, 4)) -> dict:
+    """The full with/without-throttling load ladder + derived ratios."""
+    baseline = _run("baseline", n, UNCONTENDED_WINDOW, seed, control=None)
+    profile = {}
+    for load in loads:
+        window = SATURATION_WINDOW / load
+        profile[str(load)] = {
+            "unthrottled": _run(f"{load}x/unthrottled", n, window, seed,
+                                control=None),
+            "throttled": _run(f"{load}x/throttled", n, window, seed,
+                              control=CONTROL),
+        }
+    peak = profile[str(max(loads))]
+    unthr, thr = peak["unthrottled"], peak["throttled"]
+    derived = {
+        "overload_factor": max(loads),
+        "p99_degradation_unthrottled":
+            unthr["p99_seconds"] / max(baseline["p99_seconds"], 1e-9),
+        "p99_degradation_throttled":
+            thr["p99_seconds"] / max(baseline["p99_seconds"], 1e-9),
+        "goodput_ratio_throttled":
+            thr["goodput"] / max(baseline["goodput"], 1e-9),
+        "goodput_ratio_unthrottled":
+            unthr["goodput"] / max(baseline["goodput"], 1e-9),
+        "throttled_vs_unthrottled_goodput":
+            thr["goodput"] / max(unthr["goodput"], 1e-9),
+        "shed_rate": thr["shed_rate"],
+    }
+    return {"baseline": baseline, "profile": profile, "derived": derived,
+            "params": {"n_requests": n, "seed": seed, "loads": list(loads),
+                       "saturation_window": SATURATION_WINDOW,
+                       "uncontended_window": UNCONTENDED_WINDOW,
+                       "hedge_after": HEDGE_AFTER,
+                       "max_concurrent": CONTROL.max_concurrent,
+                       "queue_depth": CONTROL.queue_depth}}
+
+
+def run(quick: bool = False, verbose: bool = False):
+    t0 = time.perf_counter()
+    out = (overload_profile(n=240, loads=(1, 4)) if quick
+           else overload_profile())
+    wall = time.perf_counter() - t0
+    out["wall_seconds"] = wall
+    ARTIFACTS.mkdir(exist_ok=True, parents=True)
+    (ARTIFACTS / "overload.json").write_text(json.dumps(out, indent=1))
+    d = out["derived"]
+    peak = out["profile"][str(d["overload_factor"])]
+    if verbose:
+        b = out["baseline"]
+        print(f"  baseline: p99={b['p99_seconds']:.2f}s "
+              f"goodput={b['goodput'] / 1e9:.2f} GB/s")
+        for load, cell in out["profile"].items():
+            u, t = cell["unthrottled"], cell["throttled"]
+            print(f"  {load}x: unthrottled p99={u['p99_seconds']:.2f}s "
+                  f"gp={u['goodput'] / 1e9:.2f} | throttled "
+                  f"p99={t['p99_seconds']:.2f}s gp={t['goodput'] / 1e9:.2f} "
+                  f"shed={t['shed_rate']:.2f}")
+        print(f"  derived: unthrottled p99 degraded "
+              f"{d['p99_degradation_unthrottled']:.1f}x, throttled goodput "
+              f"{d['goodput_ratio_throttled']:.2f}x baseline "
+              f"({d['throttled_vs_unthrottled_goodput']:.2f}x unthrottled)")
+    return [
+        ("overload.p99_unthrottled",
+         peak["unthrottled"]["p99_seconds"] * 1e6,
+         f"degradation={d['p99_degradation_unthrottled']:.1f}x"
+         f"@{d['overload_factor']}x"),
+        ("overload.p99_throttled",
+         peak["throttled"]["p99_seconds"] * 1e6,
+         f"degradation={d['p99_degradation_throttled']:.1f}x"
+         f"@{d['overload_factor']}x"),
+        ("overload.goodput_ratio",
+         d["goodput_ratio_throttled"] * 1e6,
+         f"vs_unthrottled={d['throttled_vs_unthrottled_goodput']:.2f}x"),
+        ("overload.shed_rate",
+         d["shed_rate"] * 1e6,
+         f"sheds={peak['throttled']['sheds']}"
+         f"/{peak['throttled']['requests']}"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(verbose=True):
+        print(f"{name},{us:.1f},{derived}")

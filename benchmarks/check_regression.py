@@ -55,6 +55,17 @@ EXTRACTORS: Dict[str, Tuple[str, Callable[[dict], float]]] = {
         "outage_storm.json", lambda a: a["storm"]["coalescing_ratio"]),
     "storm_reallocations": (
         "outage_storm.json", lambda a: a["storm"]["reallocations"]),
+    "overload_p99": (
+        "overload.json",
+        lambda a: a["profile"][str(a["derived"]["overload_factor"])]
+        ["throttled"]["p99_seconds"]),
+    "overload_shed_rate": (
+        "overload.json", lambda a: a["derived"]["shed_rate"]),
+    "overload_goodput_ratio": (
+        "overload.json", lambda a: a["derived"]["goodput_ratio_throttled"]),
+    "overload_p99_degradation_unthrottled": (
+        "overload.json",
+        lambda a: a["derived"]["p99_degradation_unthrottled"]),
 }
 
 

@@ -19,12 +19,16 @@ from .cache import CacheServer, CacheStats
 from .chunk import (DEFAULT_CHUNK_SIZE, ChunkRef, ObjectMeta, Payload,
                     chunk_object, fnv1a64, synthetic_object)
 from .client import LocalCache, StashClient
+from .controlplane import (AdmissionQueue, AnalyticQueue, CircuitBreaker,
+                           ControlPlane, ControlPlaneSpec, ControlStats,
+                           fair_shares)
 from .federation import (Federation, FederationSpec, SiteSpec,
                          build_fleet_federation, build_osg_federation,
                          OSG_SITE_PROFILES)
 from .indexer import Catalog, Indexer
-from .monitoring import (CacheUsagePacket, FileClose, FileOpen, MessageBus,
-                         MonitorCollector, SweepAggregator, TransferRecord,
+from .monitoring import (CacheHealthMonitor, CacheUsagePacket, DecayGauge,
+                         FileClose, FileOpen, MessageBus, MonitorCollector,
+                         SpaceSavingTopK, SweepAggregator, TransferRecord,
                          UsageAggregator, UserLogin, experiment_of)
 from .namespace import Namespace
 from .origin import ChunkStore, Origin
@@ -43,7 +47,8 @@ from .topology import BandwidthProfile, Coord, GeoIPService, Link, Node, Topolog
 from .transfer import NetworkModel, TransferStats
 from .workload import (FILESIZE_PERCENTILES, PAPER_TABLE3, PROBE_10GB,
                        USAGE_BY_EXPERIMENT, AccessRequest, PercentileSampler,
-                       evaluation_fileset, generate_workload, storm_workload)
+                       abusive_workload, evaluation_fileset,
+                       generate_workload, herd_workload, storm_workload)
 from .writeback import WritebackCache
 
 __all__ = [n for n in dir() if not n.startswith("_")]

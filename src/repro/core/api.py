@@ -47,13 +47,15 @@ from typing import (Dict, Generator, List, Optional, Protocol, Sequence,
 import numpy as np
 
 from .client import StashClient
+from .controlplane import ControlPlane, ControlPlaneSpec
 from .federation import Federation, FederationSpec, SiteSpec
 from .simclient import (OutageSchedule, ScenarioEngine, ScenarioReport,
                         apply_outage)
 from .simulator import direct_download, proxy_download, sparse_flow_problem
 from .topology import Coord
 from .transfer import TransferStats
-from .workload import AccessRequest, generate_workload, storm_workload
+from .workload import (AccessRequest, abusive_workload, generate_workload,
+                       herd_workload, storm_workload)
 
 GB = 10**9
 
@@ -73,6 +75,7 @@ class FetchRequest:
     at: float = 0.0         # arrival time (sim clock; analytic outage clock)
     size: int = 0           # size hint for publishing synthetic objects
     streams: int = 0        # 0 = plane default
+    tenant: str = ""        # fair-share / quota accounting unit
 
     METHODS = ("stash", "cvmfs", "proxy", "direct")
 
@@ -110,6 +113,8 @@ class FetchResult:
     start: float = 0.0
     ok: bool = True
     error: str = ""
+    shed: bool = False      # refused by an admission queue (load shedding)
+    queue_seconds: float = 0.0  # time parked in admission queues
 
     @classmethod
     def from_transfer(cls, path: str, stats: TransferStats, *,
@@ -231,16 +236,22 @@ class AnalyticPlane(_PlaneBase):
 
     name = "analytic"
 
-    def __init__(self, fed: Federation, streams: int = 8) -> None:
+    def __init__(self, fed: Federation, streams: int = 8,
+                 control: Optional[ControlPlaneSpec] = None) -> None:
         super().__init__(fed)
         self.streams = streams
         self.clients: Dict[Tuple[str, int], StashClient] = {}
+        group_of = {c.name: g for g in fed.groups.values()
+                    for c in g.members}
+        self.control = (ControlPlane(control, group_of=group_of)
+                        if control is not None else None)
 
     def client(self, site: str, worker: int = 0) -> StashClient:
         key = (site, worker)
         c = self.clients.get(key)
         if c is None:
             c = self.fed.client(site, worker)
+            c.control = self.control
             self.clients[key] = c
         return c
 
@@ -257,6 +268,27 @@ class AnalyticPlane(_PlaneBase):
     def _fetch(self, req: FetchRequest) -> FetchResult:
         client = self.client(req.site, req.worker)
         client.now = max(client.now, req.at)
+        # Admission control happens at the cache the request would be
+        # served from (the first live ranked cache).  ``reserve`` is
+        # side-effect free, so a shed terminates the request without
+        # touching the cache tier; the measured service time is
+        # committed into the queue model after the transfer.
+        queue_name = None
+        queue_start = None
+        if (self.control is not None and client.caches
+                and req.method in ("stash", "cvmfs")):
+            queue_name = next(
+                (c.name for c in client._ranked_caches(path=req.path)
+                 if c.available), None)
+            if queue_name is not None:
+                q = self.control.queue(queue_name)
+                queue_start = q.reserve(req.at, req.tenant)
+                if queue_start is None:
+                    return FetchResult(
+                        path=req.path, method="shed", plane=self.name,
+                        start=req.at, ok=False, shed=True,
+                        source=queue_name,
+                        error="shed: admission queue full")
         if req.method == "stash":
             try:
                 _, stats = client.copy(req.path, methods=("xrootd", "http"))
@@ -283,6 +315,11 @@ class AnalyticPlane(_PlaneBase):
             return res
         res = FetchResult.from_transfer(req.path, stats, method=req.method,
                                         start=req.at)
+        if queue_name is not None and queue_start is not None:
+            wait = self.control.queue(queue_name).commit(
+                req.at, queue_start, res.seconds, req.tenant)
+            res.queue_seconds = wait
+            res.seconds += wait
         return res
 
     def _fetch_proxy(self, req: FetchRequest,
@@ -366,12 +403,18 @@ class SimulatedPlane(_PlaneBase):
     def __init__(self, fed: Federation, solver: str = "auto",
                  streams: int = 8, hedge_after: Optional[float] = None,
                  max_attempts: int = 4, rank_limit: Optional[int] = 8,
-                 router: str = "ring") -> None:
+                 router: str = "ring",
+                 control: Optional[ControlPlaneSpec] = None) -> None:
         super().__init__(fed)
         self.engine = ScenarioEngine(
             fed, solver=solver, streams=streams, hedge_after=hedge_after,
-            max_attempts=max_attempts, rank_limit=rank_limit, router=router)
+            max_attempts=max_attempts, rank_limit=rank_limit, router=router,
+            control=control)
         self.streams = streams
+
+    @property
+    def control(self) -> Optional[ControlPlane]:
+        return self.engine.control
 
     @property
     def sim(self):
@@ -396,7 +439,11 @@ class SimulatedPlane(_PlaneBase):
             # The simulator models no worker-local cache; cvmfs degrades
             # to the cache-served path (same chunks, same accounting).
             sc = self.engine.client(req.site, req.worker)
-            yield from sc.download(req.path, meta=meta, result=res)
+            yield from sc.download(req.path, meta=meta, result=res,
+                                   tenant=req.tenant)
+            if res.shed:
+                res.ok = False
+                res.error = res.error or "shed: admission queue full"
         elif req.method == "proxy":
             proxy = self.fed.proxies.get(req.site)
             if proxy is None:
@@ -463,7 +510,7 @@ class WorkloadSpec:
     sizes, Table 1 experiment mix).  ``sites=None`` targets every
     worker-bearing site of the federation."""
 
-    kind: str = "zipf"               # "zipf" | "storm"
+    kind: str = "zipf"               # "zipf" | "storm" | "herd" | "abusive"
     sites: Optional[Sequence[str]] = None
     # zipf trace knobs
     n_requests: int = 100
@@ -471,15 +518,30 @@ class WorkloadSpec:
     working_set: int = 64
     zipf_a: float = 1.2
     seed: int = 0
-    # storm knobs
+    # storm / herd knobs
     path: str = "/ckpt/step/params"
     size: int = 2 * GB
     at: float = 0.0
     workers_per_site: int = 1
     jitter: float = 0.0
+    # herd knobs (repeated synchronized waves on hot objects)
+    waves: int = 1
+    wave_gap: float = 30.0
+    n_objects: int = 1
+    # tenant mix (zipf/abusive): tenant name -> weight; None = tenant
+    # defaults to the owning experiment
+    tenants: Optional[Dict[str, float]] = None
+    tenant: str = ""                 # fixed tenant for storm/herd traces
+    # abusive-client knobs (zipf background + one cache-busting tenant)
+    abusive_tenant: str = "abuser"
+    abuse_factor: float = 4.0
+    abuse_at: float = 0.0
+    abuse_duration: float = 60.0
+
+    KINDS = ("zipf", "storm", "herd", "abusive")
 
     def __post_init__(self) -> None:
-        if self.kind not in ("zipf", "storm"):
+        if self.kind not in self.KINDS:
             raise ValueError(f"unknown workload kind {self.kind!r}")
 
     def build(self, fed: Federation, method: str = "stash"
@@ -491,16 +553,38 @@ class WorkloadSpec:
                                    at=self.at,
                                    workers_per_site=self.workers_per_site,
                                    jitter=self.jitter, seed=self.seed)
+        elif self.kind == "herd":
+            trace = herd_workload(sites, path=self.path, size=self.size,
+                                  at=self.at,
+                                  workers_per_site=self.workers_per_site,
+                                  jitter=self.jitter, seed=self.seed,
+                                  waves=self.waves, wave_gap=self.wave_gap,
+                                  n_objects=self.n_objects,
+                                  tenant=self.tenant or "herd")
+        elif self.kind == "abusive":
+            trace = abusive_workload(sites, self.n_requests,
+                                     duration=self.duration, seed=self.seed,
+                                     working_set=self.working_set,
+                                     zipf_a=self.zipf_a,
+                                     tenants=self.tenants,
+                                     abusive_tenant=self.abusive_tenant,
+                                     abuse_factor=self.abuse_factor,
+                                     abuse_at=self.abuse_at,
+                                     abuse_duration=self.abuse_duration,
+                                     abuse_size=self.size)
         else:
             trace = generate_workload(sites, self.n_requests,
                                       duration=self.duration,
                                       seed=self.seed,
                                       working_set=self.working_set,
-                                      zipf_a=self.zipf_a)
+                                      zipf_a=self.zipf_a,
+                                      tenants=self.tenants)
         hosts = {s.name: max(1, s.workers) for s in fed.sites}
         return [FetchRequest(path=r.path, site=r.site,
                              worker=r.worker % hosts.get(r.site, 1),
-                             method=method, at=r.time, size=r.size)
+                             method=method, at=r.time, size=r.size,
+                             tenant=(self.tenant or r.tenant
+                                     or r.experiment))
                 for r in trace]
 
 
@@ -524,6 +608,7 @@ class ScenarioSpec:
     max_attempts: int = 4
     rank_limit: Optional[int] = 8
     router: str = "ring"
+    control: Optional[ControlPlaneSpec] = None
 
     def __post_init__(self) -> None:
         if self.engine not in ("sim", "analytic"):
@@ -539,18 +624,21 @@ class ScenarioSpec:
                 out.append(FetchRequest(
                     path=r.path, site=r.site,
                     worker=r.worker % hosts.get(r.site, 1),
-                    method=self.method, at=r.time, size=r.size))
+                    method=self.method, at=r.time, size=r.size,
+                    tenant=getattr(r, "tenant", "") or r.experiment))
             else:
                 out.append(r)
         return out
 
     def plane(self, fed: Federation) -> DataPlane:
         if self.engine == "analytic":
-            return AnalyticPlane(fed, streams=self.streams)
+            return AnalyticPlane(fed, streams=self.streams,
+                                 control=self.control)
         return SimulatedPlane(
             fed, solver=self.solver, streams=self.streams,
             hedge_after=self.hedge_after, max_attempts=self.max_attempts,
-            rank_limit=self.rank_limit, router=self.router)
+            rank_limit=self.rank_limit, router=self.router,
+            control=self.control)
 
 
 def run_scenario(spec: ScenarioSpec,
@@ -609,6 +697,7 @@ def _report(spec: ScenarioSpec, fed: Federation, plane: DataPlane,
         return plane.engine.report(results, name=spec.name)
     cstats = [c.stats for c in plane.clients.values()]
     gstats = [g.stats for g in fed.groups.values()]
+    cp = plane.control.stats if plane.control is not None else None
     return ScenarioReport(
         name=spec.name,
         engine=plane.name,
@@ -628,6 +717,14 @@ def _report(spec: ScenarioSpec, fed: Federation, plane: DataPlane,
         group_failovers=sum(s.failovers for s in gstats),
         outages=sum(s.outages for s in gstats),
         recoveries=sum(s.recoveries for s in gstats),
+        sheds=sum(1 for r in results if getattr(r, "shed", False)),
+        queue_waits=cp.queue_waits if cp else 0,
+        queue_wait_seconds=cp.queue_wait_seconds if cp else 0.0,
+        retries=cp.retries if cp else 0,
+        breaker_opens=cp.breaker_opens if cp else 0,
+        breaker_skips=cp.breaker_skips if cp else 0,
+        auto_downs=cp.auto_downs if cp else 0,
+        auto_ups=cp.auto_ups if cp else 0,
     )
 
 
@@ -827,6 +924,11 @@ def _sweep_batchable(spec: ScenarioSpec) -> bool:
     accounted clock) still fall back to a serial :func:`run_scenario`.
     """
     if spec.engine != "analytic":
+        return False
+    if spec.control is not None:
+        # Control-plane cells carry cross-request queue/breaker state the
+        # vectorized kernels don't model; they run serially (and the
+        # sweep counts them in ``serial_cells``).
         return False
     if spec.method not in ("stash", "direct"):
         return False

@@ -111,6 +111,9 @@ class StashClient:
         self.local = LocalCache(local_cache_bytes)
         self.stats = ClientStats()
         self.now = now
+        # Optional ControlPlane (set by the owning plane): per-cache
+        # circuit breakers + retry backoff replace blind failover.
+        self.control = None
 
     # ------------------------------------------------------------------
     def _ranked_caches(self, exclude: Sequence[str] = (),
@@ -172,13 +175,28 @@ class StashClient:
     def _fetch_chunk(self, path: str, index: int, expected_digest: int,
                      streams: int, verify: bool
                      ) -> Tuple[Optional[Payload], TransferStats]:
-        """Fetch one chunk with nearest-cache + failover + checksum retry."""
+        """Fetch one chunk with nearest-cache + failover + checksum retry.
+
+        With a control plane attached, dead or erroring caches feed
+        per-cache circuit breakers (an open breaker is skipped without
+        paying the connect timeout) and each retry backs off
+        exponentially — the backoff wall time lands in ``agg.seconds``
+        so the caller's latency accounting sees it."""
         agg = TransferStats()
         tried: List[str] = []
+        ctrl = self.control
+        n_backoff = 0
         for cache in self._ranked_caches(path=path):
+            if ctrl is not None:
+                ctrl.maybe_recover(cache.name, self.now)
             if not cache.available:
                 tried.append(cache.name)
                 self.stats.cache_failovers += 1
+                if ctrl is not None:
+                    ctrl.on_failure(cache.name, self.now)
+                continue
+            if ctrl is not None and not ctrl.allow(cache.name, self.now):
+                tried.append(cache.name)
                 continue
             cache.tick(self.now)  # TTL policies expire against client time
             try:
@@ -187,9 +205,18 @@ class StashClient:
             except ConnectionError:
                 tried.append(cache.name)
                 self.stats.cache_failovers += 1
+                if ctrl is not None:
+                    ctrl.on_failure(cache.name, self.now)
+                    delay = ctrl.backoff(n_backoff)
+                    n_backoff += 1
+                    ctrl.stats.retries += 1
+                    ctrl.stats.backoff_seconds += delay
+                    agg.seconds += delay
                 continue
             agg.add(st)
             agg.source = cache.name
+            if ctrl is not None:
+                ctrl.on_success(cache.name, self.now, seconds=st.seconds)
             if payload is None:
                 return None, agg
             if verify and expected_digest and not payload.verify():

@@ -13,6 +13,7 @@ The collector must tolerate packet loss and out-of-order arrival — our
 from __future__ import annotations
 
 import dataclasses
+import math
 import random
 from collections import defaultdict
 from typing import Callable, Dict, List, Optional
@@ -307,3 +308,147 @@ class UsageAggregator:
 
     def time_series(self) -> List[tuple]:
         return sorted(self.by_bucket.items())
+
+
+# ---------------------------------------------------------------------------
+# Streaming health gauges (control plane)
+
+
+class DecayGauge:
+    """Exponentially time-decayed counter: ``add`` events, ``read`` a rate.
+
+    The stored value decays with time constant ``tau`` so the gauge
+    tracks *recent* behaviour without keeping a window of samples.
+    Reads are pure — ``read(now)`` never mutates state — and monotone
+    non-increasing under silence, which the property suite checks.
+    """
+
+    def __init__(self, tau: float = 60.0) -> None:
+        self.tau = float(tau)
+        self.value = 0.0
+        self.t = 0.0
+
+    def read(self, now: float) -> float:
+        if now <= self.t:
+            return self.value
+        return self.value * math.exp(-(now - self.t) / self.tau)
+
+    def add(self, x: float, now: float) -> None:
+        self.value = self.read(now) + x
+        self.t = max(self.t, now)
+
+
+class SpaceSavingTopK:
+    """Misra-Gries/space-saving heavy hitters over a bounded key table.
+
+    Tracks the (approximately) top-``k`` keys by total weight using O(k)
+    memory: an unseen key evicts the current minimum and inherits its
+    count as the over-estimate error bound.
+    """
+
+    def __init__(self, k: int = 8) -> None:
+        self.k = max(1, int(k))
+        self.counts: Dict[str, float] = {}
+        self.errors: Dict[str, float] = {}
+
+    def add(self, key: str, weight: float = 1.0) -> None:
+        if key in self.counts:
+            self.counts[key] += weight
+            return
+        if len(self.counts) < self.k:
+            self.counts[key] = weight
+            self.errors[key] = 0.0
+            return
+        victim = min(self.counts, key=lambda kk: (self.counts[kk], kk))
+        floor = self.counts.pop(victim)
+        self.errors.pop(victim)
+        self.counts[key] = floor + weight
+        self.errors[key] = floor
+
+    def top(self, n: Optional[int] = None) -> List[tuple]:
+        """``(key, count, error)`` sorted by count descending."""
+        rows = sorted(self.counts.items(), key=lambda kv: (-kv[1], kv[0]))
+        if n is not None:
+            rows = rows[:n]
+        return [(k, c, self.errors[k]) for k, c in rows]
+
+
+class CacheHealthMonitor:
+    """Per-cache streaming health: decayed error/latency rates + hitters.
+
+    ``observe`` feeds one transfer outcome; ``unhealthy`` answers whether
+    the decayed error rate (errors / samples over the last ~``tau``
+    seconds) or the latency EWMA has crossed its threshold, given enough
+    recent samples to mean anything.  ``demand`` tracks per-tenant bytes
+    in a space-saving sketch so operators can name the heavy hitters.
+
+    This class only *measures*; acting on it (``mark_down(auto=True)``)
+    is the job of :class:`repro.core.controlplane.ControlPlane`.
+    """
+
+    LATENCY_ALPHA = 0.3
+
+    def __init__(self, tau: float = 60.0, topk: int = 8) -> None:
+        self.tau = float(tau)
+        self._errors: Dict[str, DecayGauge] = {}
+        self._totals: Dict[str, DecayGauge] = {}
+        self._latency: Dict[str, float] = {}
+        self.hitters = SpaceSavingTopK(topk)
+
+    def _gauge(self, table: Dict[str, DecayGauge], cache: str) -> DecayGauge:
+        g = table.get(cache)
+        if g is None:
+            g = DecayGauge(self.tau)
+            table[cache] = g
+        return g
+
+    def observe(self, cache: str, ok: bool, latency: float,
+                now: float) -> None:
+        self._gauge(self._totals, cache).add(1.0, now)
+        if not ok:
+            self._gauge(self._errors, cache).add(1.0, now)
+        elif latency > 0:
+            prev = self._latency.get(cache)
+            if prev is None:
+                self._latency[cache] = latency
+            else:
+                a = self.LATENCY_ALPHA
+                self._latency[cache] = a * latency + (1 - a) * prev
+
+    def demand(self, tenant: str, nbytes: float = 0.0) -> None:
+        self.hitters.add(tenant, max(float(nbytes), 1.0))
+
+    def samples(self, cache: str, now: float) -> float:
+        g = self._totals.get(cache)
+        return g.read(now) if g is not None else 0.0
+
+    def error_rate(self, cache: str, now: float) -> float:
+        total = self.samples(cache, now)
+        if total <= 0:
+            return 0.0
+        g = self._errors.get(cache)
+        errors = g.read(now) if g is not None else 0.0
+        return min(1.0, errors / total)
+
+    def latency(self, cache: str) -> float:
+        return self._latency.get(cache, 0.0)
+
+    def unhealthy(self, cache: str, now: float, error_threshold: float,
+                  min_samples: float = 4.0,
+                  latency_threshold: Optional[float] = None) -> bool:
+        if self.samples(cache, now) < min_samples:
+            return False
+        if self.error_rate(cache, now) >= error_threshold:
+            return True
+        if (latency_threshold is not None
+                and self.latency(cache) >= latency_threshold):
+            return True
+        return False
+
+    def reset(self, cache: str) -> None:
+        self._errors.pop(cache, None)
+        self._totals.pop(cache, None)
+        self._latency.pop(cache, None)
+
+    def top_tenants(self, n: int = 5) -> List[tuple]:
+        return self.hitters.top(n)

@@ -118,6 +118,8 @@ class GroupStats:
     outages: int = 0      # members marked down (storm/blackout/upgrade)
     recoveries: int = 0   # members marked back up
     cold_restarts: int = 0  # recoveries that came back with empty storage
+    auto_outages: int = 0   # subset of outages fired by health gauges
+    auto_recoveries: int = 0  # subset of recoveries fired by health probes
 
 
 class CacheGroup:
@@ -175,15 +177,22 @@ class CacheGroup:
             return [c for c in chain if c.available]
         return chain
 
-    def mark_down(self, name: str) -> None:
+    def mark_down(self, name: str, auto: bool = False) -> None:
         """Outage injection: the member stays on the ring (its keyspace
-        share fails over along the chain) but stops serving."""
+        share fails over along the chain) but stops serving.  ``auto``
+        tags gauge-driven demotions (health monitor) separately from
+        scripted schedule entries; the available-guard already dedupes
+        overlapping triggers — a member down is down once, whichever
+        trigger fired first gets the counter."""
         cache = self.caches.get(name)
         if cache is not None and cache.available:
             cache.available = False
             self.stats.outages += 1
+            if auto:
+                self.stats.auto_outages += 1
 
-    def mark_up(self, name: str, cold: bool = False) -> None:
+    def mark_up(self, name: str, cold: bool = False,
+                auto: bool = False) -> None:
         """Recovery; ``cold`` models a restart that lost its disk (the
         member returns owning its old keyspace but holding nothing)."""
         cache = self.caches.get(name)
@@ -194,6 +203,8 @@ class CacheGroup:
             if cold:
                 self.stats.cold_restarts += 1
                 cache.clear()
+            if auto:
+                self.stats.auto_recoveries += 1
             cache.available = True
 
     def locus(self) -> Optional["CacheServer"]:

@@ -37,6 +37,7 @@ from typing import (Dict, Generator, Iterable, List, Optional, Sequence,
 from .cache import CacheServer
 from .chunk import ObjectMeta, fnv1a64
 from .client import StashClient
+from .controlplane import ControlPlane, ControlPlaneSpec
 from .federation import Federation
 from .origin import Origin
 from .simulator import DownloadResult, Event, FluidFlowSim, fetch_chunks
@@ -83,7 +84,8 @@ class SimStashClient:
                  max_attempts: int = 4,
                  rank_limit: Optional[int] = 8,
                  router: str = "ring",
-                 redirectors=None) -> None:
+                 redirectors=None,
+                 control: Optional[ControlPlane] = None) -> None:
         if router not in ("ring", "modulo"):
             raise ValueError(f"unknown router {router!r}")
         self.sim = sim
@@ -95,6 +97,7 @@ class SimStashClient:
         self.max_attempts = max_attempts
         self.rank_limit = rank_limit
         self.router = router
+        self.control = control
         # Namespace-first path resolution: with a RedirectorGroup the
         # owning origin comes from longest-prefix match over the global
         # namespace (multi-origin federations); ``origin`` is only the
@@ -146,12 +149,21 @@ class SimStashClient:
 
     # -- the download coroutine ---------------------------------------------
     def download(self, path: str, meta: Optional[ObjectMeta] = None,
-                 result: Optional[DownloadResult] = None) -> Generator:
+                 result: Optional[DownloadResult] = None,
+                 tenant: str = "") -> Generator:
         """stashcp under contention: GeoIP → ranked caches → (failover as
         needed) → collapsed-forwarding fetch → (hedged) multi-stream
         serve.  Falls back to a direct origin pull only when every
-        ranked cache is down (regional blackout)."""
+        ranked cache is down (regional blackout).
+
+        With a control plane attached, each per-cache attempt first
+        passes the cache's circuit breaker and admission queue (which
+        may park this coroutine or shed the request outright — a shed
+        terminates the download, it does *not* fall through to the
+        origin), and failed attempts retry with exponential backoff
+        instead of hammering the next ranked cache immediately."""
         sim = self.sim
+        ctrl = self.control
         t0 = sim.t
         self.stats.copies += 1
         yield sim.delay(self.client.geoip.lookup_latency)
@@ -165,30 +177,50 @@ class SimStashClient:
             raise FileNotFoundError(path)
         failovers = 0
         attempts = 0
+        n_backoff = 0
         for cache in self._route(path):
             if attempts >= self.max_attempts:
                 break
+            if ctrl is not None:
+                ctrl.maybe_recover(cache.name, sim.t)
             if not cache.available:
                 failovers += 1
                 self.stats.cache_failovers += 1
+                if ctrl is not None:
+                    ctrl.on_failure(cache.name, sim.t)
                 continue
+            if ctrl is not None and not ctrl.allow(cache.name, sim.t):
+                continue  # breaker open: skip without burning an attempt
             attempts += 1
             if self.hedge_after is None:
-                status = yield from self._fetch_chunks(cache, meta, owner)
-                if status is None or not cache.available:
+                kind, status, queued = yield from self._attempt(
+                    cache, meta, owner, tenant)
+                if kind == "shed":
+                    self._finish_shed(result, t0, cache.name, failovers)
+                    return
+                if kind == "fail":
                     # died mid-pull: the key remaps down the ring chain
                     failovers += 1
                     self.stats.cache_failovers += 1
+                    if attempts < self.max_attempts:
+                        yield from self._backoff(n_backoff)
+                        n_backoff += 1
                     continue
-                yield from self._serve_flow(cache, meta)
                 outcome = {"winner": cache.name, "status": status,
-                           "hedged": False}
+                           "hedged": False, "queue_seconds": queued}
             else:
                 outcome = yield from self._hedged_attempt(cache, meta,
-                                                          owner)
+                                                          owner, tenant)
                 if outcome["winner"] is None:
+                    if outcome.get("sheds"):
+                        self._finish_shed(result, t0, cache.name,
+                                          failovers)
+                        return
                     failovers += 1
                     self.stats.cache_failovers += 1
+                    if attempts < self.max_attempts:
+                        yield from self._backoff(n_backoff)
+                        n_backoff += 1
                     continue
             if result is not None:
                 result.seconds = sim.t - t0
@@ -198,6 +230,7 @@ class SimStashClient:
                 result.hedged = outcome["hedged"]
                 result.source = outcome["winner"]
                 result.failovers = failovers
+                result.queue_seconds = outcome.get("queue_seconds", 0.0)
             return
         # Every ranked cache is dead (or attempts exhausted): the
         # federation degrades to the WAN-saturating direct pull.
@@ -229,33 +262,100 @@ class SimStashClient:
                             rate_cap=cache.serve_rate_cap(meta.size))
         cache.stats.bytes_served += meta.size
 
+    def _attempt(self, cache: CacheServer, meta: ObjectMeta,
+                 owner: Origin, tenant: str = "") -> Generator:
+        """One full attempt through ``cache``: admission (may queue this
+        coroutine, or shed), collapsed-forwarding fetch, serve.
+
+        Returns ``(kind, status, queue_seconds)`` where kind is "ok"
+        (served; status is the fetch status), "shed" (refused by the
+        admission queue) or "fail" (cache died mid-attempt).  With no
+        control plane attached this is exactly the old fetch+serve
+        path — byte-identical accounting."""
+        sim = self.sim
+        ctrl = self.control
+        queued = 0.0
+        if ctrl is not None:
+            t_q = sim.t
+            admitted = yield from ctrl.acquire(cache.name, tenant,
+                                               meta.size)
+            if not admitted:
+                return ("shed", None, 0.0)
+            queued = sim.t - t_q
+        t_service = sim.t
+        try:
+            status = yield from self._fetch_chunks(cache, meta, owner)
+            if status is None or not cache.available:
+                if ctrl is not None:
+                    ctrl.on_failure(cache.name, sim.t)
+                return ("fail", None, queued)
+            yield from self._serve_flow(cache, meta)
+            if ctrl is not None:
+                ctrl.on_success(cache.name, sim.t,
+                                seconds=sim.t - t_service,
+                                tenant=tenant, nbytes=meta.size)
+            return ("ok", status, queued)
+        finally:
+            if ctrl is not None:
+                ctrl.release(cache.name, tenant)
+
+    def _backoff(self, attempt: int) -> Generator:
+        """Exponential pause between retries (no-op without control)."""
+        ctrl = self.control
+        if ctrl is None:
+            return
+        delay = ctrl.backoff(attempt)
+        ctrl.stats.retries += 1
+        ctrl.stats.backoff_seconds += delay
+        if delay > 0:
+            yield self.sim.delay(delay)
+
+    def _finish_shed(self, result: Optional[DownloadResult], t0: float,
+                     source: str, failovers: int) -> None:
+        """Record an admission-queue refusal: the request terminates —
+        seconds stays 0 (not completed), and it must NOT degrade into an
+        origin-direct pull (shedding exists to protect the origin)."""
+        if result is not None:
+            result.start = t0
+            result.shed = True
+            result.source = source
+            result.failovers = failovers
+            result.method = "shed"
+
     def _attempt_arm(self, cache: CacheServer, meta: ObjectMeta,
                      owner: Origin, outcome: Dict,
-                     done: Event) -> Generator:
+                     done: Event, tenant: str = "") -> Generator:
         """One arm of a (possibly hedged) attempt: full fetch through
         ``cache`` (origin pull included) then serve.  Signals ``done``
         whether it won, lost, or failed; a losing arm's bytes still
-        move — hedging is modeled as load, not magic."""
-        status = yield from self._fetch_chunks(cache, meta, owner)
-        if status is not None and cache.available:
-            yield from self._serve_flow(cache, meta)
+        move — hedging is modeled as load, not magic.  Each arm holds
+        its own admission slot; a shed arm records itself in
+        ``outcome`` so the caller can tell "all arms shed" from "all
+        arms failed"."""
+        kind, status, queued = yield from self._attempt(cache, meta,
+                                                        owner, tenant)
+        if kind == "ok":
             if outcome["winner"] is None:
                 outcome["winner"] = cache.name
                 outcome["status"] = status
+                outcome["queue_seconds"] = queued
+        elif kind == "shed":
+            outcome["sheds"] = outcome.get("sheds", 0) + 1
         done.set()
 
     def _hedged_attempt(self, cache: CacheServer, meta: ObjectMeta,
-                        owner: Origin) -> Generator:
+                        owner: Origin, tenant: str = "") -> Generator:
         """Timer race over the whole per-cache attempt: if ``cache``
         hasn't delivered within ``hedge_after`` seconds — origin pull
         and serve included, that's where stragglers come from — a
         backup attempt via the next ranked cache runs in parallel and
         the first finisher wins."""
         sim = self.sim
-        outcome: Dict = {"winner": None, "status": None, "hedged": False}
+        outcome: Dict = {"winner": None, "status": None, "hedged": False,
+                         "queue_seconds": 0.0}
         primary_done = sim.event()
         sim.spawn(self._attempt_arm(cache, meta, owner, outcome,
-                                    primary_done))
+                                    primary_done, tenant))
         timer = sim.event()
 
         def alarm() -> Generator:
@@ -275,7 +375,7 @@ class SimStashClient:
                 self.stats.hedged_fetches += 1
                 backup_done = sim.event()
                 sim.spawn(self._attempt_arm(backup, meta, owner, outcome,
-                                            backup_done))
+                                            backup_done, tenant))
                 pending.append(backup_done)
         pending = [ev for ev in pending if not ev.is_set]
         while outcome["winner"] is None and pending:
@@ -435,6 +535,15 @@ class ScenarioReport:
     reallocations: int = 0
     flow_events: int = 0
     completed_flows: int = 0
+    # control plane (all zero when no ControlPlaneSpec was attached)
+    sheds: int = 0
+    queue_waits: int = 0
+    queue_wait_seconds: float = 0.0
+    retries: int = 0
+    breaker_opens: int = 0
+    breaker_skips: int = 0
+    auto_downs: int = 0
+    auto_ups: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -467,7 +576,10 @@ class ScenarioReport:
             "mean_seconds": sum(done) / len(done) if done else 0.0,
             "p50_seconds": self.seconds_percentile(50),
             "p95_seconds": self.seconds_percentile(95),
+            "p99_seconds": self.seconds_percentile(99),
             "bytes_moved": self.bytes_moved,
+            "goodput": (self.bytes_moved / self.sim_seconds
+                        if self.sim_seconds > 0 else 0.0),
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
             "evictions": self.evictions,
@@ -483,6 +595,16 @@ class ScenarioReport:
             "reallocations": self.reallocations,
             "flow_events": self.flow_events,
             "coalescing_ratio": self.coalescing_ratio,
+            "sheds": self.sheds,
+            "shed_rate": (self.sheds / len(self.results)
+                          if self.results else 0.0),
+            "queue_waits": self.queue_waits,
+            "queue_wait_seconds": self.queue_wait_seconds,
+            "retries": self.retries,
+            "breaker_opens": self.breaker_opens,
+            "breaker_skips": self.breaker_skips,
+            "auto_downs": self.auto_downs,
+            "auto_ups": self.auto_ups,
         }
 
 
@@ -493,7 +615,8 @@ class ScenarioEngine:
     def __init__(self, fed: Federation, solver: str = "auto",
                  streams: int = 8, hedge_after: Optional[float] = None,
                  max_attempts: int = 4, rank_limit: Optional[int] = 8,
-                 router: str = "ring") -> None:
+                 router: str = "ring",
+                 control: Optional[ControlPlaneSpec] = None) -> None:
         self.fed = fed
         self.sim = FluidFlowSim(fed.topology, fed.net, solver=solver)
         self.streams = streams
@@ -506,6 +629,11 @@ class ScenarioEngine:
         self._hosts = {s.name: max(1, s.workers) for s in fed.sites}
         self._group_of = {c.name: g for g in fed.groups.values()
                           for c in g.members}
+        # One shared control plane per scenario: clients share breakers,
+        # queues and health gauges, as a site-local sidecar would.
+        self.control = (ControlPlane(control, sim=self.sim,
+                                     group_of=self._group_of)
+                        if control is not None else None)
 
     # -- clients ------------------------------------------------------------
     def client(self, site: str, worker: int = 0) -> SimStashClient:
@@ -517,7 +645,8 @@ class ScenarioEngine:
                 self.fed.origins[0], self.redirector_node,
                 streams=self.streams, hedge_after=self.hedge_after,
                 max_attempts=self.max_attempts, rank_limit=self.rank_limit,
-                router=self.router, redirectors=self.fed.redirectors)
+                router=self.router, redirectors=self.fed.redirectors,
+                control=self.control)
             self._clients[key] = sc
         return sc
 
@@ -543,7 +672,10 @@ class ScenarioEngine:
             sc = self.client(r.site, r.worker % self._hosts.get(r.site, 1))
             res = DownloadResult(r.path, r.size, "simclient")
             results.append(res)
-            self.sim.spawn(sc.download(r.path, result=res), at=r.time)
+            self.sim.spawn(
+                sc.download(r.path, result=res,
+                            tenant=getattr(r, "tenant", "") or r.experiment),
+                at=r.time)
         if schedule is not None and len(schedule):
             self.sim.spawn(self._outage_controller(schedule))
         self.sim.run()
@@ -559,6 +691,7 @@ class ScenarioEngine:
         bytes_moved = sum(
             getattr(r, "bytes", 0) or (r.size if r.seconds > 0 else 0)
             for r in results)
+        cp = self.control.stats if self.control is not None else None
         return ScenarioReport(
             name=name,
             engine="sim",
@@ -585,4 +718,12 @@ class ScenarioEngine:
             recoveries=sum(s.recoveries for s in gstats),
             origin_egress_bytes=sum(o.stats.egress_bytes
                                     for o in self.fed.origins),
+            sheds=sum(1 for r in results if getattr(r, "shed", False)),
+            queue_waits=cp.queue_waits if cp else 0,
+            queue_wait_seconds=cp.queue_wait_seconds if cp else 0.0,
+            retries=cp.retries if cp else 0,
+            breaker_opens=cp.breaker_opens if cp else 0,
+            breaker_skips=cp.breaker_skips if cp else 0,
+            auto_downs=cp.auto_downs if cp else 0,
+            auto_ups=cp.auto_ups if cp else 0,
         )

@@ -368,6 +368,8 @@ class DownloadResult:
     failovers: int = 0    # dead caches skipped before one answered
     hedged: bool = False  # a backup fetch was raced against the primary
     waited: bool = False  # collapsed-forwarding wait (paid miss latency)
+    shed: bool = False    # refused by an admission queue (load shedding)
+    queue_seconds: float = 0.0  # time parked in admission queues
 
 
 def fetch_chunks(sim: FluidFlowSim, cache: CacheServer, meta: ObjectMeta,

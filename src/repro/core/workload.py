@@ -105,6 +105,7 @@ class AccessRequest:
     path: str
     size: int
     experiment: str
+    tenant: str = ""  # fair-share accounting unit; defaults to experiment
 
 
 def storm_workload(sites: Sequence[str], path: str = "/ckpt/step/params",
@@ -128,9 +129,16 @@ def storm_workload(sites: Sequence[str], path: str = "/ckpt/step/params",
 def generate_workload(sites: Sequence[str], n_requests: int,
                       duration: float = 3600.0, seed: int = 0,
                       working_set: int = 64,
-                      zipf_a: float = 1.2) -> List[AccessRequest]:
+                      zipf_a: float = 1.2,
+                      tenants: Dict[str, float] = None
+                      ) -> List[AccessRequest]:
     """A production-shaped trace: Table 2 sizes, Table 1 experiment mix,
-    Zipf-popular working set (caching only helps if there is reuse)."""
+    Zipf-popular working set (caching only helps if there is reuse).
+
+    ``tenants`` optionally maps tenant name → weight; each request is
+    then tagged with a tenant drawn from that mix (on a separate RNG
+    stream so the trace itself is unchanged).  Without it the tenant
+    defaults to the owning experiment downstream."""
     rng = random.Random(seed)
     sampler = PercentileSampler(seed)
     experiments = list(USAGE_BY_EXPERIMENT)
@@ -141,6 +149,9 @@ def generate_workload(sites: Sequence[str], n_requests: int,
         for k in range(working_set):
             files.append((f"/{e}/data/file_{k:04d}", sampler.sample(), e))
     ranks = [1.0 / (k + 1) ** zipf_a for k in range(working_set)]
+    trng = random.Random(seed ^ 0x7E9A97) if tenants else None
+    tnames = list(tenants) if tenants else []
+    tweights = [tenants[t] for t in tnames] if tenants else []
     out: List[AccessRequest] = []
     for i in range(n_requests):
         e_idx = rng.choices(range(len(experiments)), weights=weights)[0]
@@ -150,6 +161,68 @@ def generate_workload(sites: Sequence[str], n_requests: int,
             time=rng.uniform(0.0, duration),
             site=rng.choice(list(sites)),
             worker=rng.randrange(0, 1 << 16),
-            path=path, size=size, experiment=exp))
+            path=path, size=size, experiment=exp,
+            tenant=trng.choices(tnames, weights=tweights)[0]
+            if trng else ""))
+    out.sort(key=lambda r: r.time)
+    return out
+
+
+def herd_workload(sites: Sequence[str], path: str = "/hot/object",
+                  size: int = 2 * GB, at: float = 0.0,
+                  workers_per_site: int = 1, jitter: float = 0.0,
+                  n_objects: int = 1, waves: int = 1,
+                  wave_gap: float = 30.0, seed: int = 0,
+                  tenant: str = "herd") -> List[AccessRequest]:
+    """Thundering herd: repeated synchronized waves of every worker
+    hitting one hot object.  Unlike :func:`storm_workload` (one burst),
+    the herd re-fires every ``wave_gap`` seconds for ``waves`` rounds,
+    optionally rotating through ``n_objects`` distinct hot objects — the
+    load shape that keeps an admission queue saturated rather than
+    merely spiking it."""
+    rng = random.Random(seed)
+    out: List[AccessRequest] = []
+    for wave in range(waves):
+        p = (f"{path}_{wave % max(n_objects, 1):03d}"
+             if n_objects > 1 else path)
+        t0 = at + wave * wave_gap
+        for s in sites:
+            for w in range(workers_per_site):
+                out.append(AccessRequest(
+                    time=t0 + (rng.uniform(0.0, jitter) if jitter > 0
+                               else 0.0),
+                    site=s, worker=w, path=p, size=size,
+                    experiment="thundering-herd", tenant=tenant))
+    out.sort(key=lambda r: r.time)
+    return out
+
+
+def abusive_workload(sites: Sequence[str], n_requests: int,
+                     duration: float = 3600.0, seed: int = 0,
+                     working_set: int = 64, zipf_a: float = 1.2,
+                     tenants: Dict[str, float] = None,
+                     abusive_tenant: str = "abuser",
+                     abuse_factor: float = 4.0,
+                     abuse_at: float = 0.0,
+                     abuse_duration: float = 60.0,
+                     abuse_size: int = 512 * MB) -> List[AccessRequest]:
+    """A well-behaved Zipf background trace plus one abusive tenant.
+
+    The abuser fires ``abuse_factor × n_requests`` cache-busting reads
+    (every path distinct, so each one misses) compressed into
+    ``abuse_duration`` seconds — the workload whose damage per-tenant
+    quotas exist to contain."""
+    out = generate_workload(sites, n_requests, duration=duration,
+                            seed=seed, working_set=working_set,
+                            zipf_a=zipf_a, tenants=tenants)
+    rng = random.Random(seed ^ 0xABB0)
+    site_list = list(sites)
+    for i in range(int(abuse_factor * n_requests)):
+        out.append(AccessRequest(
+            time=abuse_at + rng.uniform(0.0, abuse_duration),
+            site=rng.choice(site_list),
+            worker=rng.randrange(0, 1 << 16),
+            path=f"/abuse/blob_{i:05d}", size=abuse_size,
+            experiment=abusive_tenant, tenant=abusive_tenant))
     out.sort(key=lambda r: r.time)
     return out

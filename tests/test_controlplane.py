@@ -1,0 +1,324 @@
+"""Unit tests for the control plane: queues, breakers, quotas, health."""
+import math
+
+import pytest
+
+from repro.core import (CacheGroup, CacheServer, CircuitBreaker,
+                        ControlPlane, ControlPlaneSpec, Coord, DecayGauge,
+                        FluidFlowSim, NetworkModel, SpaceSavingTopK,
+                        Topology, fair_shares)
+from repro.core.controlplane import AdmissionQueue, AnalyticQueue
+from repro.core.monitoring import CacheHealthMonitor
+
+
+def _sim():
+    topo = Topology()
+    topo.add_site("s")
+    topo.add_node("w", Coord("s"), 1e9)
+    return FluidFlowSim(topo, NetworkModel(topo))
+
+
+def _drive(sim, gen, out, key):
+    def run():
+        out[key] = yield from gen
+    sim.spawn(run())
+
+
+class TestFairShares:
+    def test_under_demand_everyone_satisfied(self):
+        assert fair_shares([2, 3], 10) == [2, 3]
+
+    def test_over_demand_splits_evenly(self):
+        assert fair_shares([10, 10, 10], 15) == [5, 5, 5]
+
+    def test_small_demands_release_to_big(self):
+        # max-min: the 1-demand tenant is capped by demand, the rest
+        # split what remains
+        assert fair_shares([1, 100, 100], 11) == [1, 5, 5]
+
+    def test_sum_is_min_of_capacity_and_demand(self):
+        alloc = fair_shares([3, 9, 2, 7], 12)
+        assert sum(alloc) == pytest.approx(12)
+        alloc = fair_shares([3, 1], 12)
+        assert sum(alloc) == pytest.approx(4)
+
+    def test_weights(self):
+        assert fair_shares([100, 100], 30, weights=[2, 1]) == [20, 10]
+
+
+class TestCircuitBreaker:
+    def test_opens_after_threshold_consecutive_failures(self):
+        br = CircuitBreaker(threshold=3, cooldown=10.0)
+        for t in range(2):
+            br.on_failure(float(t))
+            assert br.state == br.CLOSED
+        br.on_failure(2.0)
+        assert br.state == br.OPEN
+        assert br.opens == 1
+        assert not br.allow(3.0)
+
+    def test_success_resets_failure_run(self):
+        br = CircuitBreaker(threshold=3)
+        br.on_failure(0.0)
+        br.on_failure(1.0)
+        br.on_success(2.0)
+        br.on_failure(3.0)
+        br.on_failure(4.0)
+        assert br.state == br.CLOSED  # the run was broken
+
+    def test_half_open_probe_then_close_or_reopen(self):
+        br = CircuitBreaker(threshold=1, cooldown=5.0)
+        br.on_failure(0.0)
+        assert br.state == br.OPEN
+        assert not br.allow(4.9)
+        assert br.allow(5.0)           # cooldown elapsed: one probe
+        assert br.state == br.HALF_OPEN
+        br.on_failure(5.1)             # probe failed
+        assert br.state == br.OPEN
+        assert br.opens == 2
+        assert br.allow(10.2)
+        br.on_success(10.3)            # probe succeeded
+        assert br.state == br.CLOSED
+
+
+class TestAdmissionQueue:
+    def test_sheds_beyond_queue_depth(self):
+        sim = _sim()
+        spec = ControlPlaneSpec(max_concurrent=1, queue_depth=2)
+        q = AdmissionQueue(sim, spec)
+        out = {}
+        for i in range(4):
+            _drive(sim, q.acquire("t"), out, i)
+        sim.run()
+        # 1 in service, 2 queued, 1 shed
+        assert out[0] is True
+        assert q.in_service == 1
+        assert len(q.waiting) == 2
+        assert out[3] is False
+        assert q.stats.sheds == 1
+        assert q.stats.shed_by_tenant == {"t": 1}
+
+    def test_release_drains_fifo(self):
+        sim = _sim()
+        spec = ControlPlaneSpec(max_concurrent=1, queue_depth=8)
+        q = AdmissionQueue(sim, spec)
+        out = {}
+        for i in range(3):
+            _drive(sim, q.acquire("t"), out, i)
+        sim.run()
+        assert out == {0: True}
+        q.release("t")
+        sim.run()
+        assert out == {0: True, 1: True}
+        q.release("t")
+        sim.run()
+        assert out == {0: True, 1: True, 2: True}
+        assert q.stats.queue_waits == 2
+
+    def test_tenant_quota_caps_slots(self):
+        sim = _sim()
+        spec = ControlPlaneSpec(max_concurrent=4, queue_depth=8,
+                                tenant_quota=0.5)  # 2 slots per tenant
+        q = AdmissionQueue(sim, spec)
+        out = {}
+        for i in range(4):
+            _drive(sim, q.acquire("hog"), out, f"hog{i}")
+        _drive(sim, q.acquire("small"), out, "small")
+        sim.run()
+        # hog holds its 2-slot quota, 2 hogs wait; small walks past them
+        assert out["hog0"] and out["hog1"]
+        assert "hog2" not in out and "hog3" not in out
+        assert out["small"] is True
+        assert q.by_tenant == {"hog": 2, "small": 1}
+
+    def test_fair_share_dequeue_prefers_starved_tenant(self):
+        sim = _sim()
+        spec = ControlPlaneSpec(max_concurrent=2, queue_depth=8,
+                                tenant_quota=1.0)
+        q = AdmissionQueue(sim, spec)
+        out = {}
+        _drive(sim, q.acquire("a"), out, "a0")
+        _drive(sim, q.acquire("a"), out, "a1")
+        _drive(sim, q.acquire("a"), out, "a2")   # waits (queued first)
+        _drive(sim, q.acquire("b"), out, "b0")   # waits
+        sim.run()
+        q.release("a")
+        sim.run()
+        # b holds 0 slots vs a's 1: fair-share grants b despite a2's
+        # earlier enqueue
+        assert out.get("b0") is True
+        assert "a2" not in out
+
+    def test_queue_never_exceeds_bound(self):
+        sim = _sim()
+        spec = ControlPlaneSpec(max_concurrent=2, queue_depth=3)
+        q = AdmissionQueue(sim, spec)
+        out = {}
+        for i in range(10):
+            _drive(sim, q.acquire(f"t{i % 3}"), out, i)
+        sim.run()
+        assert q.max_waiting <= spec.queue_depth
+        assert q.in_service <= spec.max_concurrent
+        assert q.stats.sheds == 10 - 2 - 3
+
+
+class TestAnalyticQueue:
+    def test_waits_accumulate_like_c_server(self):
+        spec = ControlPlaneSpec(max_concurrent=2, queue_depth=10)
+        q = AnalyticQueue(spec)
+        # three unit-time jobs arriving together on 2 servers
+        waits = []
+        for _ in range(3):
+            start = q.reserve(0.0)
+            waits.append(q.commit(0.0, start, 1.0))
+        assert waits == [0.0, 0.0, 1.0]
+
+    def test_sheds_when_backlog_hits_depth(self):
+        spec = ControlPlaneSpec(max_concurrent=1, queue_depth=1)
+        q = AnalyticQueue(spec)
+        s0 = q.reserve(0.0)
+        q.commit(0.0, s0, 10.0)        # busy until 10
+        s1 = q.reserve(1.0)
+        q.commit(1.0, s1, 1.0)         # one waiter parked
+        assert q.reserve(2.0) is None  # queue full: shed
+        assert q.stats.sheds == 1
+        # once the backlog clears, arrivals are admitted again
+        assert q.reserve(12.0) == 12.0
+
+    def test_tenant_quota_serializes_hog(self):
+        spec = ControlPlaneSpec(max_concurrent=4, queue_depth=10,
+                                tenant_quota=0.25)  # 1 slot per tenant
+        q = AnalyticQueue(spec)
+        s = q.reserve(0.0, "hog")
+        q.commit(0.0, s, 5.0, "hog")
+        s2 = q.reserve(0.0, "hog")
+        assert s2 == 5.0               # quota, not free servers, binds
+        other = q.reserve(0.0, "other")
+        assert other == 0.0
+
+
+class TestGauges:
+    def test_decay_gauge_halves_per_tau_ln2(self):
+        g = DecayGauge(tau=10.0)
+        g.add(8.0, now=0.0)
+        assert g.read(0.0) == 8.0
+        assert g.read(10.0 * math.log(2)) == pytest.approx(4.0)
+
+    def test_monotone_under_silence(self):
+        g = DecayGauge(tau=7.0)
+        g.add(5.0, now=3.0)
+        prev = g.read(3.0)
+        for t in (4.0, 8.0, 20.0, 100.0):
+            cur = g.read(t)
+            assert cur <= prev
+            prev = cur
+
+    def test_space_saving_topk_tracks_heavy_hitter(self):
+        tk = SpaceSavingTopK(k=2)
+        for _ in range(100):
+            tk.add("whale", 10)
+        for i in range(20):
+            tk.add(f"minnow{i}", 1)
+        top = tk.top(1)
+        assert top[0][0] == "whale"
+        assert top[0][1] >= 1000
+
+    def test_health_monitor_flags_error_rate(self):
+        hm = CacheHealthMonitor(tau=60.0)
+        for i in range(6):
+            hm.observe("c", ok=False, latency=0.0, now=float(i))
+        assert hm.error_rate("c", 6.0) == pytest.approx(1.0)
+        assert hm.unhealthy("c", 6.0, error_threshold=0.5)
+        # too few samples: never unhealthy, whatever the rate
+        hm2 = CacheHealthMonitor()
+        hm2.observe("c", ok=False, latency=0.0, now=0.0)
+        assert not hm2.unhealthy("c", 0.0, error_threshold=0.5)
+
+
+def _group():
+    topo = Topology()
+    topo.add_site("s")
+    caches = []
+    for i in range(2):
+        node = topo.add_node(f"c{i}", Coord("s"), 1e10)
+        caches.append(CacheServer(f"c{i}", node, 10**9))
+    return CacheGroup("g", caches)
+
+
+class TestHealthDrivenDemotion:
+    def _plane(self, group, **kw):
+        spec = ControlPlaneSpec(min_samples=2.0, error_threshold=0.5,
+                                health_cooldown=30.0, **kw)
+        return ControlPlane(spec, group_of={c.name: group
+                                            for c in group.members})
+
+    def test_auto_mark_down_and_lazy_recovery(self):
+        group = self._group = _group()
+        cp = self._plane(group)
+        for t in range(5):
+            cp.on_failure("c0", float(t))
+        assert not group.caches["c0"].available
+        assert group.stats.outages == 1
+        assert group.stats.auto_outages == 1
+        assert cp.stats.auto_downs == 1
+        # before cooldown: no recovery
+        assert not cp.maybe_recover("c0", 10.0)
+        assert not group.caches["c0"].available
+        # after cooldown: probe brings it back, auto-tagged
+        assert cp.maybe_recover("c0", 40.0)
+        assert group.caches["c0"].available
+        assert group.stats.recoveries == 1
+        assert group.stats.auto_recoveries == 1
+        assert cp.stats.auto_ups == 1
+
+    def test_no_double_count_when_script_overlaps_gauge(self):
+        """Regression (ISSUE 6 small fix): a scripted mark_down racing a
+        gauge-driven one must count a single outage, and the control
+        plane must not auto-recover a cache a schedule already
+        recovered."""
+        group = _group()
+        cp = self._plane(group)
+        group.mark_down("c0")          # scripted outage fires first
+        assert group.stats.outages == 1
+        for t in range(5):
+            cp.on_failure("c0", float(t))  # gauges fire on the same cache
+        # available-guard dedupe: still one outage, no auto counter
+        assert group.stats.outages == 1
+        assert group.stats.auto_outages == 0
+        assert cp.stats.auto_downs == 0
+        # scripted recovery beats the health cooldown…
+        group.mark_up("c0")
+        assert group.stats.recoveries == 1
+        # …and the control plane must not claim (or re-count) it
+        assert not cp.maybe_recover("c0", 100.0)
+        assert group.stats.recoveries == 1
+        assert group.stats.auto_recoveries == 0
+        assert cp.stats.auto_ups == 0
+
+    def test_gauge_down_then_scripted_up_drops_auto_record(self):
+        group = _group()
+        cp = self._plane(group)
+        for t in range(5):
+            cp.on_failure("c0", float(t))
+        assert cp.stats.auto_downs == 1
+        group.mark_up("c0")            # schedule recovers it mid-cooldown
+        assert not cp.maybe_recover("c0", 100.0)
+        assert cp.stats.auto_ups == 0  # never auto-up what we didn't hold
+        assert group.stats.recoveries == 1
+
+    def test_breaker_skip_counts(self):
+        group = _group()
+        cp = self._plane(group, breaker_threshold=2)
+        cp.on_failure("c1", 0.0)
+        cp.on_failure("c1", 1.0)
+        assert cp.stats.breaker_opens == 1
+        assert not cp.allow("c1", 2.0)
+        assert cp.stats.breaker_skips == 1
+        # cooldown elapses: half-open probe allowed
+        assert cp.allow("c1", 100.0)
+
+    def test_backoff_schedule(self):
+        cp = ControlPlane(ControlPlaneSpec(backoff_base=0.5,
+                                           backoff_multiplier=2.0,
+                                           backoff_max=3.0))
+        assert [cp.backoff(i) for i in range(4)] == [0.5, 1.0, 2.0, 3.0]

@@ -1,0 +1,236 @@
+"""Differential fuzz: random traces, scalar CacheServer oracle vs kernels.
+
+Hypothesis-free seeded fuzzing (tier-1 always runs it): a deterministic
+random-trace generator sweeps capacities, chunk sizes, admission
+fractions and cold restarts, replays every trace through the real
+:class:`~repro.core.cache.CacheServer` state machine, and diffs the
+result against all three batched kernels in
+:mod:`repro.kernels.stack_distance`:
+
+* ``cache_sim_batch``   — every trace (LRU + FIFO, admission filters);
+* ``fifo_sim_batch``    — the FIFO subset;
+* ``stack_distances_batch`` + ``lru_hits`` — the admit-everything LRU
+  subset (the Mattson one-pass-per-column path).
+
+All ~220 traces are batched into a handful of jitted calls, so the suite
+stays cheap.  On a mismatch the failing trace is greedily shrunk to a
+minimal reproducer and printed — paste it straight into a regression
+test.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (CacheServer, Coord, Payload, SizeAwareAdmission,
+                        Topology)
+from repro.kernels.stack_distance import (cache_sim_batch, fifo_sim_batch,
+                                          lru_hits, stack_distances_batch)
+
+N_CASES = 220
+
+
+# ---------------------------------------------------------------------------
+# Trace generation + the CacheServer oracle
+
+
+def _random_case(seed):
+    """One seeded random trace + cache configuration."""
+    rng = random.Random(0xD1FF ^ seed)
+    n = rng.randint(40, 160)
+    n_keys = rng.randint(2, 16)
+    max_size = rng.randint(4, 40)
+    sizes = [rng.randint(1, max_size) for _ in range(n_keys)]
+    keys = [rng.randrange(n_keys) for _ in range(n)]
+    reset_rate = rng.choice([0.0, 0.02, 0.1])
+    resets = [i > 0 and rng.random() < reset_rate for i in range(n)]
+    capacity = rng.randint(max_size, 20 * max_size)
+    fraction = rng.choice([None, None, 0.15, 0.3, 0.6])
+    policy = rng.choice(["lru", "fifo"])
+    return {"seed": seed, "keys": keys, "sizes": sizes, "resets": resets,
+            "capacity": capacity, "fraction": fraction, "policy": policy}
+
+
+def _admit_bits(case):
+    """The per-reference admission bit the kernels consume — mirrors
+    CacheServer.admit's refusal order (admission filter, then oversize);
+    the two refusal counters are mutually exclusive so their sum is the
+    non-admitted miss count."""
+    cap, frac = case["capacity"], case["fraction"]
+    return np.asarray([
+        s <= cap and (frac is None or s <= frac * cap)
+        for s in (case["sizes"][k] for k in case["keys"])])
+
+
+def _oracle(case):
+    """Replay the trace through a real CacheServer (no reimplementation:
+    the oracle IS the production state machine)."""
+    admission = (SizeAwareAdmission(case["fraction"])
+                 if case["fraction"] is not None else None)
+    topo = Topology()
+    topo.add_site("s")
+    node = topo.add_node(f"c{case['seed']}", Coord("s"), 1e10)
+    c = CacheServer(node.name, node, int(case["capacity"]),
+                    policy=case["policy"], admission=admission)
+    hits = []
+    for k, r in zip(case["keys"], case["resets"]):
+        if r:
+            c.clear()
+        path = f"/k{k}"
+        if c.lookup(path, 0) is not None:
+            hits.append(True)
+            continue
+        hits.append(False)
+        size = case["sizes"][k]
+        c.admit(path, 0, Payload.synthetic(size, path, 0),
+                object_size=size)
+    return (np.asarray(hits), c.stats.evictions, c.stats.bytes_evicted,
+            c.stats.admission_rejects + c.stats.oversize_rejects)
+
+
+def _sim_problem(case):
+    return (case["keys"], _admit_bits(case), case["resets"],
+            np.asarray(case["sizes"], float), float(case["capacity"]),
+            case["policy"] == "fifo")
+
+
+def _mismatch(case, kernel_result):
+    """None if kernel and oracle agree, else a description string."""
+    hits, ev, evb = kernel_result
+    o_hits, o_ev, o_evb, o_rej = _oracle(case)
+    if (hits != o_hits).any():
+        i = int(np.argmax(hits != o_hits))
+        return (f"hit mask diverges at ref {i} "
+                f"(kernel={bool(hits[i])}, oracle={bool(o_hits[i])})")
+    if (ev, evb) != (o_ev, o_evb):
+        return (f"evictions kernel=({ev}, {evb}) "
+                f"oracle=({o_ev}, {o_evb})")
+    admit = _admit_bits(case)
+    if int((~hits & ~admit).sum()) != o_rej:
+        return (f"derived rejects {int((~hits & ~admit).sum())} "
+                f"!= oracle {o_rej}")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Shrinking: greedy trace minimization for readable failure output
+
+
+def _still_fails(case):
+    (res,) = cache_sim_batch([_sim_problem(case)])
+    return _mismatch(case, res) is not None
+
+
+def _shrunk(case, fails=_still_fails):
+    """Greedily minimize a failing trace: truncate the tail, then drop
+    individual references, keeping every removal that still fails."""
+    cur = dict(case)
+    # binary-search the shortest failing prefix
+    lo, hi = 1, len(cur["keys"])
+    while lo < hi:
+        mid = (lo + hi) // 2
+        trial = dict(cur, keys=cur["keys"][:mid], resets=cur["resets"][:mid])
+        if fails(trial):
+            hi = mid
+        else:
+            lo = mid + 1
+    cur["keys"], cur["resets"] = cur["keys"][:hi], cur["resets"][:hi]
+    # drop interior references one at a time
+    i = len(cur["keys"]) - 1
+    while i >= 0:
+        trial = dict(cur, keys=cur["keys"][:i] + cur["keys"][i + 1:],
+                     resets=cur["resets"][:i] + cur["resets"][i + 1:])
+        if fails(trial):
+            cur = trial
+        i -= 1
+    return cur
+
+
+def _repro(case, why):
+    return (f"differential mismatch ({why})\nminimal reproducing trace:\n"
+            f"  keys     = {case['keys']}\n"
+            f"  sizes    = {case['sizes']}\n"
+            f"  resets   = {case['resets']}\n"
+            f"  capacity = {case['capacity']}\n"
+            f"  fraction = {case['fraction']}\n"
+            f"  policy   = {case['policy']!r}\n"
+            f"  (seed {case['seed']})")
+
+
+# ---------------------------------------------------------------------------
+# The suite
+
+
+class TestDifferentialFuzz:
+    def test_cache_sim_matches_oracle_on_220_random_traces(self):
+        """Primary differential target: every random trace through the
+        vectorized cache state machine, one batched call."""
+        cases = [_random_case(s) for s in range(N_CASES)]
+        results = cache_sim_batch([_sim_problem(c) for c in cases])
+        for case, res in zip(cases, results):
+            why = _mismatch(case, res)
+            if why is not None:
+                small = _shrunk(case)
+                pytest.fail(_repro(small, why))
+
+    def test_fifo_kernel_agrees_on_fifo_subset(self):
+        cases = [c for c in (_random_case(s) for s in range(N_CASES))
+                 if c["policy"] == "fifo"]
+        assert len(cases) >= 50  # the generator keeps both policies hot
+        problems = [(c["keys"],
+                     np.asarray([c["sizes"][k] for k in c["keys"]], float),
+                     _admit_bits(c), c["resets"], len(c["sizes"]),
+                     float(c["capacity"])) for c in cases]
+        for case, (hits, ev, evb) in zip(cases, fifo_sim_batch(problems)):
+            why = _mismatch(case, (hits, ev, evb))
+            if why is not None:
+                small = _shrunk(case)
+                pytest.fail(_repro(small, f"fifo_sim_batch: {why}"))
+
+    def test_stack_distances_agree_on_admit_all_lru_subset(self):
+        """The Mattson path (distances once, hits per capacity) against
+        the same oracle — only valid with no admission filter."""
+        cases = [c for c in (_random_case(s) for s in range(N_CASES))
+                 if c["policy"] == "lru" and c["fraction"] is None
+                 and max(c["sizes"]) <= c["capacity"]]
+        assert len(cases) >= 40
+
+        def prev_indices(keys, resets):
+            prev, last = [], {}
+            for i, (k, r) in enumerate(zip(keys, resets)):
+                if r:
+                    last = {}
+                prev.append(last.get(k, -1))
+                last[k] = i
+            return prev
+
+        problems = []
+        for c in cases:
+            ref_sizes = np.asarray([c["sizes"][k] for k in c["keys"]],
+                                   float)
+            problems.append((prev_indices(c["keys"], c["resets"]),
+                             ref_sizes))
+        dists = stack_distances_batch(problems)
+        for case, dist, (_, ref_sizes) in zip(cases, dists, problems):
+            hits = lru_hits(dist, ref_sizes, case["capacity"])
+            o_hits, *_ = _oracle(case)
+            if (hits != o_hits).any():
+                i = int(np.argmax(hits != o_hits))
+                small = _shrunk(case)
+                pytest.fail(_repro(
+                    small, f"lru_hits diverges at ref {i}"))
+
+    def test_shrinker_minimizes(self):
+        """The shrinker itself: given a predicate, the surviving trace
+        is 1-minimal (no single reference can be dropped)."""
+        case = _random_case(0)
+
+        def fails(c):
+            # synthetic "bug": key 1 referenced at least twice
+            return c["keys"].count(1) >= 2
+
+        assert fails(case)
+        small = _shrunk(case, fails=fails)
+        assert fails(small)
+        assert small["keys"].count(1) == 2
+        assert all(k == 1 for k in small["keys"])

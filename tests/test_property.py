@@ -7,9 +7,12 @@ hypothesis = pytest.importorskip(
 import hypothesis.strategies as st  # noqa: E402
 from hypothesis import given, settings  # noqa: E402
 
-from repro.core import (CacheServer, Coord, Namespace, Payload, Topology,
-                        chunk_object, fnv1a64)
+from repro.core import (CacheServer, CircuitBreaker, ControlPlaneSpec, Coord,
+                        DecayGauge, Namespace, NetworkModel, Payload,
+                        Topology, chunk_object, fair_shares, fnv1a64)
 from repro.core.chunk import synthetic_object
+from repro.core.controlplane import AdmissionQueue
+from repro.core.simulator import FluidFlowSim
 
 
 def _cache(capacity):
@@ -95,6 +98,103 @@ class TestNamespaceInvariants:
             owned_by = prefixes[int(owner[1:])]
             assert (p + "/leaf").startswith(owned_by)
             assert len(owned_by) >= len(p) or not p.startswith(owned_by)
+
+
+class TestControlPlaneInvariants:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(0.0, 1e6), min_size=0, max_size=20),
+           st.floats(0.0, 1e6))
+    def test_fair_shares_sum_to_feasible_total(self, demands, capacity):
+        """Allocations never exceed their demand and always sum to
+        min(capacity, total demand) — water-filling wastes nothing."""
+        alloc = fair_shares(demands, capacity)
+        assert len(alloc) == len(demands)
+        for a, d in zip(alloc, demands):
+            assert a <= d + 1e-6
+            assert a >= 0.0
+        assert sum(alloc) == pytest.approx(
+            min(capacity, sum(demands)), rel=1e-6, abs=1e-6)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["allow", "ok", "fail"]),
+                              st.floats(0.0, 10.0)),
+                    min_size=1, max_size=60),
+           st.integers(1, 5), st.floats(0.1, 20.0))
+    def test_breaker_only_takes_legal_edges(self, ops, threshold, cooldown):
+        """FSM invariant: the only reachable transitions are closed→open,
+        open→half-open, half-open→{open, closed}."""
+        legal = {("closed", "open"), ("open", "half-open"),
+                 ("half-open", "open"), ("half-open", "closed")}
+        br = CircuitBreaker(threshold=threshold, cooldown=cooldown)
+        now, prev = 0.0, br.state
+        for op, dt in ops:
+            now += dt
+            if op == "allow":
+                br.allow(now)
+            elif op == "ok":
+                br.on_success(now)
+            else:
+                br.on_failure(now)
+            if br.state != prev:
+                assert (prev, br.state) in legal
+            prev = br.state
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(0.0, 100.0), st.floats(0.1, 100.0),
+           st.lists(st.floats(0.001, 1000.0), min_size=1, max_size=20))
+    def test_decay_gauge_monotone_under_silence(self, value, tau, gaps):
+        """With no adds, successive reads never increase."""
+        g = DecayGauge(tau=tau)
+        g.add(value, now=0.0)
+        now, prev = 0.0, g.read(0.0)
+        for gap in gaps:
+            now += gap
+            cur = g.read(now)
+            assert cur <= prev + 1e-12
+            prev = cur
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 6), st.integers(0, 8),
+           st.lists(st.tuples(st.booleans(), st.integers(0, 3)),
+                    min_size=1, max_size=40))
+    def test_queue_never_exceeds_bounds(self, max_concurrent, depth, ops):
+        """Under any acquire/release interleaving: in-service count stays
+        within max_concurrent, the wait queue within queue_depth, and no
+        request is lost (admitted + waiting + shed == arrivals)."""
+        topo = Topology()
+        topo.add_site("s")
+        topo.add_node("w", Coord("s"), 1e9)
+        sim = FluidFlowSim(topo, NetworkModel(topo))
+        spec = ControlPlaneSpec(max_concurrent=max_concurrent,
+                                queue_depth=depth)
+        q = AdmissionQueue(sim, spec)
+        granted, arrivals, released = [], 0, 0
+
+        def req(tenant):
+            admitted = yield from q.acquire(tenant)
+            if admitted:
+                granted.append(tenant)
+
+        for is_acquire, tenant_i in ops:
+            tenant = f"t{tenant_i}"
+            if is_acquire:
+                arrivals += 1
+                sim.spawn(req(tenant))
+                sim.run()
+            elif granted:
+                q.release(granted.pop(0))
+                released += 1
+                sim.run()
+            assert q.in_service <= max_concurrent
+            assert len(q.waiting) <= depth
+            assert q.in_service == sum(q.by_tenant.values())
+            assert q.in_service == len(granted)
+            # conservation: every arrival is in service, parked, shed,
+            # or already released — none vanish
+            assert (q.in_service + len(q.waiting) + q.stats.sheds
+                    + released) == arrivals
+        assert q.max_in_service <= max_concurrent
+        assert q.max_waiting <= depth
 
 
 class TestLoaderMapping:

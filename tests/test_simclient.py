@@ -3,10 +3,11 @@ outage storms, hedged fetches, and the sim-accounting regression fixes."""
 import pytest
 
 from repro.core import (
-    CacheServer, Coord, DownloadResult, FluidFlowSim, LocalCache, Origin,
-    OutageEvent, OutageSchedule, Payload, ScenarioEngine, SizeAwareAdmission,
-    Topology, build_fleet_federation, build_osg_federation, first_of,
-    generate_workload, stash_download, storm_workload,
+    CacheServer, ControlPlaneSpec, Coord, DownloadResult, FluidFlowSim,
+    LocalCache, Origin, OutageEvent, OutageSchedule, Payload, ScenarioEngine,
+    SizeAwareAdmission, Topology, abusive_workload, build_fleet_federation,
+    build_osg_federation, first_of, generate_workload, herd_workload,
+    stash_download, storm_workload,
 )
 
 
@@ -356,6 +357,131 @@ class TestSimAccountingFixes:
         sim.run()
         assert origin.stats.egress_bytes - before == meta.size
 
+class TestControlPlaneFaults:
+    """Fault injection at the control-plane seams: hedges racing
+    outages, breakers opening mid-storm, quota exhaustion during a
+    cold-restart wave.  The common invariant is *exact accounting* —
+    no double-counted loser bytes, no lost shed requests."""
+
+    def test_hedge_races_mid_transfer_mark_down(self):
+        """The slow primary is marked down while its (losing) hedge arm
+        is mid-transfer: the backup must still win, and the completed
+        request's bytes must be counted exactly once."""
+        fed = build_fleet_federation(num_pods=2, hosts_per_pod=1)
+        slow = fed.caches["pod0/cache"]
+        slow.mem_object_max = 1e6
+        slow.disk_bw = 1e7                    # primary alone needs ~200 s
+        eng = ScenarioEngine(fed, hedge_after=1.0,
+                             control=ControlPlaneSpec())
+        path = "/d/ckpt"
+        fed.origins[0].put_object(path, int(2e9))
+        res = DownloadResult(path, int(2e9), "simclient")
+        eng.sim.spawn(eng.client("pod0", 0).download(path, result=res))
+
+        def killer():
+            yield eng.sim.delay(5.0)
+            eng.apply_outage(OutageEvent(5.0, "pod0/cache", "down"))
+
+        eng.sim.spawn(killer())
+        eng.sim.run()
+        assert res.seconds > 0 and not res.shed
+        assert res.hedged
+        assert res.source == "pod1/cache"
+        assert fed.groups["pod0"].stats.outages == 1
+        rep = eng.report([res])
+        # the loser arm's abandoned transfer must not inflate the row
+        assert rep.bytes_moved == int(2e9)
+        assert rep.sheds == 0
+
+    def test_breaker_opens_during_flap_and_skips_after_recovery(self):
+        """A cache flaps down/up mid-storm.  Failures while it is dark
+        open its breaker; once it returns, the still-open breaker keeps
+        skipping it (no burned attempt) until the cooldown elapses —
+        and every request still completes elsewhere."""
+        fed = build_fleet_federation(num_pods=1, hosts_per_pod=2,
+                                     cache_replicas=2)
+        victim = fed.groups["pod0"].members[0]
+        spec = ControlPlaneSpec(breaker_threshold=2, breaker_cooldown=250.0,
+                                health_enabled=False, backoff_base=0.0)
+        eng = ScenarioEngine(fed, control=spec)
+        reqs = generate_workload(["pod0"], 90, working_set=12, seed=7,
+                                 duration=300.0)
+
+        def flapper():
+            # silent death: the ring keeps routing to it (no mark_down),
+            # so only the client-side breaker can learn it is gone
+            yield eng.sim.delay(50.0)
+            victim.available = False
+            yield eng.sim.delay(100.0)
+            victim.available = True
+
+        eng.sim.spawn(flapper())
+        rep = eng.replay(reqs)
+        assert all(r.seconds > 0 for r in rep.results)
+        assert rep.sheds == 0
+        assert rep.breaker_opens >= 1
+        # available again but breaker still open: requests skipped it
+        assert rep.breaker_skips >= 1
+
+    def test_quota_exhaustion_during_cold_restart_wave(self):
+        """Thundering herd through a 1-slot/1-waiter queue while the
+        ring cold-restarts underneath: every request is either completed
+        or explicitly shed — none lost, none double-counted."""
+        fed = build_fleet_federation(num_pods=1, hosts_per_pod=2,
+                                     cache_replicas=2)
+        spec = ControlPlaneSpec(max_concurrent=1, queue_depth=1,
+                                breaker_enabled=False, health_enabled=False,
+                                backoff_base=0.0)
+        eng = ScenarioEngine(fed, control=spec)
+        reqs = herd_workload(["pod0"], size=int(5e8), workers_per_site=6,
+                             waves=2, wave_gap=10.0)
+        victims = [c.name for c in fed.groups["pod0"].members]
+        sched = OutageSchedule.restart_storm(victims, at=5.0, downtime=8.0,
+                                             stagger=2.0)
+        rep = eng.replay(reqs, schedule=sched)
+        assert len(rep.results) == 12
+        completed = [r for r in rep.results if r.seconds > 0]
+        shed = [r for r in rep.results if r.shed]
+        # disjoint and exhaustive: a shed request never completed, a
+        # completed one was never shed, and nothing fell through
+        assert not set(map(id, completed)) & set(map(id, shed))
+        assert len(completed) + len(shed) == len(rep.results)
+        assert all(r.method == "shed" and r.seconds == 0 for r in shed)
+        assert len(shed) >= 1              # the 6-deep wave must shed
+        # report-level counters agree with both the rows and the
+        # control plane's own ledger
+        assert rep.sheds == len(shed) == eng.control.stats.sheds
+        assert rep.bytes_moved == sum(r.size for r in completed)
+
+    def test_abusive_tenant_sheds_first_under_quota(self):
+        """Per-tenant quotas make load-shedding discriminate: the
+        cache-busting tenant absorbs the sheds while the background
+        experiment keeps a higher completion rate."""
+        fed = build_fleet_federation(num_pods=1, hosts_per_pod=2,
+                                     cache_replicas=2)
+        spec = ControlPlaneSpec(max_concurrent=2, queue_depth=2,
+                                tenant_quota=0.5, breaker_enabled=False,
+                                health_enabled=False, backoff_base=0.0)
+        eng = ScenarioEngine(fed, control=spec)
+        reqs = abusive_workload(["pod0"], 40, duration=400.0, seed=3,
+                                tenants={"phys": 1.0},
+                                abusive_tenant="abuser", abuse_factor=2.0,
+                                abuse_at=50.0, abuse_duration=20.0,
+                                abuse_size=int(8e8))
+        rep = eng.replay(reqs)
+        by_tenant = eng.control.stats.shed_by_tenant
+        assert by_tenant.get("abuser", 0) >= 1
+        assert by_tenant.get("abuser", 0) > by_tenant.get("phys", 0)
+
+        def rate(tenant):
+            rows = [r for r in rep.results
+                    if (tenant == "abuser") == r.path.startswith("/abuse/")]
+            return sum(1 for r in rows if r.seconds > 0) / len(rows)
+
+        assert rate("phys") > rate("abuser")
+
+
+class TestSolverEdgeCases:
     @pytest.mark.parametrize("solver", ["scalar", "vector"])
     def test_same_node_flow_completes_under_both_solvers(self, solver):
         """Loopback flows cross no capacity link; the vector solver used

@@ -228,6 +228,42 @@ class TestSerialFallback:
         rep = run_sweep(sweep, batched=True)
         assert rep.cells[0].executor == "serial"
 
+    def test_control_plane_cells_fall_back_and_are_counted(self):
+        """Admission queues / breakers are stateful across requests in
+        ways the hit/miss kernels don't model: a cell with a
+        ControlPlaneSpec must be classified serial (and counted as
+        such), while its control-free sibling stays batched with
+        byte-exact parity against a serial run."""
+        from repro.core import ControlPlaneSpec
+        base = base_spec(n_requests=12)
+        base = dataclasses.replace(
+            base, workload=dataclasses.replace(base.workload, duration=2.0))
+        sweep = SweepSpec(name="ctrl", base=base,
+                          axes={"control": [None, ControlPlaneSpec(
+                              max_concurrent=1, queue_depth=1)]})
+        rep = run_sweep(sweep, batched=True)
+        by_ctrl = {c.params["control"] is not None: c for c in rep.cells}
+        assert by_ctrl[False].executor == "batched"
+        assert by_ctrl[True].executor == "serial"
+        assert rep.serial_cells == 1 and rep.batched_cells == 1
+        # the control-free cell is bit-identical to a serial run of the
+        # same spec: attaching control elsewhere must not perturb it
+        serial = run_scenario(base).summary()
+        for k in PARITY_INTS:
+            assert by_ctrl[False].summary[k] == serial[k], k
+        # the control cell actually exercised the queue
+        assert by_ctrl[True].summary["sheds"] + \
+            by_ctrl[True].summary["queue_waits"] > 0
+
+    def test_control_free_sweep_has_zero_serial_cells(self):
+        """Acceptance guard: adding the control axis must not push
+        ordinary sweeps off the batched path."""
+        sweep = SweepSpec(name="plain", base=base_spec(n_requests=12),
+                          axes={"workload.seed": [0, 1, 2]})
+        rep = run_sweep(sweep, batched=True)
+        assert rep.serial_cells == 0
+        assert rep.batched_cells == 3
+
 
 class TestEvictionParity:
     """The regime PR 5 closes: capacity / policy / admission axes run
