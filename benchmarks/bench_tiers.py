@@ -1,0 +1,204 @@
+"""Hierarchical cache tiers: L1/L2 split-sizing sweeps + collapsed fill.
+
+The OSDF follow-on to the paper (arXiv:2007.01408) runs StashCache as a
+tiered CDN: site-level L1 caches fill from regional L2 backbones, and
+only backbone misses reach the origin.  This bench exercises the tiered
+data plane end to end on two claims:
+
+* **Split-sizing sweeps stay vectorized.** A ``SweepSpec`` over
+  ``federation.tier1.cache_capacity × federation.tier2.cache_capacity ×
+  eviction_policy × seed`` (100 cells; 8 quick) runs through the
+  two-round batched executor: round one resolves every edge cache with
+  the stack-distance / state-machine kernels, round two derives each
+  backbone's reference stream from its children's miss streams (in
+  global arrival order) and resolves the L2 caches with the *same*
+  kernels.  Any cell falling back to the serial executor fails the
+  bench; every cell must be byte-exact against a serial
+  ``run_scenario`` replay, including the per-tier counters.
+
+* **Tiered fill collapses origin egress.** A regional flash crowd (one
+  region's edges hammering a small hot set) runs against the tiered
+  federation and a parent-stripped flat twin.  With tiers, the first
+  edge miss fills the regional backbone and sibling edges then fill
+  cache-to-cache, so origin egress drops; the artifact records the
+  reduction and the gate holds it above a floor.
+
+**Artifact** ``artifacts/tiers.json`` (see docs/BENCHMARKS.md): sweep
+inventory and wall-clocks for both executions, ``speedup``, the solver
+telemetry (``tier_rounds`` — the two-round claim), the parity section
+(per-tier keys included), and the ``egress`` section
+(flat vs tiered origin bytes and the derived ``reduction``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+from repro.core import (FederationSpec, ScenarioSpec, SweepSpec,
+                        WorkloadSpec, run_scenario, run_sweep)
+
+ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACT_FILES = ("tiers.json",)
+
+GB = 1000**3
+
+PARITY_KEYS = ("bytes_moved", "cache_hits", "cache_misses",
+               "origin_egress_bytes", "parent_fill_bytes", "evictions",
+               "bytes_evicted", "tier_hits", "tier_misses",
+               "tier_fill_bytes")
+
+
+def tiered_base(n_requests: int) -> ScenarioSpec:
+    return ScenarioSpec(
+        name="tiers", engine="analytic",
+        federation=FederationSpec.osdf(edges_per_region=2,
+                                       workers_per_edge=2,
+                                       l1_capacity=4 * GB,
+                                       l2_capacity=24 * GB),
+        workload=WorkloadSpec(kind="zipf", n_requests=n_requests,
+                              working_set=12, duration=600.0, seed=11))
+
+
+def tier_sweep_spec(quick: bool = False) -> SweepSpec:
+    """The L1/L2 split-sizing sweep: 100 cells (8 quick) over
+    ``tier1.cache_capacity × tier2.cache_capacity × policy × seed``,
+    with capacities that bind (most cells churn at both levels)."""
+    base = tiered_base(30 if quick else 60)
+    if quick:
+        axes = {
+            "federation.tier1.cache_capacity": [1 * GB, 6 * GB],
+            "federation.tier2.cache_capacity": [4 * GB, 24 * GB],
+            "federation.eviction_policy": ["lru", "fifo"],
+        }
+    else:
+        axes = {
+            "federation.tier1.cache_capacity": [
+                1 * GB, 2 * GB, 4 * GB, 6 * GB, 8 * GB],
+            "federation.tier2.cache_capacity": [
+                4 * GB, 8 * GB, 16 * GB, 24 * GB, 48 * GB],
+            "federation.eviction_policy": ["lru", "fifo"],
+            "workload.seed": [11, 12],
+        }
+    return SweepSpec(name="tiers", base=base, axes=axes)
+
+
+def flash_crowd_pair(quick: bool = False):
+    """The same regional flash crowd on the tiered federation and on a
+    parent-stripped flat twin (identical sites, no hierarchy)."""
+    n = 60 if quick else 120
+    tiered = tiered_base(n)
+    crowd = WorkloadSpec(
+        kind="flash_crowd", n_requests=n, working_set=12,
+        duration=600.0, seed=11,
+        hot_sites=("us-east-edge0", "us-east-edge1"),
+        crowd_factor=6.0, crowd_at=60.0, crowd_duration=120.0,
+        n_objects=4, size=500_000_000)
+    tiered = dataclasses.replace(tiered, name="crowd-tiered",
+                                 workload=crowd)
+    flat = dataclasses.replace(
+        tiered, name="crowd-flat",
+        federation=dataclasses.replace(
+            tiered.federation,
+            sites=[dataclasses.replace(s, parent=None)
+                   for s in tiered.federation.sites]))
+    return tiered, flat
+
+
+def run(quick: bool = False, verbose: bool = False):
+    spec = tier_sweep_spec(quick=quick)
+    n_cells = len(spec)
+
+    t0 = time.perf_counter()
+    batched = run_sweep(spec, batched=True)
+    t_batched = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    serial = run_sweep(spec, batched=False, price_contention=False)
+    t_serial = time.perf_counter() - t0
+    speedup = t_serial / max(t_batched, 1e-9)
+
+    mismatches = []
+    for cb, cs in zip(batched.cells, serial.cells):
+        for k in PARITY_KEYS:
+            if cb.summary[k] != cs.summary[k]:
+                mismatches.append({"params": cb.params, "key": k,
+                                   "batched": cb.summary[k],
+                                   "serial": cs.summary[k]})
+
+    tiered_spec, flat_spec = flash_crowd_pair(quick=quick)
+    tiered_sum = run_scenario(tiered_spec).summary()
+    flat_sum = run_scenario(flat_spec).summary()
+    flat_egress = flat_sum["origin_egress_bytes"]
+    tiered_egress = tiered_sum["origin_egress_bytes"]
+    reduction = 1.0 - tiered_egress / max(flat_egress, 1)
+
+    ARTIFACTS.mkdir(exist_ok=True, parents=True)
+    (ARTIFACTS / "tiers.json").write_text(json.dumps({
+        "cells": n_cells,
+        "quick": quick,
+        "axes": {k: list(v) for k, v in spec.axes.items()},
+        "batched": {
+            "wall_seconds": t_batched,
+            "batched_cells": batched.batched_cells,
+            "serial_cells": batched.serial_cells,
+            "solver": batched.solver,
+        },
+        "serial": {"wall_seconds": t_serial},
+        "speedup": speedup,
+        "parity": {"checked_cells": len(batched.cells),
+                   "keys": list(PARITY_KEYS),
+                   "mismatches": mismatches},
+        "sample_cell": {"params": batched.cells[0].params,
+                        "summary": batched.cells[0].summary},
+        "egress": {
+            "flat_origin_egress_bytes": flat_egress,
+            "tiered_origin_egress_bytes": tiered_egress,
+            "tiered_parent_fill_bytes": tiered_sum["parent_fill_bytes"],
+            "tiered_tier_hits": tiered_sum["tier_hits"],
+            "reduction": reduction,
+        },
+    }, indent=1))
+
+    if mismatches:
+        raise AssertionError(
+            f"tiered batched/serial parity broke on {len(mismatches)} "
+            f"cells: {mismatches[:3]}")
+    if batched.serial_cells:
+        raise AssertionError(
+            f"{batched.serial_cells} tiered cells fell back to the "
+            f"serial executor")
+    if batched.solver.get("tier_rounds") != 2:
+        raise AssertionError(
+            f"expected the two-round executor, telemetry says "
+            f"tier_rounds={batched.solver.get('tier_rounds')!r}")
+    if reduction <= 0:
+        raise AssertionError(
+            f"tiered fill did not reduce origin egress: flat "
+            f"{flat_egress} vs tiered {tiered_egress}")
+
+    if verbose:
+        print(f"  {n_cells} cells: batched {t_batched:.2f}s vs serial "
+              f"{t_serial:.2f}s -> {speedup:.1f}x "
+              f"(tier_rounds={batched.solver.get('tier_rounds')})")
+        print(f"  flash crowd: origin egress {flat_egress / 1e9:.1f} GB "
+              f"flat -> {tiered_egress / 1e9:.1f} GB tiered "
+              f"({reduction:.1%} reduction)")
+
+    return [
+        ("tiers.batched", t_batched * 1e6,
+         f"cells={n_cells},speedup={speedup:.1f}x"),
+        ("tiers.serial", t_serial * 1e6, f"cells={n_cells}"),
+        ("tiers.serial_cells", float(batched.serial_cells),
+         f"cells={n_cells}"),
+        ("tiers.parity", float(len(mismatches)),
+         f"checked={len(batched.cells)},keys={len(PARITY_KEYS)}"),
+        ("tiers.egress_reduction", reduction * 100.0,
+         f"flat_gb={flat_egress / 1e9:.1f},"
+         f"tiered_gb={tiered_egress / 1e9:.1f}"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(verbose=True):
+        print(f"{name},{us:.1f},{derived}")

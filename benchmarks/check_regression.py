@@ -51,6 +51,14 @@ EXTRACTORS: Dict[str, Tuple[str, Callable[[dict], float]]] = {
         "sweep.json", lambda a: a["eviction"]["batched"]["serial_cells"]),
     "eviction_sweep_parity_mismatches": (
         "sweep.json", lambda a: len(a["eviction"]["parity"]["mismatches"])),
+    "tier_sweep_speedup": ("tiers.json", lambda a: a["speedup"]),
+    "tier_sweep_cells": ("tiers.json", lambda a: a["cells"]),
+    "tier_sweep_serial_cells": (
+        "tiers.json", lambda a: a["batched"]["serial_cells"]),
+    "tier_parity_mismatches": (
+        "tiers.json", lambda a: len(a["parity"]["mismatches"])),
+    "tier_egress_reduction": (
+        "tiers.json", lambda a: a["egress"]["reduction"]),
     "storm_coalescing_ratio": (
         "outage_storm.json", lambda a: a["storm"]["coalescing_ratio"]),
     "storm_reallocations": (

@@ -22,8 +22,9 @@ from .client import LocalCache, StashClient
 from .controlplane import (AdmissionQueue, AnalyticQueue, CircuitBreaker,
                            ControlPlane, ControlPlaneSpec, ControlStats,
                            fair_shares)
-from .federation import (Federation, FederationSpec, SiteSpec,
-                         build_fleet_federation, build_osg_federation,
+from .federation import (Federation, FederationSpec, SiteSpec, TierSpec,
+                         build_fleet_federation, build_osdf_federation,
+                         build_osg_federation, site_tiers,
                          OSG_SITE_PROFILES)
 from .indexer import Catalog, Indexer
 from .monitoring import (CacheHealthMonitor, CacheUsagePacket, DecayGauge,
@@ -38,8 +39,12 @@ from .policies import (AdmissionPolicy, EVICTION_POLICIES, EvictionPolicy,
 from .proxy import HTTPProxy
 from .redirector import Redirector, RedirectorGroup, RedirectorPair
 from .ring import CacheGroup, GroupStats, HashRing
+from .routing import (RANKING_POLICIES, ProbeRankingPolicy, RankingPolicy,
+                      StaticRankingPolicy, make_ranking_policy,
+                      ranked_caches)
 from .simclient import (OutageEvent, OutageSchedule, ScenarioEngine,
-                        SimStashClient, apply_outage, first_of)
+                        SimStashClient, apply_outage, first_of,
+                        tier_tallies)
 from .simulator import (DownloadResult, FluidFlowSim, direct_download,
                         fetch_chunks, proxy_download, sparse_flow_problem,
                         stash_download)
@@ -48,7 +53,8 @@ from .transfer import NetworkModel, TransferStats
 from .workload import (FILESIZE_PERCENTILES, PAPER_TABLE3, PROBE_10GB,
                        USAGE_BY_EXPERIMENT, AccessRequest, PercentileSampler,
                        abusive_workload, evaluation_fileset,
-                       generate_workload, herd_workload, storm_workload)
+                       flash_crowd_workload, generate_workload,
+                       herd_workload, storm_workload)
 from .writeback import WritebackCache
 
 __all__ = [n for n in dir() if not n.startswith("_")]

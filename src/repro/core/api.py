@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import re
 import time
 from typing import (Dict, Generator, List, Optional, Protocol, Sequence,
                     Set, Tuple, Union, runtime_checkable)
@@ -49,13 +50,14 @@ import numpy as np
 from .client import StashClient
 from .controlplane import ControlPlane, ControlPlaneSpec
 from .federation import Federation, FederationSpec, SiteSpec
+from .routing import RankingPolicy
 from .simclient import (OutageSchedule, ScenarioEngine, ScenarioReport,
-                        apply_outage)
+                        apply_outage, tier_tallies)
 from .simulator import direct_download, proxy_download, sparse_flow_problem
 from .topology import Coord
 from .transfer import TransferStats
-from .workload import (AccessRequest, abusive_workload, generate_workload,
-                       herd_workload, storm_workload)
+from .workload import (AccessRequest, abusive_workload, flash_crowd_workload,
+                       generate_workload, herd_workload, storm_workload)
 
 GB = 10**9
 
@@ -237,9 +239,13 @@ class AnalyticPlane(_PlaneBase):
     name = "analytic"
 
     def __init__(self, fed: Federation, streams: int = 8,
+                 ranking: Union[str, RankingPolicy, None] = None,
                  control: Optional[ControlPlaneSpec] = None) -> None:
         super().__init__(fed)
         self.streams = streams
+        # string specs mint a fresh policy per client (per-client probe
+        # state); a policy instance is shared deliberately.
+        self.ranking = ranking
         self.clients: Dict[Tuple[str, int], StashClient] = {}
         group_of = {c.name: g for g in fed.groups.values()
                     for c in g.members}
@@ -250,7 +256,7 @@ class AnalyticPlane(_PlaneBase):
         key = (site, worker)
         c = self.clients.get(key)
         if c is None:
-            c = self.fed.client(site, worker)
+            c = self.fed.client(site, worker, ranking=self.ranking)
             c.control = self.control
             self.clients[key] = c
         return c
@@ -404,12 +410,13 @@ class SimulatedPlane(_PlaneBase):
                  streams: int = 8, hedge_after: Optional[float] = None,
                  max_attempts: int = 4, rank_limit: Optional[int] = 8,
                  router: str = "ring",
+                 ranking: Union[str, RankingPolicy, None] = None,
                  control: Optional[ControlPlaneSpec] = None) -> None:
         super().__init__(fed)
         self.engine = ScenarioEngine(
             fed, solver=solver, streams=streams, hedge_after=hedge_after,
             max_attempts=max_attempts, rank_limit=rank_limit, router=router,
-            control=control)
+            ranking=ranking, control=control)
         self.streams = streams
 
     @property
@@ -510,7 +517,7 @@ class WorkloadSpec:
     sizes, Table 1 experiment mix).  ``sites=None`` targets every
     worker-bearing site of the federation."""
 
-    kind: str = "zipf"               # "zipf" | "storm" | "herd" | "abusive"
+    kind: str = "zipf"   # "zipf" | "storm" | "herd" | "abusive" | "flash_crowd"
     sites: Optional[Sequence[str]] = None
     # zipf trace knobs
     n_requests: int = 100
@@ -537,8 +544,15 @@ class WorkloadSpec:
     abuse_factor: float = 4.0
     abuse_at: float = 0.0
     abuse_duration: float = 60.0
+    # flash-crowd knobs (zipf background + one region hammering a small
+    # hot set; ``size`` doubles as the hot-object size, ``n_objects`` as
+    # the hot-set cardinality)
+    hot_sites: Optional[Sequence[str]] = None
+    crowd_factor: float = 3.0
+    crowd_at: float = 0.0
+    crowd_duration: float = 120.0
 
-    KINDS = ("zipf", "storm", "herd", "abusive")
+    KINDS = ("zipf", "storm", "herd", "abusive", "flash_crowd")
 
     def __post_init__(self) -> None:
         if self.kind not in self.KINDS:
@@ -572,6 +586,19 @@ class WorkloadSpec:
                                      abuse_at=self.abuse_at,
                                      abuse_duration=self.abuse_duration,
                                      abuse_size=self.size)
+        elif self.kind == "flash_crowd":
+            hot = (list(self.hot_sites) if self.hot_sites
+                   else sites[:1])
+            trace = flash_crowd_workload(sites, hot, self.n_requests,
+                                         duration=self.duration,
+                                         seed=self.seed,
+                                         working_set=self.working_set,
+                                         zipf_a=self.zipf_a,
+                                         crowd_factor=self.crowd_factor,
+                                         crowd_at=self.crowd_at,
+                                         crowd_duration=self.crowd_duration,
+                                         hot_objects=max(self.n_objects, 1),
+                                         hot_size=self.size)
         else:
             trace = generate_workload(sites, self.n_requests,
                                       duration=self.duration,
@@ -608,6 +635,10 @@ class ScenarioSpec:
     max_attempts: int = 4
     rank_limit: Optional[int] = 8
     router: str = "ring"
+    # cache-selection policy: "static" (GeoIP order, the vectorizable
+    # default) or "probe" (latency-EWMA re-ranking); a RankingPolicy
+    # instance is shared across the scenario's clients.
+    ranking: Union[str, RankingPolicy, None] = "static"
     control: Optional[ControlPlaneSpec] = None
 
     def __post_init__(self) -> None:
@@ -633,12 +664,13 @@ class ScenarioSpec:
     def plane(self, fed: Federation) -> DataPlane:
         if self.engine == "analytic":
             return AnalyticPlane(fed, streams=self.streams,
+                                 ranking=self.ranking,
                                  control=self.control)
         return SimulatedPlane(
             fed, solver=self.solver, streams=self.streams,
             hedge_after=self.hedge_after, max_attempts=self.max_attempts,
             rank_limit=self.rank_limit, router=self.router,
-            control=self.control)
+            ranking=self.ranking, control=self.control)
 
 
 def run_scenario(spec: ScenarioSpec,
@@ -669,19 +701,30 @@ def run_scenario(spec: ScenarioSpec,
                               sequential=spec.sequential)
     rep = _report(spec, fed, plane, results)
     for field, before in base.items():
-        setattr(rep, field, getattr(rep, field) - before)
+        cur = getattr(rep, field)
+        if isinstance(before, dict):
+            setattr(rep, field, {k: cur.get(k, 0) - before.get(k, 0)
+                                 for k in sorted(set(cur) | set(before))})
+        else:
+            setattr(rep, field, cur - before)
     return rep
 
 
-def _fed_totals(fed: Federation) -> Dict[str, int]:
+def _fed_totals(fed: Federation) -> Dict[str, object]:
     """The federation-lifetime counters a ScenarioReport aggregates."""
     gstats = [g.stats for g in fed.groups.values()]
     cstats = [c.stats for c in fed.caches.values()]
+    t_hits, t_misses, t_fills, parent_fill = tier_tallies(
+        fed.caches.values())
     return {
         "cache_hits": sum(c.hits for c in cstats),
         "cache_misses": sum(c.misses for c in cstats),
         "origin_egress_bytes": sum(o.stats.egress_bytes
                                    for o in fed.origins),
+        "parent_fill_bytes": parent_fill,
+        "tier_hits": t_hits,
+        "tier_misses": t_misses,
+        "tier_fill_bytes": t_fills,
         "evictions": sum(c.evictions for c in cstats),
         "bytes_evicted": sum(c.bytes_evicted for c in cstats),
         "admission_rejects": sum(c.admission_rejects for c in cstats),
@@ -698,6 +741,8 @@ def _report(spec: ScenarioSpec, fed: Federation, plane: DataPlane,
     cstats = [c.stats for c in plane.clients.values()]
     gstats = [g.stats for g in fed.groups.values()]
     cp = plane.control.stats if plane.control is not None else None
+    t_hits, t_misses, t_fills, parent_fill = tier_tallies(
+        fed.caches.values())
     return ScenarioReport(
         name=spec.name,
         engine=plane.name,
@@ -706,6 +751,8 @@ def _report(spec: ScenarioSpec, fed: Federation, plane: DataPlane,
         cache_hits=sum(c.stats.hits for c in fed.caches.values()),
         cache_misses=sum(c.stats.misses for c in fed.caches.values()),
         origin_egress_bytes=sum(o.stats.egress_bytes for o in fed.origins),
+        parent_fill_bytes=parent_fill,
+        tier_hits=t_hits, tier_misses=t_misses, tier_fill_bytes=t_fills,
         evictions=sum(c.stats.evictions for c in fed.caches.values()),
         bytes_evicted=sum(c.stats.bytes_evicted
                           for c in fed.caches.values()),
@@ -816,6 +863,23 @@ def _apply_axis(spec: ScenarioSpec, axis: str, value) -> ScenarioSpec:
         if field in fed_fields and field != "sites":
             return dataclasses.replace(
                 spec, federation=dataclasses.replace(fed, **{field: value}))
+        m = re.fullmatch(r"tier(\d+)\.(\w+)", field)
+        if m:
+            # "federation.tier<k>.<field>" — a site knob applied only to
+            # the cache-bearing sites at hierarchy depth k (1 = edge),
+            # which is what an L1 × L2 split-sizing sweep crosses.
+            depth, sub = int(m.group(1)), m.group(2)
+            if sub not in site_fields or sub in ("name", "parent"):
+                raise ValueError(f"unknown federation axis {axis!r}")
+            tiers = fed.site_tiers()
+            if depth not in set(tiers.values()):
+                raise ValueError(
+                    f"axis {axis!r}: federation has no tier-{depth} sites")
+            sites = [dataclasses.replace(s, **{sub: value})
+                     if tiers.get(s.name) == depth else s
+                     for s in fed.sites]
+            return dataclasses.replace(
+                spec, federation=dataclasses.replace(fed, sites=sites))
         if field not in site_fields or field == "name":
             # "name" would rename every site identically — reject it
             # like any other unsweepable axis rather than no-op.
@@ -932,6 +996,15 @@ def _sweep_batchable(spec: ScenarioSpec) -> bool:
         return False
     if spec.method not in ("stash", "direct"):
         return False
+    if spec.ranking not in (None, "static"):
+        # probe ranking re-orders chains from observed latency — the
+        # cross-request state the shared routing table can't carry
+        return False
+    if spec.outages is not None and any(
+            getattr(ev, "kind", "cache") != "cache" for ev in spec.outages):
+        # link degradation changes bandwidth mid-run; the batched
+        # executor precomputes its timing constants once per column
+        return False
     if not isinstance(spec.workload, WorkloadSpec):
         for r in spec.workload:
             if isinstance(r, FetchRequest) and r.method not in ("stash",
@@ -940,6 +1013,10 @@ def _sweep_batchable(spec: ScenarioSpec) -> bool:
     for s in spec.federation.sites:
         if s.has_cache and s.eviction_policy not in ("lru", "fifo"):
             return False
+    if spec.federation.tier_depth() > 2:
+        # the two-round executor derives exactly one parent stream per
+        # fill target; deeper hierarchies replay serially
+        return False
     return True
 
 
@@ -1031,7 +1108,9 @@ class _CacheStream:
 
     __slots__ = ("req", "size", "prev", "reset", "seg", "eff_obj",
                  "miss_sec", "keys", "n_keys", "key_sizes",
-                 "total_key_bytes", "eff_const", "variants")
+                 "total_key_bytes", "eff_const", "variants",
+                 "parent_ci", "fill_sec", "l2_sec", "l2_eff", "l2_seg",
+                 "gpos", "pj", "is_fill")
 
     def __init__(self) -> None:
         self.req: List[int] = []       # request index per reference
@@ -1046,6 +1125,18 @@ class _CacheStream:
         #                                cache has located the meta)
         self.miss_sec: List[float] = []  # redirector RPC + origin pull
         self.key_sizes: List[int] = []
+        # tier-fill lane, per reference (all liveness-resolved, so they
+        # are cell-policy-independent like everything else here):
+        self.parent_ci: List[int] = []   # epoch-alive parent cache (-1:
+        #                                  top tier / parent tier dead)
+        self.fill_sec: List[float] = []  # parent -> this cache transfer
+        self.l2_sec: List[float] = []    # parent's own origin-miss cost
+        self.l2_eff: List[int] = []      # admission basis at the parent
+        self.l2_seg: List[int] = []      # parent cold-restart segment
+        self.gpos: List[int] = []        # global arrival position (the
+        #                                  merge order for parent streams)
+        self.pj: List[int] = []          # federation-global chunk id
+        self.is_fill = None              # merged parent streams only
         # stack-distance variants, keyed by admitted-key signature: the
         # stream with one admission filter class applied (refused keys
         # dropped — they never enter the stack), with byte distances
@@ -1063,6 +1154,13 @@ class _CacheStream:
         self.eff_obj = np.asarray(self.eff_obj, np.int64)
         self.miss_sec = np.asarray(self.miss_sec, np.float64)
         self.key_sizes = np.asarray(self.key_sizes, np.int64)
+        self.parent_ci = np.asarray(self.parent_ci, np.int64)
+        self.fill_sec = np.asarray(self.fill_sec, np.float64)
+        self.l2_sec = np.asarray(self.l2_sec, np.float64)
+        self.l2_eff = np.asarray(self.l2_eff, np.int64)
+        self.l2_seg = np.asarray(self.l2_seg, np.int64)
+        self.gpos = np.asarray(self.gpos, np.int64)
+        self.pj = np.asarray(self.pj, np.int64)
         self.n_keys = len(self.key_sizes)
         # conservative residency bound: a capacity at or above the whole
         # distinct-key working set can never evict — those cells answer
@@ -1190,10 +1288,28 @@ def _cell_routing(spec: ScenarioSpec, fed: Federation, state: Dict,
     processed = 0
 
     chosen = np.full(n, -1, np.int64)        # serving cache (-1: none)
+    parent_of = np.full(n, -1, np.int64)     # epoch-alive fill parent
     dead_before = np.zeros(n, np.int64)
     primary_dead = np.zeros(n, bool)
     fallback = np.zeros(n, bool)
     ok = np.ones(n, bool)
+
+    caches = list(fed.caches.values())
+    pchains: Dict[Tuple[int, int], List[int]] = {}
+
+    def _parent_chain(serve_ci: int, pi: int) -> Sequence[int]:
+        """The serving cache's parent-tier fill chain for one path —
+        consistent-hash order, liveness-independent (aliveness is the
+        per-epoch filter, exactly as ``CacheServer.parent_caches``)."""
+        pg = caches[serve_ci].parent_group
+        if pg is None:
+            return ()
+        key = (id(pg), pi)
+        chain = pchains.get(key)
+        if chain is None:
+            chain = pchains[key] = [cache_ids[c.name]
+                                    for c in pg.fill_chain(paths[pi])]
+        return chain
 
     def apply_event(ev) -> None:
         ci = cache_ids[ev.cache]
@@ -1240,6 +1356,13 @@ def _cell_routing(spec: ScenarioSpec, fed: Federation, state: Dict,
                 dead += 1
             chosen[fsel] = serve
             dead_before[fsel] = dead
+            if serve >= 0:
+                par = -1
+                for qi in _parent_chain(serve, pi):
+                    if alive[qi] and qi != serve:
+                        par = qi
+                        break
+                parent_of[fsel] = par
         fallback[stash] = chosen[stash] < 0
         # not-found stash requests fail visibly, as on the serial plane
         nf = idx[~method_is_direct[idx] & ~found[pid[idx]]]
@@ -1289,7 +1412,8 @@ def _cell_routing(spec: ScenarioSpec, fed: Federation, state: Dict,
     rpc_red: Dict[int, float] = {}
     bw_pull: Dict[Tuple[int, int], float] = {}
     rtt_pull: Dict[Tuple[int, int], float] = {}
-    caches = list(fed.caches.values())
+    bw_fill: Dict[Tuple[int, int], float] = {}
+    rtt_fill: Dict[Tuple[int, int], float] = {}
     red_node = fed.redirectors.members[0].node.name
     nreq = nchunks[pid]
     serve_base = np.zeros(n, np.float64)   # hit-path seconds per request
@@ -1297,6 +1421,8 @@ def _cell_routing(spec: ScenarioSpec, fed: Federation, state: Dict,
     key_ids: Dict[int, Dict[Tuple[int, int], int]] = {}
     last_ref: Dict[int, Dict[int, Tuple[int, int]]] = {}
     last_seg: Dict[int, int] = {}
+    Cmax = int(nchunks.max()) if P else 1
+    gpos = 0
 
     def _chunk_len(p: int, j: int) -> int:
         cs = owners[p].chunk_size
@@ -1320,6 +1446,28 @@ def _cell_routing(spec: ScenarioSpec, fed: Federation, state: Dict,
             rtt_pull[pk] = topo.rtt(onode, cnode)
             if ci not in rpc_red:
                 rpc_red[ci] = net.rpc_time(cnode, red_node)
+        q = int(parent_of[i])
+        if q >= 0:
+            # miss fills cache-to-cache: parent -> this cache transfer,
+            # plus the parent's own redirector RPC + origin pull if the
+            # parent misses too (resolved by the round-2 kernels)
+            pnode = caches[q].node.name
+            fk = (q, ci)
+            if fk not in bw_fill:
+                bw_fill[fk] = net.effective_bandwidth(pnode, cnode,
+                                                      streams=8)
+                rtt_fill[fk] = topo.rtt(pnode, cnode)
+            qk = (q, p)
+            if qk not in bw_pull:
+                onode = owners[p].node.name
+                bw_pull[qk] = net.effective_bandwidth(onode, pnode,
+                                                      streams=8)
+                rtt_pull[qk] = topo.rtt(onode, pnode)
+            if q not in rpc_red:
+                rpc_red[q] = net.rpc_time(pnode, red_node)
+            l2_base = rpc_red[q] + rtt_pull[qk]
+            qcuts = resets.get(q, ())
+            qseg = sum(1 for c in qcuts if c <= op[i])
         stream = streams_by_cache.get(ci)
         if stream is None:
             stream = streams_by_cache[ci] = _CacheStream()
@@ -1331,6 +1479,11 @@ def _cell_routing(spec: ScenarioSpec, fed: Federation, state: Dict,
         fresh_seg = seg != last_seg[ci] and len(stream.req) > 0
         last_seg[ci] = seg
         known = meta_rank.get((ci, p), n + 1) <= op[i]
+        # the *parent's* admission basis: the child forwards its located
+        # object size upstream; failing that the parent falls back to
+        # its own meta knowledge, then the chunk payload
+        l2_known = known or (q >= 0
+                             and meta_rank.get((q, p), n + 1) <= op[i])
         secs = lookup + nreq[i] * rtt_serve[k]
         miss_base = rpc_red[ci] + rtt_pull[pk]
         for j in range(int(nchunks[p])):
@@ -1353,6 +1506,20 @@ def _cell_routing(spec: ScenarioSpec, fed: Federation, state: Dict,
             stream.seg.append(seg)
             stream.eff_obj.append(int(size[p]) if known else csize)
             stream.miss_sec.append(miss_base + csize / bw_pull[pk])
+            stream.parent_ci.append(q)
+            stream.gpos.append(gpos)
+            stream.pj.append(p * Cmax + j)
+            if q >= 0:
+                stream.fill_sec.append(rtt_fill[fk] + csize / bw_fill[fk])
+                stream.l2_sec.append(l2_base + csize / bw_pull[qk])
+                stream.l2_eff.append(int(size[p]) if l2_known else csize)
+                stream.l2_seg.append(qseg)
+            else:
+                stream.fill_sec.append(0.0)
+                stream.l2_sec.append(0.0)
+                stream.l2_eff.append(csize)
+                stream.l2_seg.append(0)
+            gpos += 1
         serve_base[i] = secs
 
     direct_like = ok & (fallback | method_is_direct)
@@ -1404,7 +1571,21 @@ def _cell_routing(spec: ScenarioSpec, fed: Federation, state: Dict,
         else:
             ci = int(chosen[i])
             cnode = caches[ci].node.name
-            if (ci, p) not in pull_flow:
+            q = int(parent_of[i])
+            if q >= 0:
+                # tiered miss path: child pulls from its parent, the
+                # parent (on its own miss) pulls from the origin
+                pnode = caches[q].node.name
+                if (ci, p) not in pull_flow:
+                    pull_flow[(ci, p)] = (
+                        topo.path(pnode, cnode),
+                        4 * net.per_stream_cap(topo.rtt(pnode, cnode)))
+                if (q, p) not in pull_flow:
+                    onode = owners[p].node.name
+                    pull_flow[(q, p)] = (
+                        topo.path(onode, pnode),
+                        4 * net.per_stream_cap(topo.rtt(onode, pnode)))
+            elif (ci, p) not in pull_flow:
                 onode = owners[p].node.name
                 pull_flow[(ci, p)] = (
                     topo.path(onode, cnode),
@@ -1416,6 +1597,17 @@ def _cell_routing(spec: ScenarioSpec, fed: Federation, state: Dict,
             if rc:
                 cap_f = min(cap_f, rc)
         serve_flow[i] = (links, cap_f)
+
+    fill_targets: Set[int] = set()
+    for s in streams_by_cache.values():
+        fill_targets.update(int(x) for x in np.unique(s.parent_ci)
+                            if x >= 0)
+    for q in fill_targets:
+        sq = streams_by_cache.get(q)
+        if sq is not None and (sq.parent_ci >= 0).any():
+            # a fill target that itself fills upstream needs a third
+            # kernel round; replay such cells serially
+            return None
 
     routing = _CellRouting()
     routing.n = n
@@ -1436,6 +1628,11 @@ def _cell_routing(spec: ScenarioSpec, fed: Federation, state: Dict,
     routing.serve_base = serve_base
     routing.direct_sec = direct_sec
     routing.streams = streams_by_cache
+    routing.fill_targets = fill_targets
+    routing.cache_tier = [c.tier for c in caches]
+    routing.all_tiers = sorted({c.tier for c in caches})
+    routing.Cmax = Cmax
+    routing.l2_cache = {}
     routing.counters = {
         "cache_failovers": cache_failovers,
         "group_failovers": int(calls[primary_dead].sum()),
@@ -1519,6 +1716,74 @@ def _resolve_distances(wanted: Sequence[Tuple[_CacheStream, bytes,
         }
 
 
+def _merged_parent_stream(routing: _CellRouting, q: int,
+                          hits_by_child: Dict[int, np.ndarray]
+                          ) -> Optional[_CacheStream]:
+    """The round-2 reference stream of one fill-target (parent-tier)
+    cache: its directly-routed references merged, in global arrival
+    order, with the cache-to-cache fills induced by every child miss
+    under the cell's L1 policy points.  Shared by every cell whose
+    children resolve identically (the L1 knob signature), so an
+    L1 × L2 split-sizing sweep builds each parent stream once per L1
+    point and answers every L2 capacity from it."""
+    r = routing
+    parts: List[Tuple[np.ndarray, ...]] = []
+    sq = r.streams.get(q)
+    if sq is not None and len(sq.req):
+        m = len(sq.req)
+        parts.append((sq.gpos, sq.req, sq.pj, sq.size, sq.seg,
+                      sq.eff_obj, sq.miss_sec, np.zeros(m, bool)))
+    for ci, s in r.streams.items():
+        if ci == q or not len(s.req):
+            continue
+        mask = s.parent_ci == q
+        if not mask.any():
+            continue
+        sel = mask & ~hits_by_child[ci]
+        if not sel.any():
+            continue
+        parts.append((s.gpos[sel], s.req[sel], s.pj[sel], s.size[sel],
+                      s.l2_seg[sel], s.l2_eff[sel], s.l2_sec[sel],
+                      np.ones(int(sel.sum()), bool)))
+    if not parts:
+        return None
+    gp = np.concatenate([p[0] for p in parts])
+    o = np.argsort(gp, kind="stable")
+    m = _CacheStream()
+    m.gpos = gp[o]
+    m.req = np.concatenate([p[1] for p in parts])[o]
+    m.pj = np.concatenate([p[2] for p in parts])[o]
+    m.size = np.concatenate([p[3] for p in parts])[o]
+    m.seg = np.concatenate([p[4] for p in parts])[o]
+    m.eff_obj = np.concatenate([p[5] for p in parts])[o]
+    m.miss_sec = np.concatenate([p[6] for p in parts])[o]
+    m.is_fill = np.concatenate([p[7] for p in parts])[o]
+    uniq, inv = np.unique(m.pj, return_inverse=True)
+    m.keys = inv.astype(np.int32)
+    key_sizes = np.zeros(len(uniq), np.int64)
+    key_sizes[inv] = m.size
+    m.key_sizes = key_sizes
+    nref = len(m.req)
+    m.reset = np.zeros(nref, bool)
+    if nref > 1:
+        m.reset[1:] = m.seg[1:] != m.seg[:-1]
+    # previous same-key reference within the same cold-restart segment
+    idx = np.arange(nref)
+    by_key = np.lexsort((idx, m.seg, m.keys))
+    sk, ss = m.keys[by_key], m.seg[by_key]
+    m.prev = np.full(nref, -1, np.int64)
+    if nref > 1:
+        same = (sk[1:] == sk[:-1]) & (ss[1:] == ss[:-1])
+        m.prev[by_key[1:]] = np.where(same, by_key[:-1], -1)
+    m.parent_ci = np.full(nref, -1, np.int64)
+    m.fill_sec = np.zeros(nref, np.float64)
+    m.l2_sec = np.zeros(nref, np.float64)
+    m.l2_eff = np.zeros(nref, np.int64)
+    m.l2_seg = np.zeros(nref, np.int64)
+    m.arrays()
+    return m
+
+
 class _CellPlan:
     """One batched cell, waiting on its hit/miss resolution.
 
@@ -1555,85 +1820,200 @@ class _CellPlan:
         self.fifo_problems: List[Tuple] = []  # pending fifo_sim problems
         self.dist_wanted: List[Tuple[_CacheStream, bytes, np.ndarray]] = []
         self._order: List[Tuple[int, str, object]] = []  # (cache, mode, arg)
+        # round-2 state: parent-tier caches resolve against merged
+        # direct+fill streams that depend on the children's hits, so
+        # their problems are classified in prepare_l2, after round 1
+        self.l2_offset = 0
+        self.l2_fifo_offset = 0
+        self.l2_problems: List[Tuple] = []
+        self.l2_fifo_problems: List[Tuple] = []
+        self.l2_dist_wanted: List[Tuple[_CacheStream, bytes,
+                                        np.ndarray]] = []
+        self._l2_order: List[Tuple[int, _CacheStream, str, object]] = []
+        self._l1_res: Dict[int, Tuple] = {}
         self.knobs = knobs = _cache_knobs(cspec.federation)
         for ci in sorted(routing.streams):
             stream = routing.streams[ci]
-            if not len(stream.req):
+            if not len(stream.req) or ci in routing.fill_targets:
                 continue
             cap, policy, frac = knobs[routing.cache_names[ci]]
-            refused = stream.size > cap
-            if frac < 1.0:
-                refused = refused | (stream.eff_obj > frac * cap)
-            if not refused.any() and cap >= stream.total_key_bytes:
-                self._order.append((ci, "fits", None))
-            elif policy == "fifo":
-                self._order.append((ci, "fifo", len(self.fifo_problems)))
-                self.fifo_problems.append(
-                    (stream.keys, stream.size.astype(np.float64),
-                     ~refused, stream.reset, stream.n_keys, float(cap)))
-            elif stream.eff_const:
-                # the filter refuses a key always or never → exact as a
-                # filtered stack; cells sharing the filter class share
-                # the variant
-                admitted = np.ones(stream.n_keys, bool)
-                admitted[stream.keys[refused]] = False
-                sig = admitted.tobytes()
-                self._order.append((ci, "dist", sig))
-                self.dist_wanted.append((stream, sig, admitted))
-            else:
-                self._order.append((ci, "sim", len(self.problems)))
-                self.problems.append(
-                    (stream.keys, ~refused, stream.reset,
-                     stream.key_sizes.astype(np.float64),
-                     float(cap), False))
+            mode, arg = self._classify(stream, cap, policy, frac,
+                                       self.problems, self.fifo_problems,
+                                       self.dist_wanted)
+            self._order.append((ci, mode, arg))
 
-    def finalize(self, sim_results: List,
-                 fifo_results: List) -> Tuple[ScenarioReport, Tuple]:
+    @staticmethod
+    def _classify(stream: _CacheStream, cap: float, policy: str,
+                  frac: float, problems: List, fifo_problems: List,
+                  dist_wanted: List) -> Tuple[str, object]:
+        refused = stream.size > cap
+        if frac < 1.0:
+            refused = refused | (stream.eff_obj > frac * cap)
+        if not refused.any() and cap >= stream.total_key_bytes:
+            return "fits", None
+        if policy == "fifo":
+            fifo_problems.append(
+                (stream.keys, stream.size.astype(np.float64),
+                 ~refused, stream.reset, stream.n_keys, float(cap)))
+            return "fifo", len(fifo_problems) - 1
+        if stream.eff_const:
+            # the filter refuses a key always or never → exact as a
+            # filtered stack; cells sharing the filter class share
+            # the variant
+            admitted = np.ones(stream.n_keys, bool)
+            admitted[stream.keys[refused]] = False
+            sig = admitted.tobytes()
+            dist_wanted.append((stream, sig, admitted))
+            return "dist", sig
+        problems.append(
+            (stream.keys, ~refused, stream.reset,
+             stream.key_sizes.astype(np.float64), float(cap), False))
+        return "sim", len(problems) - 1
+
+    def _resolve(self, stream: _CacheStream, cap: float, frac: float,
+                 mode: str, arg: object, sim_results: Sequence,
+                 fifo_results: Sequence, sim_base: int,
+                 fifo_base: int) -> Tuple:
+        """(hits, evictions, bytes_evicted, admission_rejects) for one
+        stream at one policy point, from the batched kernel answers."""
+        policy_refused = (stream.eff_obj > frac * cap if frac < 1.0
+                          else None)
+        if mode == "fits":
+            hits = stream.prev >= 0
+            ev = evb = rejects = 0
+        elif mode == "dist":
+            v = stream.variants[arg]
+            fhits = v["dist"] + v["sizes"] <= cap
+            hits = np.zeros(len(stream.req), bool)
+            hits[v["sel"][fhits]] = True
+            resident = v["end_dist"] + v["end_size"] <= cap
+            ev = int((~fhits).sum() - resident.sum())
+            evb = int(v["sizes"][~fhits].sum()
+                      - v["end_size"][resident].sum())
+            # a constantly-refused key is never resident: every one of
+            # its references re-asks admission
+            rejects = (int(policy_refused.sum())
+                       if policy_refused is not None else 0)
+        else:
+            results = fifo_results if mode == "fifo" else sim_results
+            base = fifo_base if mode == "fifo" else sim_base
+            hits, ev, evb = results[base + arg]
+            rejects = (int((~hits & policy_refused).sum())
+                       if policy_refused is not None else 0)
+        return hits, ev, evb, rejects
+
+    def _resolve_l1(self, sim_results: Sequence,
+                    fifo_results: Sequence) -> None:
+        if self._l1_res:
+            return
+        r = self.routing
+        for ci, mode, arg in self._order:
+            cap, _policy, frac = self.knobs[r.cache_names[ci]]
+            self._l1_res[ci] = self._resolve(
+                r.streams[ci], cap, frac, mode, arg, sim_results,
+                fifo_results, self.offset, self.fifo_offset)
+
+    def prepare_l2(self, sim_results: Sequence,
+                   fifo_results: Sequence) -> None:
+        """Resolve the children, derive (or reuse) each fill target's
+        merged stream, and classify its round-2 problem."""
+        r = self.routing
+        if not r.fill_targets:
+            return
+        self._resolve_l1(sim_results, fifo_results)
+        hits_by_child = {ci: res[0] for ci, res in self._l1_res.items()}
+        for q in sorted(r.fill_targets):
+            children = tuple(
+                (ci, self.knobs[r.cache_names[ci]])
+                for ci in sorted(r.streams)
+                if ci != q and len(r.streams[ci].req)
+                and (r.streams[ci].parent_ci == q).any())
+            lkey = (q, children)
+            if lkey not in r.l2_cache:
+                r.l2_cache[lkey] = _merged_parent_stream(r, q,
+                                                         hits_by_child)
+            stream = r.l2_cache[lkey]
+            if stream is None:
+                continue
+            capq, policyq, fracq = self.knobs[r.cache_names[q]]
+            mode, arg = self._classify(stream, capq, policyq, fracq,
+                                       self.l2_problems,
+                                       self.l2_fifo_problems,
+                                       self.l2_dist_wanted)
+            self._l2_order.append((q, stream, mode, arg))
+
+    def finalize(self, sim_results: List, fifo_results: List,
+                 l2_sim_results: Sequence = (),
+                 l2_fifo_results: Sequence = ()
+                 ) -> Tuple[ScenarioReport, Tuple]:
         r = self.routing
         knobs = self.knobs
         n = r.n
+        self._resolve_l1(sim_results, fifo_results)
         hit_chunks = np.zeros(n, np.int64)
         miss_chunks = np.zeros(n, np.int64)
         miss_secs = np.zeros(n, np.float64)
         egress = r.direct_egress
         evictions = bytes_evicted = admission_rejects = 0
+        total_hits = total_misses = parent_fill = 0
+        tier_hits = {t: 0 for t in r.all_tiers}
+        tier_misses = {t: 0 for t in r.all_tiers}
+        tier_fill = {t: 0 for t in r.all_tiers}
         req_pulled = np.zeros(n, bool)       # request had >= 1 miss
+        l2_pulled: Set[Tuple[int, int]] = set()
         for ci, mode, arg in self._order:
             stream = r.streams[ci]
-            cap, policy, frac = knobs[r.cache_names[ci]]
-            policy_refused = (stream.eff_obj > frac * cap if frac < 1.0
-                              else None)
-            if mode == "fits":
-                hits = stream.prev >= 0
-            elif mode == "dist":
-                v = stream.variants[arg]
-                fhits = v["dist"] + v["sizes"] <= cap
-                hits = np.zeros(len(stream.req), bool)
-                hits[v["sel"][fhits]] = True
-                resident = v["end_dist"] + v["end_size"] <= cap
-                evictions += int((~fhits).sum() - resident.sum())
-                bytes_evicted += int(v["sizes"][~fhits].sum()
-                                     - v["end_size"][resident].sum())
-                if policy_refused is not None:
-                    # a constantly-refused key is never resident: every
-                    # one of its references re-asks admission
-                    admission_rejects += int(policy_refused.sum())
-            else:
-                results = fifo_results if mode == "fifo" else sim_results
-                base = (self.fifo_offset if mode == "fifo"
-                        else self.offset)
-                hits, ev, evb = results[base + arg]
-                evictions += ev
-                bytes_evicted += evb
-                if policy_refused is not None:
-                    admission_rejects += int(
-                        (~hits & policy_refused).sum())
+            hits, ev, evb, rejects = self._l1_res[ci]
+            evictions += ev
+            bytes_evicted += evb
+            admission_rejects += rejects
             miss = ~hits
             np.add.at(hit_chunks, stream.req[hits], 1)
             np.add.at(miss_chunks, stream.req[miss], 1)
+            # a miss with a live parent fills cache-to-cache (no
+            # redirector RPC at the child); otherwise it pulls straight
+            # from the origin, which is the only path that counts egress
+            tiered = stream.parent_ci >= 0
+            cost = np.where(tiered, stream.fill_sec, stream.miss_sec)
+            np.add.at(miss_secs, stream.req[miss], cost[miss])
+            egress += int(stream.size[miss & ~tiered].sum())
+            parent_fill += int(stream.size[miss & tiered].sum())
+            t = r.cache_tier[ci]
+            nh, nm = int(hits.sum()), int(miss.sum())
+            tier_hits[t] += nh
+            tier_misses[t] += nm
+            tier_fill[t] += int(stream.size[miss].sum())
+            total_hits += nh
+            total_misses += nm
+            req_pulled[stream.req[miss]] = True
+        for q, stream, mode, arg in self._l2_order:
+            capq, _policyq, fracq = knobs[r.cache_names[q]]
+            hits, ev, evb, rejects = self._resolve(
+                stream, capq, fracq, mode, arg, l2_sim_results,
+                l2_fifo_results, self.l2_offset, self.l2_fifo_offset)
+            evictions += ev
+            bytes_evicted += evb
+            admission_rejects += rejects
+            miss = ~hits
+            # only directly-routed references touch request-level
+            # counters; fill references surface as the parent's own
+            # hit/miss tallies plus upstream seconds on the child's
+            # request when the parent misses through to the origin
+            direct = ~stream.is_fill
+            np.add.at(hit_chunks, stream.req[hits & direct], 1)
+            np.add.at(miss_chunks, stream.req[miss & direct], 1)
             np.add.at(miss_secs, stream.req[miss], stream.miss_sec[miss])
             egress += int(stream.size[miss].sum())
-            req_pulled[stream.req[miss]] = True
+            t = r.cache_tier[q]
+            nh, nm = int(hits.sum()), int(miss.sum())
+            tier_hits[t] += nh
+            tier_misses[t] += nm
+            tier_fill[t] += int(stream.size[miss].sum())
+            total_hits += nh
+            total_misses += nm
+            req_pulled[stream.req[miss & direct]] = True
+            for p in np.unique(stream.pj[miss] // r.Cmax):
+                l2_pulled.add((q, int(p)))
 
         seconds = r.serve_base + miss_secs + r.direct_sec
 
@@ -1676,13 +2056,26 @@ class _CellPlan:
             links, cap_f = r.serve_flow[i]
             flow_specs.append((links, cap_f))
             flow_bytes.append(float(r.size[p]))
+        for q, p in sorted(l2_pulled):
+            # the parent's own origin pulls (fill misses); direct misses
+            # at the parent were already priced through ``pulled``
+            if (q, p) in pulled:
+                continue
+            entry = r.pull_flow.get((q, p))
+            if entry is not None:
+                links, cap_f = entry
+                flow_specs.append((links, cap_f))
+                flow_bytes.append(float(r.size[p]))
 
         report = ScenarioReport(
             name=self.spec.name, engine="analytic", results=results,
             bytes_moved=r.bytes_moved,
-            cache_hits=int(hit_chunks.sum()),
-            cache_misses=int(miss_chunks.sum()),
+            cache_hits=total_hits,
+            cache_misses=total_misses,
             origin_egress_bytes=egress,
+            parent_fill_bytes=parent_fill,
+            tier_hits=tier_hits, tier_misses=tier_misses,
+            tier_fill_bytes=tier_fill,
             evictions=evictions, bytes_evicted=bytes_evicted,
             admission_rejects=admission_rejects,
             **r.counters)
@@ -1776,14 +2169,57 @@ def run_sweep(spec: SweepSpec, batched: bool = True,
         telemetry["cache_sim_calls"] = sim_stats["solve_calls"]
         telemetry["cache_sim_problems"] = sim_stats["problems"]
 
+    # round 2: parent-tier caches see their direct references merged
+    # with the fills the children's misses induced, so their problems
+    # only exist once round 1 is resolved — same batched kernels, one
+    # more pass, still zero serial cells
+    l2_sim_problems: List[Tuple] = []
+    l2_fifo_problems: List[Tuple] = []
+    l2_dist_wanted: List[Tuple[_CacheStream, bytes, np.ndarray]] = []
+    for params, cspec, plan, report in entries:
+        if plan is not None and plan.routing.fill_targets:
+            plan.prepare_l2(sim_results, fifo_results)
+            plan.l2_offset = len(l2_sim_problems)
+            plan.l2_fifo_offset = len(l2_fifo_problems)
+            l2_sim_problems.extend(plan.l2_problems)
+            l2_fifo_problems.extend(plan.l2_fifo_problems)
+            l2_dist_wanted.extend(plan.l2_dist_wanted)
+    if l2_dist_wanted:
+        _resolve_distances(l2_dist_wanted, telemetry)
+    l2_sim_results: List = []
+    l2_fifo_results: List = []
+    if l2_fifo_problems:
+        from repro.kernels.stack_distance import fifo_sim_batch
+        l2_fifo_stats: Dict = {}
+        l2_fifo_results = fifo_sim_batch(l2_fifo_problems,
+                                         stats=l2_fifo_stats)
+        telemetry["fifo_calls"] = (telemetry.get("fifo_calls", 0)
+                                   + l2_fifo_stats["solve_calls"])
+        telemetry["fifo_problems"] = (telemetry.get("fifo_problems", 0)
+                                      + l2_fifo_stats["problems"])
+    if l2_sim_problems:
+        from repro.kernels.stack_distance import cache_sim_batch
+        l2_sim_stats: Dict = {}
+        l2_sim_results = cache_sim_batch(l2_sim_problems,
+                                         stats=l2_sim_stats)
+        telemetry["cache_sim_calls"] = (
+            telemetry.get("cache_sim_calls", 0)
+            + l2_sim_stats["solve_calls"])
+        telemetry["cache_sim_problems"] = (
+            telemetry.get("cache_sim_problems", 0)
+            + l2_sim_stats["problems"])
+    if l2_sim_problems or l2_fifo_problems or l2_dist_wanted:
+        telemetry["tier_rounds"] = 2
+
     cells: List[SweepCell] = []
     problems = []
     problem_bytes = []
     problem_cells: List[SweepCell] = []
     for params, cspec, plan, report in entries:
         if plan is not None:
-            report, (flow_specs, flow_bytes) = plan.finalize(sim_results,
-                                                            fifo_results)
+            report, (flow_specs, flow_bytes) = plan.finalize(
+                sim_results, fifo_results, l2_sim_results,
+                l2_fifo_results)
             executor = "batched"
         else:
             flow_specs = flow_bytes = None

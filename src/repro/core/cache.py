@@ -43,6 +43,7 @@ class CacheStats:
     evictions: int = 0
     bytes_served: int = 0
     bytes_from_origin: int = 0
+    bytes_from_parent: int = 0   # cache-to-cache fill (tiered federations)
     bytes_evicted: int = 0
     ttl_expired: int = 0
     admission_rejects: int = 0
@@ -78,6 +79,11 @@ class CacheServer:
         self.net = net
         self.monitor = monitor
         self.available = True  # failure injection point
+        # Cache hierarchy (multi-tier CDN): a cache with a parent group
+        # fills misses from the parent tier's ring before the origin.
+        # Wired by Federation._build from SiteSpec.parent; tier 1 = edge.
+        self.parent_group = None  # Optional[repro.core.ring.CacheGroup]
+        self.tier = 1
         self.policy = make_eviction_policy(policy, ttl_seconds)
         self.admission = admission or AdmissionPolicy()
         # (path, chunk_index) -> Payload.  Pure storage: victim ordering
@@ -230,38 +236,91 @@ class CacheServer:
         self._metas[path] = meta
         return meta
 
+    def parent_caches(self, path: str):
+        """Live parent-tier fill targets for ``path``, in ring order."""
+        if self.parent_group is None:
+            return []
+        return [c for c in self.parent_group.fill_chain(path)
+                if c.available and c is not self]
+
+    def _obtain(self, path: str, index: int, streams: int,
+                object_size: Optional[int] = None
+                ) -> Tuple[Optional[Payload], float, bool]:
+        """Ensure one chunk is in hand, counting a hit or miss here.
+
+        On a miss the chunk fills from the parent tier's ring owner when
+        one is alive (cache-to-cache fill; the parent recursively resolves
+        *its* miss, so only the top tier pays the redirector RPC + origin
+        pull), falling back to the flat redirector → origin path when
+        there is no live parent.  Returns ``(payload, upstream_seconds,
+        hit)`` — upstream_seconds excludes the cache → client hop.
+        """
+        payload = self.lookup(path, index)
+        if payload is not None:
+            return payload, 0.0, True
+        parents = self.parent_caches(path)
+        if parents:
+            parent = parents[0]
+            parent.tick(self.clock)
+            # The fill request carries the child's object-size knowledge
+            # (size-aware admission at the parent sees what the child saw).
+            meta = self._metas.get(path)
+            up_size = object_size if object_size is not None else (
+                meta.size if meta is not None else None)
+            self.pin(path, index)
+            try:
+                payload, secs, _ = parent._obtain(path, index, streams,
+                                                  object_size=up_size)
+                if payload is None:
+                    return None, secs, False
+                secs += self.net.transfer_time(
+                    parent.node.name, self.node.name, payload.size,
+                    streams=max(streams, 4))
+                parent.stats.bytes_served += payload.size
+                self.stats.bytes_from_parent += payload.size
+                self.admit(path, index, payload, object_size=object_size)
+            finally:
+                self.unpin(path, index)
+            return payload, secs, False
+        origin = self.redirectors.locate(path) if self.redirectors else None
+        if origin is None:
+            return None, 0.0, False
+        # redirector round-trip, then chunk pull over the WAN/DCN.
+        redirector_node = self.redirectors.members[0].node.name
+        secs = self.net.rpc_time(self.node.name, redirector_node)
+        self.pin(path, index)
+        try:
+            payload = origin.read_chunk(path, index)
+            secs += self.net.transfer_time(
+                origin.node.name, self.node.name, payload.size,
+                streams=max(streams, 4))
+            self.stats.bytes_from_origin += payload.size
+            self.admit(path, index, payload, object_size=object_size)
+        finally:
+            self.unpin(path, index)
+        return payload, secs, False
+
     def get_chunk(self, client_node: str, path: str, index: int,
                   streams: int = 1) -> Tuple[Optional[Payload], TransferStats]:
-        """Serve one chunk to a client; on miss, locate + pull from origin.
+        """Serve one chunk to a client; on miss, locate + pull from the
+        parent tier (if any) or the origin.
 
-        Time accounting covers: (miss only) redirector RPC + origin→cache
-        transfer, then cache→client transfer.
+        Time accounting covers: (miss only) the upstream fill — parent →
+        cache transfer, plus the parent tier's own redirector RPC +
+        origin pull when the parent missed too — then the cache → client
+        transfer.
         """
         if not self.available:
             raise ConnectionError(f"cache {self.name} unavailable")
         stats = TransferStats(source=self.name)
-        payload = self.lookup(path, index)
+        payload, upstream, hit = self._obtain(path, index, streams)
         if payload is None:
-            origin = self.redirectors.locate(path) if self.redirectors else None
-            if origin is None:
-                return None, stats
-            # redirector round-trip, then chunk pull over the WAN/DCN.
-            redirector_node = self.redirectors.members[0].node.name
-            stats.seconds += self.net.rpc_time(self.node.name, redirector_node)
-            self.pin(path, index)
-            try:
-                payload = origin.read_chunk(path, index)
-                stats.seconds += self.net.transfer_time(
-                    origin.node.name, self.node.name, payload.size,
-                    streams=max(streams, 4))
-                stats.bytes_from_origin = 0  # tracked on CacheStats below
-                self.stats.bytes_from_origin += payload.size
-                self.admit(path, index, payload)
-            finally:
-                self.unpin(path, index)
-            stats.cache_misses += 1
-        else:
+            return None, stats
+        if hit:
             stats.cache_hits += 1
+        else:
+            stats.seconds += upstream
+            stats.cache_misses += 1
         # cache → client hop (disk-bound for large objects).
         meta = self._metas.get(path)
         obj_size = meta.size if meta is not None else payload.size
@@ -316,6 +375,8 @@ class CacheServer:
             ttl_expired=self.stats.ttl_expired,
             admission_rejects=self.stats.admission_rejects,
             oversize_rejects=self.stats.oversize_rejects,
+            tier=self.tier,
+            bytes_from_parent=self.stats.bytes_from_parent,
             time=self.clock if now is None else now)
         if self.monitor:
             self.monitor.cache_usage(pkt)

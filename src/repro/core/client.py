@@ -23,12 +23,13 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .cache import CacheServer
 from .chunk import ObjectMeta, Payload
 from .indexer import Catalog
 from .ring import CacheGroup
+from .routing import RankingPolicy, make_ranking_policy, ranked_caches
 from .topology import GeoIPService, Node
 from .transfer import NetworkModel, TransferStats
 
@@ -96,7 +97,8 @@ class StashClient:
                  xrootd_available: bool = True,
                  local_cache_bytes: int = 1 * 2**30,
                  groups: Optional[Sequence[CacheGroup]] = None,
-                 now: float = 0.0) -> None:
+                 now: float = 0.0,
+                 ranking: Union[str, RankingPolicy, None] = None) -> None:
         self.node = node
         self.caches = {c.name: c for c in caches}
         self.groups = list(groups) if groups else []
@@ -111,6 +113,9 @@ class StashClient:
         self.local = LocalCache(local_cache_bytes)
         self.stats = ClientStats()
         self.now = now
+        # Pluggable cache ranking (static GeoIP by default; "probe"
+        # re-ranks on observed latency/failures — see core/routing.py).
+        self.ranking = make_ranking_policy(ranking)
         # Optional ControlPlane (set by the owning plane): per-cache
         # circuit breakers + retry backoff replace blind failover.
         self.control = None
@@ -131,34 +136,14 @@ class StashClient:
         ``limit`` truncates the failover tail: a fleet-scale ranking over
         1000+ single-member groups otherwise walks every group's ring per
         request even though only the first few entries are ever tried.
+
+        The ordering itself is the client's :class:`RankingPolicy`
+        (static GeoIP by default) via the shared
+        :func:`repro.core.routing.ranked_caches` pipeline.
         """
-        if self.groups and path is not None:
-            locus = {g.name: g.locus().name for g in self.groups
-                     if g.locus() is not None}
-            order = self.geoip.nearest(self.node.name, list(locus.values()))
-            by_locus = {locus[g.name]: g for g in self.groups
-                        if g.name in locus}
-            ranked: List[CacheServer] = []
-            for locus_name in order:
-                if limit is not None and len(ranked) >= limit:
-                    return ranked[:limit]
-                # only the group that heads the ranking is actually being
-                # routed to; the rest are its fleet-wide failover tail.
-                members = by_locus[locus_name].route(
-                    path, exclude=exclude, count_stats=not ranked)
-                ranked.extend(members)
-            # stray caches not in any group still participate, geo-ranked.
-            grouped = {c.name for g in self.groups for c in g.members}
-            stray = [n for n in self.caches
-                     if n not in grouped and n not in exclude]
-            if stray:
-                for n in self.geoip.nearest(self.node.name, stray):
-                    ranked.append(self.caches[n])
-            return ranked[:limit] if limit is not None else ranked
-        order = self.geoip.nearest(self.node.name, list(self.caches),
-                                   exclude=exclude)
-        ranked = [self.caches[n] for n in order]
-        return ranked[:limit] if limit is not None else ranked
+        return ranked_caches(self.node.name, self.caches, self.groups,
+                             self.geoip, policy=self.ranking, path=path,
+                             exclude=exclude, limit=limit)
 
     def _meta(self, path: str, cache: Optional[CacheServer] = None
               ) -> Optional[ObjectMeta]:
@@ -192,6 +177,7 @@ class StashClient:
             if not cache.available:
                 tried.append(cache.name)
                 self.stats.cache_failovers += 1
+                self.ranking.on_failure(cache.name)
                 if ctrl is not None:
                     ctrl.on_failure(cache.name, self.now)
                 continue
@@ -205,6 +191,7 @@ class StashClient:
             except ConnectionError:
                 tried.append(cache.name)
                 self.stats.cache_failovers += 1
+                self.ranking.on_failure(cache.name)
                 if ctrl is not None:
                     ctrl.on_failure(cache.name, self.now)
                     delay = ctrl.backoff(n_backoff)
@@ -215,6 +202,7 @@ class StashClient:
                 continue
             agg.add(st)
             agg.source = cache.name
+            self.ranking.observe(cache.name, st.seconds)
             if ctrl is not None:
                 ctrl.on_success(cache.name, self.now, seconds=st.seconds)
             if payload is None:

@@ -25,6 +25,7 @@ from .policies import SizeAwareAdmission
 from .proxy import HTTPProxy
 from .redirector import Redirector, RedirectorGroup, RedirectorPair
 from .ring import CacheGroup
+from .routing import RankingPolicy, StaticRankingPolicy, ranked_caches
 from .topology import BandwidthProfile, Coord, GeoIPService, Topology
 from .transfer import NetworkModel
 from .writeback import WritebackCache
@@ -44,6 +45,13 @@ class SiteSpec:
     select the per-cache policies (:mod:`repro.core.policies`);
     ``admission_max_fraction`` < 1 refuses objects larger than that
     fraction of cache capacity.
+
+    ``parent`` names another cache-bearing site whose group is this
+    site's *parent tier*: the site's cache misses fill from the parent
+    group's ring before the origin (multi-tier CDN, arXiv:2007.01408).
+    ``region`` places the site on the continental backbone topology
+    (``core/topology.py``): same-region cross-site traffic rides the
+    regional network, cross-region traffic a backbone segment.
     """
 
     name: str
@@ -56,6 +64,8 @@ class SiteSpec:
     eviction_policy: str = "lru"
     ttl_seconds: float = 3600.0
     admission_max_fraction: float = 1.0
+    parent: Optional[str] = None
+    region: str = ""
 
     def cache_names(self) -> List[str]:
         """Cache-server names this site contributes to a built
@@ -66,6 +76,59 @@ class SiteSpec:
             return []
         return [f"{self.name}/cache" if i == 0 else f"{self.name}/cache{i}"
                 for i in range(max(1, self.cache_replicas))]
+
+
+@dataclasses.dataclass
+class TierSpec:
+    """One level of a cache hierarchy: the sites at that level and the
+    parent site they all fill from.
+
+    A preset-building convenience — ``flatten()`` stamps ``parent`` onto
+    copies of the sites, and a built federation only ever sees
+    ``SiteSpec.parent`` — so hierarchies can be declared level-by-level:
+
+        TierSpec(sites=[edge_a, edge_b], parent="us-east-backbone")
+    """
+
+    sites: List[SiteSpec] = dataclasses.field(default_factory=list)
+    parent: Optional[str] = None
+
+    def flatten(self) -> List[SiteSpec]:
+        return [dataclasses.replace(s, parent=self.parent)
+                for s in self.sites]
+
+
+def site_tiers(sites: Sequence[SiteSpec]) -> Dict[str, int]:
+    """Tier of each cache-bearing site: 1 = edge (client-facing), and a
+    parent site sits one tier above its deepest child.  Validates the
+    parent graph — parents must exist, hold a cache, and form no cycle.
+    """
+    by_name = {s.name: s for s in sites}
+    tiers: Dict[str, int] = {}
+    for s in sites:
+        if not s.has_cache:
+            if s.parent is not None:
+                raise ValueError(
+                    f"site {s.name!r} names a parent but has no cache")
+            continue
+        chain = [s.name]
+        cur = s
+        while cur.parent is not None:
+            p = by_name.get(cur.parent)
+            if p is None:
+                raise ValueError(f"site {cur.name!r} names unknown parent "
+                                 f"{cur.parent!r}")
+            if not p.has_cache:
+                raise ValueError(f"parent site {p.name!r} of {cur.name!r} "
+                                 f"has no cache")
+            if p.name in chain:
+                raise ValueError("parent cycle: "
+                                 + " -> ".join(chain + [p.name]))
+            chain.append(p.name)
+            cur = p
+        for depth, name in enumerate(chain, start=1):
+            tiers[name] = max(tiers.get(name, 1), depth)
+    return tiers
 
 
 @dataclasses.dataclass
@@ -86,7 +149,9 @@ class Federation:
     # -- factories ----------------------------------------------------------
     def client(self, site: str, worker: int = 0,
                catalog: Optional[Catalog] = None,
-               cvmfs: bool = True, xrootd: bool = True) -> StashClient:
+               cvmfs: bool = True, xrootd: bool = True,
+               ranking: Union[str, RankingPolicy, None] = None
+               ) -> StashClient:
         name = f"{site}/worker{worker}"
         if name not in self.topology.nodes:
             prof = self.topology.profile(site)
@@ -96,7 +161,8 @@ class Federation:
                            list(self.caches.values()), self.geoip, self.net,
                            catalog=catalog, cvmfs_available=cvmfs,
                            xrootd_available=xrootd,
-                           groups=list(self.groups.values()))
+                           groups=list(self.groups.values()),
+                           ranking=ranking)
 
     def indexer(self, origin: Optional[Origin] = None) -> Indexer:
         return Indexer(origin or self.origins[0])
@@ -107,9 +173,20 @@ class Federation:
                               self.redirectors,
                               drain_rate_bytes_per_sec=drain_rate)
 
-    def nearest_cache(self, client_node: str) -> CacheServer:
-        order = self.geoip.nearest(client_node, list(self.caches))
-        return self.caches[order[0]]
+    def nearest_cache(self, client_node: str, path: str = "/") -> CacheServer:
+        """The cache a client at ``client_node`` would actually be served
+        by for ``path`` — the same ranked ordering clients use (group ring
+        order within the nearest group), skipping dead members.  Falls
+        back to the overall ranking head when everything is down.  A pure
+        query: does not touch group route/failover counters."""
+        ranked = ranked_caches(client_node, self.caches,
+                               list(self.groups.values()), self.geoip,
+                               StaticRankingPolicy(), path=path,
+                               count_stats=False)
+        for cache in ranked:
+            if cache.available:
+                return cache
+        return ranked[0]
 
     # -- namespace-first origin routing -------------------------------------
     def resolve_origin(self, path: str) -> Optional[Origin]:
@@ -166,7 +243,7 @@ def _build(sites: Sequence[SiteSpec], origin_site: str,
            geoip_lookup_latency: float = 0.200) -> Federation:
     topo = Topology()
     for s in sites:
-        topo.add_site(s.name, s.profile)
+        topo.add_site(s.name, s.profile, region=s.region)
     net = NetworkModel(topo)
     geoip = GeoIPService(topo, lookup_latency=geoip_lookup_latency)
     bus = MessageBus()
@@ -220,6 +297,18 @@ def _build(sites: Sequence[SiteSpec], origin_site: str,
                 max_cacheable_bytes=proxy_max_cacheable,
                 ttl_seconds=proxy_ttl, mem_object_max=prof.proxy_mem_max,
                 disk_bw=prof.proxy_disk_bw)
+    # Wire cache tiers: a site's caches fill misses from its parent
+    # site's group before the origin.  site_tiers() validated the parent
+    # graph (existence, cache-bearing, acyclic), so the wiring is a
+    # straight second pass once every group exists.
+    tiers = site_tiers(sites)
+    for s in sites:
+        if not s.has_cache:
+            continue
+        for cache in groups[s.name].members:
+            cache.tier = tiers[s.name]
+            if s.parent is not None:
+                cache.parent_group = groups[s.parent]
     return Federation(topo, net, geoip, [origin], redirectors, caches,
                       groups, proxies, monitor, bus, aggregator, list(sites))
 
@@ -250,6 +339,18 @@ class FederationSpec:
         """Every cache-server name ``build()`` will create, in build
         order (site order, then replica index)."""
         return [n for s in self.sites for n in s.cache_names()]
+
+    def site_tiers(self) -> Dict[str, int]:
+        """Tier of each cache-bearing site (1 = edge), from the sites'
+        ``parent`` links — same computation ``build()`` uses to stamp
+        ``CacheServer.tier``, usable before a federation exists (sweep
+        axes address tiers declaratively)."""
+        return site_tiers(self.sites)
+
+    def tier_depth(self) -> int:
+        """Deepest tier in the hierarchy (1 for a flat federation)."""
+        tiers = self.site_tiers()
+        return max(tiers.values()) if tiers else 1
 
     def build(self) -> Federation:
         if not self.sites:
@@ -301,6 +402,44 @@ class FederationSpec:
         return cls(sites=sites, origin_site="storage",
                    monitor_drop_rate=monitor_drop_rate,
                    geoip_lookup_latency=0.002)
+
+    @classmethod
+    def osdf(cls, regions: Sequence[str] = ("us-east", "us-west"),
+             edges_per_region: int = 2, workers_per_edge: int = 4,
+             l1_capacity: float = 2 * TB, l2_capacity: float = 16 * TB,
+             eviction_policy: str = "lru", cache_replicas: int = 1,
+             backbone_replicas: int = 1,
+             origin_region: Optional[str] = None,
+             monitor_drop_rate: float = 0.0) -> "FederationSpec":
+        """OSDF-style tiered CDN (arXiv:2007.01408): per region,
+        ``edges_per_region`` L1 edge sites fill from one regional L2
+        backbone site; backbone misses pull from the origin over the
+        continental backbone.  Edge sites hold workers; backbone sites
+        are pure caches (workers=0) with the larger capacity.  The
+        origin facility sits in ``origin_region`` (first region by
+        default), so same-region backbones reach it over the regional
+        network and remote ones over a backbone segment."""
+        sites: List[SiteSpec] = []
+        for r in regions:
+            backbone = SiteSpec(name=f"{r}-backbone", workers=0,
+                                has_proxy=False, region=r,
+                                cache_capacity=l2_capacity,
+                                cache_replicas=backbone_replicas,
+                                eviction_policy=eviction_policy)
+            tier = TierSpec(parent=backbone.name, sites=[
+                SiteSpec(name=f"{r}-edge{i}", workers=workers_per_edge,
+                         has_proxy=False, region=r,
+                         cache_capacity=l1_capacity,
+                         cache_replicas=cache_replicas,
+                         eviction_policy=eviction_policy)
+                for i in range(edges_per_region)])
+            sites.extend(tier.flatten())
+            sites.append(backbone)
+        sites.append(SiteSpec(name="origin-facility", workers=0,
+                              has_cache=False, has_proxy=False,
+                              region=origin_region or regions[0]))
+        return cls(sites=sites, origin_site="origin-facility",
+                   monitor_drop_rate=monitor_drop_rate)
 
 
 # Paper Fig. 2 deployment: the five test sites of §4.1 with bandwidth
@@ -363,3 +502,16 @@ def build_fleet_federation(num_pods: int = 2, hosts_per_pod: int = 64,
         eviction_policy=eviction_policy, cache_replicas=cache_replicas,
         ttl_seconds=ttl_seconds,
         admission_max_fraction=admission_max_fraction).build()
+
+
+def build_osdf_federation(regions: Sequence[str] = ("us-east", "us-west"),
+                          edges_per_region: int = 2,
+                          workers_per_edge: int = 4,
+                          l1_capacity: float = 2 * TB,
+                          l2_capacity: float = 16 * TB,
+                          eviction_policy: str = "lru") -> Federation:
+    """Tiered OSDF-style CDN: regional L1 edges over L2 backbones."""
+    return FederationSpec.osdf(
+        regions=regions, edges_per_region=edges_per_region,
+        workers_per_edge=workers_per_edge, l1_capacity=l1_capacity,
+        l2_capacity=l2_capacity, eviction_policy=eviction_policy).build()

@@ -71,6 +71,8 @@ class CacheUsagePacket:
     admission_rejects: int
     time: float
     oversize_rejects: int = 0
+    tier: int = 1                # hierarchy level (1 = edge)
+    bytes_from_parent: int = 0   # cache-to-cache fill received
 
     @property
     def hit_rate(self) -> float:
@@ -180,6 +182,29 @@ class MonitorCollector:
             n, h, m, ev, ttl, rej, usage = agg[policy]
             out.append((policy, int(n), h / (h + m) if h + m else 0.0,
                         int(ev), int(ttl), int(rej), int(usage)))
+        return out
+
+    def tier_table(self) -> List[tuple]:
+        """Aggregate the latest gauges by hierarchy tier.
+
+        Rows: ``(tier, caches, hit_rate, bytes_from_parent,
+        usage_bytes)`` sorted by tier — the monitoring-side view of how
+        each level of a cache hierarchy is absorbing load (edge tiers
+        should show the hits, upper tiers the cache-to-cache fill).
+        """
+        agg: Dict[int, List[float]] = {}
+        for pkt in self.cache_gauges.values():
+            row = agg.setdefault(pkt.tier, [0, 0, 0, 0, 0])
+            row[0] += 1
+            row[1] += pkt.hits
+            row[2] += pkt.misses
+            row[3] += pkt.bytes_from_parent
+            row[4] += pkt.usage_bytes
+        out = []
+        for tier in sorted(agg):
+            n, h, m, fill, usage = agg[tier]
+            out.append((tier, int(n), h / (h + m) if h + m else 0.0,
+                        int(fill), int(usage)))
         return out
 
     def file_close(self, ev: FileClose, cache_hit: Optional[bool] = None) -> None:

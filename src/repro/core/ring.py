@@ -177,6 +177,19 @@ class CacheGroup:
             return [c for c in chain if c.available]
         return chain
 
+    def fill_chain(self, path: str) -> List["CacheServer"]:
+        """Ring-ordered fill targets for a *child-tier* cache miss.
+
+        Cache-to-cache fill uses the same consistent-hash ownership as
+        client routing — so every child below this group funnels a given
+        path to the same parent member (one parent copy per object, N×
+        effective parent capacity) — but does not count route/failover
+        stats: a fill is upstream traffic, not a client route.  Liveness
+        filtering is the caller's job (it needs to see dead members to
+        fall through to the origin deliberately).
+        """
+        return self.route(path, count_stats=False)
+
     def mark_down(self, name: str, auto: bool = False) -> None:
         """Outage injection: the member stays on the ring (its keyspace
         share fails over along the chain) but stops serving.  ``auto``

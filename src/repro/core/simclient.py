@@ -188,6 +188,7 @@ class SimStashClient:
                 self.stats.cache_failovers += 1
                 if ctrl is not None:
                     ctrl.on_failure(cache.name, sim.t)
+                self.client.ranking.on_failure(cache.name)
                 continue
             if ctrl is not None and not ctrl.allow(cache.name, sim.t):
                 continue  # breaker open: skip without burning an attempt
@@ -288,12 +289,14 @@ class SimStashClient:
             if status is None or not cache.available:
                 if ctrl is not None:
                     ctrl.on_failure(cache.name, sim.t)
+                self.client.ranking.on_failure(cache.name)
                 return ("fail", None, queued)
             yield from self._serve_flow(cache, meta)
             if ctrl is not None:
                 ctrl.on_success(cache.name, sim.t,
                                 seconds=sim.t - t_service,
                                 tenant=tenant, nbytes=meta.size)
+            self.client.ranking.observe(cache.name, sim.t - t_service)
             return ("ok", status, queued)
         finally:
             if ctrl is not None:
@@ -391,16 +394,26 @@ class SimStashClient:
 class OutageEvent:
     """One liveness transition: ``cache`` goes down or comes back up at
     ``time``.  ``cold`` recoveries lose all resident data (the restart
-    wiped the disk); warm ones keep it (a network partition healing)."""
+    wiped the disk); warm ones keep it (a network partition healing).
+
+    ``kind="link"`` repurposes the event as a *network* transition: the
+    ``cache`` field names a topology link (``backbone/eu-us-east``,
+    ``region/us-west``, a site uplink, ...), "down" degrades its
+    bandwidth to ``factor`` × nominal and "up" restores it.  Cache and
+    link events interleave freely on one schedule."""
 
     time: float
     cache: str
     action: str  # "down" | "up"
     cold: bool = False
+    kind: str = "cache"  # "cache" | "link"
+    factor: float = 1.0  # link degradation multiplier (kind="link")
 
     def __post_init__(self) -> None:
         if self.action not in ("down", "up"):
             raise ValueError(f"unknown outage action {self.action!r}")
+        if self.kind not in ("cache", "link"):
+            raise ValueError(f"unknown outage kind {self.kind!r}")
 
 
 class OutageSchedule:
@@ -468,6 +481,21 @@ class OutageSchedule:
             t += downtime + gap
         return OutageSchedule(ev)
 
+    @staticmethod
+    def link_degradation(links: Sequence[str], at: float, duration: float,
+                         factor: float = 0.1) -> "OutageSchedule":
+        """The listed topology links (backbone segments, regional nets,
+        site uplinks — by :meth:`Topology.find_link` name) drop to
+        ``factor`` × nominal bandwidth at ``at`` and recover ``duration``
+        later.  The caches stay up: this is the backbone-degradation
+        scenario, where tiered fill and origin traffic slow down but
+        nothing fails over."""
+        ev = [OutageEvent(at, n, "down", kind="link", factor=factor)
+              for n in links]
+        ev += [OutageEvent(at + duration, n, "up", kind="link")
+               for n in links]
+        return OutageSchedule(ev)
+
 
 def apply_outage(fed: Federation, ev: OutageEvent,
                  group_of: Optional[Dict[str, "object"]] = None) -> None:
@@ -480,6 +508,15 @@ def apply_outage(fed: Federation, ev: OutageEvent,
     request-time replay, so both planes agree on what an
     :class:`OutageSchedule` means.
     """
+    if ev.kind == "link":
+        link = fed.topology.find_link(ev.cache)
+        if link is None:
+            raise KeyError(f"no topology link named {ev.cache!r}")
+        if ev.action == "down":
+            link.degrade(ev.factor)
+        else:
+            link.restore()
+        return
     if group_of is None:
         group_of = {c.name: g for g in fed.groups.values()
                     for c in g.members}
@@ -523,6 +560,11 @@ class ScenarioReport:
     cache_hits: int = 0
     cache_misses: int = 0
     origin_egress_bytes: int = 0
+    # cache hierarchy (collapses to tier 1 / zero on flat federations)
+    parent_fill_bytes: int = 0   # bytes moved cache-to-cache (tier fills)
+    tier_hits: Dict[int, int] = dataclasses.field(default_factory=dict)
+    tier_misses: Dict[int, int] = dataclasses.field(default_factory=dict)
+    tier_fill_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
     evictions: int = 0
     bytes_evicted: int = 0
     admission_rejects: int = 0
@@ -592,6 +634,12 @@ class ScenarioReport:
             "outages": self.outages,
             "recoveries": self.recoveries,
             "origin_egress_bytes": self.origin_egress_bytes,
+            "parent_fill_bytes": self.parent_fill_bytes,
+            "tier_hits": {str(k): v for k, v in sorted(self.tier_hits.items())},
+            "tier_misses": {str(k): v
+                            for k, v in sorted(self.tier_misses.items())},
+            "tier_fill_bytes": {str(k): v for k, v
+                                in sorted(self.tier_fill_bytes.items())},
             "reallocations": self.reallocations,
             "flow_events": self.flow_events,
             "coalescing_ratio": self.coalescing_ratio,
@@ -608,6 +656,28 @@ class ScenarioReport:
         }
 
 
+def tier_tallies(caches: Iterable[CacheServer]
+                 ) -> Tuple[Dict[int, int], Dict[int, int],
+                            Dict[int, int], int]:
+    """Per-tier (hits, misses, fill_bytes) plus total cache-to-cache
+    fill bytes, from the caches' own counters.  ``fill_bytes`` is what a
+    tier pulled from *upstream* (parent tier or origin) — the quantity
+    split-sizing sweeps minimize at the top tier.  Shared by both
+    engines' report builders so tier accounting is parity-checkable."""
+    hits: Dict[int, int] = {}
+    misses: Dict[int, int] = {}
+    fills: Dict[int, int] = {}
+    parent_fill = 0
+    for c in caches:
+        t = c.tier
+        hits[t] = hits.get(t, 0) + c.stats.hits
+        misses[t] = misses.get(t, 0) + c.stats.misses
+        fills[t] = (fills.get(t, 0) + c.stats.bytes_from_parent
+                    + c.stats.bytes_from_origin)
+        parent_fill += c.stats.bytes_from_parent
+    return hits, misses, fills, parent_fill
+
+
 class ScenarioEngine:
     """Replay an access trace through simulator-native clients, with an
     optional outage schedule running concurrently."""
@@ -615,7 +685,7 @@ class ScenarioEngine:
     def __init__(self, fed: Federation, solver: str = "auto",
                  streams: int = 8, hedge_after: Optional[float] = None,
                  max_attempts: int = 4, rank_limit: Optional[int] = 8,
-                 router: str = "ring",
+                 router: str = "ring", ranking: object = None,
                  control: Optional[ControlPlaneSpec] = None) -> None:
         self.fed = fed
         self.sim = FluidFlowSim(fed.topology, fed.net, solver=solver)
@@ -624,6 +694,9 @@ class ScenarioEngine:
         self.max_attempts = max_attempts
         self.rank_limit = rank_limit
         self.router = router
+        # "static" | "probe" | a RankingPolicy instance; string specs
+        # mint a fresh policy per client (per-client probe state).
+        self.ranking = ranking
         self.redirector_node = fed.redirectors.members[0].node.name
         self._clients: Dict[Tuple[str, int], SimStashClient] = {}
         self._hosts = {s.name: max(1, s.workers) for s in fed.sites}
@@ -641,7 +714,8 @@ class ScenarioEngine:
         sc = self._clients.get(key)
         if sc is None:
             sc = SimStashClient(
-                self.sim, self.fed.client(site, worker),
+                self.sim, self.fed.client(site, worker,
+                                          ranking=self.ranking),
                 self.fed.origins[0], self.redirector_node,
                 streams=self.streams, hedge_after=self.hedge_after,
                 max_attempts=self.max_attempts, rank_limit=self.rank_limit,
@@ -653,6 +727,10 @@ class ScenarioEngine:
     # -- outages ------------------------------------------------------------
     def apply_outage(self, ev: OutageEvent) -> None:
         apply_outage(self.fed, ev, group_of=self._group_of)
+        if ev.kind == "link":
+            # Bandwidth just changed under active flows: force a max-min
+            # re-solve at the next loop step.
+            self.sim._flows_dirty = True
 
     def _outage_controller(self, schedule: OutageSchedule) -> Generator:
         for ev in schedule:
@@ -692,6 +770,8 @@ class ScenarioEngine:
             getattr(r, "bytes", 0) or (r.size if r.seconds > 0 else 0)
             for r in results)
         cp = self.control.stats if self.control is not None else None
+        t_hits, t_misses, t_fills, parent_fill = tier_tallies(
+            self.fed.caches.values())
         return ScenarioReport(
             name=name,
             engine="sim",
@@ -718,6 +798,9 @@ class ScenarioEngine:
             recoveries=sum(s.recoveries for s in gstats),
             origin_egress_bytes=sum(o.stats.egress_bytes
                                     for o in self.fed.origins),
+            parent_fill_bytes=parent_fill,
+            tier_hits=t_hits, tier_misses=t_misses,
+            tier_fill_bytes=t_fills,
             sheds=sum(1 for r in results if getattr(r, "shed", False)),
             queue_waits=cp.queue_waits if cp else 0,
             queue_wait_seconds=cp.queue_wait_seconds if cp else 0.0,

@@ -374,14 +374,24 @@ class DownloadResult:
 
 def fetch_chunks(sim: FluidFlowSim, cache: CacheServer, meta: ObjectMeta,
                  origin_node: str, redirector_node: str,
-                 origin=None, pull_streams: int = 4) -> Generator:
-    """Ensure ``meta``'s chunks are resident at ``cache``: redirector RPC
-    + origin→cache pull on miss, collapsed forwarding on in-flight
-    chunks (concurrent requests wait rather than re-pull).  Shared by
-    ``stash_download`` and the routed simclient downloads so the two
-    paths can never diverge on cache accounting.
+                 origin=None, pull_streams: int = 4,
+                 refs=None) -> Generator:
+    """Ensure ``meta``'s chunks (or the ``refs`` subset) are resident at
+    ``cache``: redirector RPC + origin→cache pull on miss, collapsed
+    forwarding on in-flight chunks (concurrent requests wait rather than
+    re-pull).  Shared by ``stash_download`` and the routed simclient
+    downloads so the two paths can never diverge on cache accounting.
 
-    Returns "hit" (fully resident), "miss" (pulled from origin),
+    In a tiered federation a miss fills *cache-to-cache* first: the
+    missing chunks are ensured at the parent tier's owning member (a
+    recursive call — so the parent's own inflight registry collapses
+    concurrent child fills, and an L2 miss recurses on up or pulls from
+    the origin), then move over one parent→child flow.  Only the top
+    tier pays the redirector RPC; a child with a live parent never asks
+    the redirector.  A dead parent tier falls back to the flat
+    origin-pull path.
+
+    Returns "hit" (fully resident), "miss" (pulled from upstream),
     "waited" (collapsed-forwarding wait: full miss latency, no duplicate
     pull), or None when the cache died while we pulled/waited.  Passing
     the :class:`~repro.core.origin.Origin` object counts its egress.
@@ -389,7 +399,7 @@ def fetch_chunks(sim: FluidFlowSim, cache: CacheServer, meta: ObjectMeta,
     cache.tick(sim.t)  # TTL policies expire against simulated time
     inflight = sim.inflight(cache.name)
     missing, wait_for = [], []
-    for r in meta.chunk_refs():
+    for r in (meta.chunk_refs() if refs is None else refs):
         key = (meta.path, r.index)
         if cache.resident(meta.path, r.index):
             cache.lookup(meta.path, r.index)          # counts the hit
@@ -400,14 +410,28 @@ def fetch_chunks(sim: FluidFlowSim, cache: CacheServer, meta: ObjectMeta,
             inflight[key] = sim.event()
             missing.append(r)
     if missing:
-        yield sim.delay(sim.net.rpc_time(cache.node.name, redirector_node))
         miss_bytes = sum(r.length for r in missing)
-        yield sim.flow(origin_node, cache.node.name, miss_bytes,
-                       streams=pull_streams)
-        cache.stats.bytes_from_origin += miss_bytes
-        if origin is not None:
-            origin.stats.egress_bytes += miss_bytes
-            origin.stats.chunk_requests += len(missing)
+        parent = next(iter(cache.parent_caches(meta.path)), None)
+        if parent is not None:
+            status = yield from fetch_chunks(
+                sim, parent, meta, origin_node, redirector_node,
+                origin=origin, pull_streams=pull_streams, refs=missing)
+            if status is None:
+                parent = None  # parent died mid-fill: origin fallback
+        if parent is not None:
+            yield sim.flow(parent.node.name, cache.node.name, miss_bytes,
+                           streams=pull_streams)
+            parent.stats.bytes_served += miss_bytes
+            cache.stats.bytes_from_parent += miss_bytes
+        else:
+            yield sim.delay(sim.net.rpc_time(cache.node.name,
+                                             redirector_node))
+            yield sim.flow(origin_node, cache.node.name, miss_bytes,
+                           streams=pull_streams)
+            cache.stats.bytes_from_origin += miss_bytes
+            if origin is not None:
+                origin.stats.egress_bytes += miss_bytes
+                origin.stats.chunk_requests += len(missing)
         cache.tick(sim.t)
         for r in missing:
             cache.admit(meta.path, r.index,

@@ -20,6 +20,23 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 GB = 1e9  # network giga (bytes)
 
+# Continental backbone segments (one-way propagation latency, seconds) for
+# multi-region federations: ~120 ms coast-to-coast RTT, ~180 ms
+# transatlantic, ~200-360 ms transpacific.  Pairs are stored with sorted
+# keys; unlisted pairs fall back to DEFAULT_BACKBONE_RTT.
+CONTINENTAL_RTT: Dict[Tuple[str, str], float] = {
+    ("us-east", "us-west"): 0.060,
+    ("eu", "us-east"): 0.090,
+    ("eu", "us-west"): 0.140,
+    ("ap", "us-west"): 0.100,
+    ("ap", "us-east"): 0.160,
+    ("ap", "eu"): 0.180,
+}
+DEFAULT_BACKBONE_RTT = 0.080     # one-way, unlisted region pairs
+DEFAULT_BACKBONE_BW = 100 * GB / 8
+DEFAULT_REGIONAL_RTT = 0.006     # one-way, sites sharing a region
+DEFAULT_REGIONAL_BW = 200 * GB / 8
+
 
 @dataclasses.dataclass(frozen=True)
 class Coord:
@@ -49,9 +66,23 @@ class Link:
     bandwidth: float          # bytes/sec
     latency: float = 1e-4    # seconds, one-way
     active_flows: int = 0    # maintained by the fluid-flow simulator
+    base_bandwidth: Optional[float] = dataclasses.field(default=None,
+                                                        repr=False)
 
     def share(self) -> float:
         return self.bandwidth / max(1, self.active_flows)
+
+    def degrade(self, factor: float) -> None:
+        """Scale bandwidth to ``factor`` of the undegraded value
+        (idempotent: repeated degrades compose against the original)."""
+        if self.base_bandwidth is None:
+            self.base_bandwidth = self.bandwidth
+        self.bandwidth = self.base_bandwidth * factor
+
+    def restore(self) -> None:
+        if self.base_bandwidth is not None:
+            self.bandwidth = self.base_bandwidth
+            self.base_bandwidth = None
 
 
 @dataclasses.dataclass
@@ -100,14 +131,74 @@ class Topology:
         self.site_uplinks: Dict[str, Link] = {}
         self.wan = Link("wan", 100 * GB / 8, latency=0.015)
         self._profiles: Dict[str, BandwidthProfile] = {}
+        # Region layer (multi-tier CDN topologies): sites may carry a
+        # region; cross-site paths then ride the regional network (same
+        # region) or a continental backbone segment (different regions)
+        # instead of the single flat WAN link.  Region-less sites keep the
+        # legacy WAN path, so flat federations are untouched.
+        self.site_region: Dict[str, str] = {}
+        self.region_nets: Dict[str, Link] = {}
+        self.backbones: Dict[Tuple[str, str], Link] = {}
 
     # -- construction -----------------------------------------------------
     def add_site(self, site: str,
-                 profile: Optional[BandwidthProfile] = None) -> None:
+                 profile: Optional[BandwidthProfile] = None,
+                 region: str = "") -> None:
         profile = profile or BandwidthProfile()
         self._profiles[site] = profile
+        self.site_region[site] = region
         self.site_uplinks[site] = Link(f"{site}/uplink", profile.site_uplink,
                                        latency=profile.lan_rtt)
+
+    def region_net(self, region: str) -> Link:
+        """The shared intra-region network (one link class per region)."""
+        link = self.region_nets.get(region)
+        if link is None:
+            link = Link(f"region/{region}", DEFAULT_REGIONAL_BW,
+                        latency=DEFAULT_REGIONAL_RTT)
+            self.region_nets[region] = link
+        return link
+
+    def backbone(self, ra: str, rb: str) -> Link:
+        """The continental backbone segment between two regions (lazily
+        created from :data:`CONTINENTAL_RTT`, symmetric in its key)."""
+        key = (ra, rb) if ra <= rb else (rb, ra)
+        link = self.backbones.get(key)
+        if link is None:
+            link = Link(f"backbone/{key[0]}-{key[1]}", DEFAULT_BACKBONE_BW,
+                        latency=CONTINENTAL_RTT.get(key,
+                                                    DEFAULT_BACKBONE_RTT))
+            self.backbones[key] = link
+        return link
+
+    def set_backbone(self, ra: str, rb: str, bandwidth: Optional[float] = None,
+                     rtt: Optional[float] = None) -> Link:
+        """Override one backbone segment's bandwidth and/or round-trip
+        time (``rtt`` is the full RTT; the link stores one-way latency)."""
+        link = self.backbone(ra, rb)
+        if bandwidth is not None:
+            link.bandwidth = bandwidth
+            link.base_bandwidth = None
+        if rtt is not None:
+            link.latency = rtt / 2.0
+        return link
+
+    def find_link(self, name: str) -> Optional[Link]:
+        """Resolve a shared link by name — uplinks, WAN, regional nets,
+        backbone segments, NICs — for fault injection (link degradation)."""
+        if name == self.wan.name:
+            return self.wan
+        for table in (self.site_uplinks, self.region_nets):
+            for link in table.values():
+                if link.name == name:
+                    return link
+        for link in self.backbones.values():
+            if link.name == name:
+                return link
+        node = self.nodes.get(name.split("/nic")[0])
+        if node is not None and node.nic.name == name:
+            return node.nic
+        return None
 
     def profile(self, site: str) -> BandwidthProfile:
         return self._profiles[site]
@@ -127,7 +218,14 @@ class Topology:
             return []  # loopback: crosses no shared network capacity
         links = [a.nic]
         if a.coord.site != b.coord.site:
-            links += [self.site_uplinks[a.coord.site], self.wan,
+            ra = self.site_region.get(a.coord.site, "")
+            rb = self.site_region.get(b.coord.site, "")
+            if ra and rb:
+                middle = (self.region_net(ra) if ra == rb
+                          else self.backbone(ra, rb))
+            else:
+                middle = self.wan
+            links += [self.site_uplinks[a.coord.site], middle,
                       self.site_uplinks[b.coord.site]]
         links.append(b.nic)
         return links
@@ -163,6 +261,9 @@ class GeoIPService:
     def nearest(self, client: str, caches: Sequence[str],
                 exclude: Sequence[str] = ()) -> List[str]:
         self.lookups += 1
+        # (distance, name): the name tie-break keeps rankings stable when
+        # several caches sit at the same coordinate distance + RTT
+        # (dict-iteration order is an accident of construction, not policy).
         ranked = sorted((c for c in caches if c not in exclude),
-                        key=lambda c: self.topology.distance(client, c))
+                        key=lambda c: (self.topology.distance(client, c), c))
         return ranked

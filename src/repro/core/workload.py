@@ -197,6 +197,43 @@ def herd_workload(sites: Sequence[str], path: str = "/hot/object",
     return out
 
 
+def flash_crowd_workload(sites: Sequence[str], hot_sites: Sequence[str],
+                         n_requests: int, duration: float = 3600.0,
+                         seed: int = 0, working_set: int = 64,
+                         zipf_a: float = 1.2,
+                         crowd_factor: float = 3.0,
+                         crowd_at: float = 0.0,
+                         crowd_duration: float = 120.0,
+                         hot_objects: int = 4,
+                         hot_size: int = 493 * MB) -> List[AccessRequest]:
+    """A regional flash crowd over a production-shaped background.
+
+    The background is :func:`generate_workload` across every site; on
+    top, the workers of ``hot_sites`` (one region's edge sites) fire
+    ``crowd_factor × n_requests`` reads of a tiny ``hot_objects``-file
+    set compressed into [``crowd_at``, ``crowd_at + crowd_duration``) —
+    the release-day / trigger-alert shape where one region suddenly
+    hammers a handful of objects.  In a tiered federation the first miss
+    per edge fills the regional parent and every sibling edge then fills
+    cache-to-cache, so origin egress stays near ``hot_objects ×
+    hot_size`` instead of scaling with the crowd."""
+    out = generate_workload(sites, n_requests, duration=duration,
+                            seed=seed, working_set=working_set,
+                            zipf_a=zipf_a)
+    rng = random.Random(seed ^ 0xF1A54)
+    hot_list = list(hot_sites)
+    for _ in range(int(crowd_factor * n_requests)):
+        k = rng.randrange(0, max(hot_objects, 1))
+        out.append(AccessRequest(
+            time=crowd_at + rng.uniform(0.0, crowd_duration),
+            site=rng.choice(hot_list),
+            worker=rng.randrange(0, 1 << 16),
+            path=f"/flash/hot_{k:03d}", size=hot_size,
+            experiment="flash-crowd", tenant="flash-crowd"))
+    out.sort(key=lambda r: r.time)
+    return out
+
+
 def abusive_workload(sites: Sequence[str], n_requests: int,
                      duration: float = 3600.0, seed: int = 0,
                      working_set: int = 64, zipf_a: float = 1.2,

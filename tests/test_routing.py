@@ -1,0 +1,211 @@
+"""Pluggable cache ranking: static-vs-probe policy behaviour, the
+deterministic GeoIP tie-break, ranked-caches edge cases (limit with
+strays, excluding a whole group), Federation.nearest_cache routing
+through the ranked/alive ordering, and ranking on both client surfaces."""
+import pytest
+
+from repro.core import (Coord, FederationSpec, GeoIPService,
+                        ProbeRankingPolicy, RANKING_POLICIES, ScenarioSpec,
+                        StaticRankingPolicy, Topology, WorkloadSpec,
+                        build_osg_federation, make_ranking_policy,
+                        ranked_caches, run_scenario)
+
+
+def tie_topology():
+    """Three caches: two equidistant from the client, one remote."""
+    topo = Topology()
+    topo.add_node("client", Coord("site-a", rack=0, host=0), 1e9)
+    topo.add_node("cache-b", Coord("site-a", rack=1, host=0), 1e9)
+    topo.add_node("cache-a", Coord("site-a", rack=2, host=0), 1e9)
+    topo.add_node("cache-z", Coord("site-far", rack=0, host=0), 1e9)
+    return topo
+
+
+class TestGeoIPTieBreak:
+    def test_equidistant_caches_order_by_name(self):
+        geo = GeoIPService(tie_topology())
+        order = geo.nearest("client", ["cache-z", "cache-b", "cache-a"])
+        # a and b tie on distance; the name tie-break is deterministic
+        # regardless of the order the candidates were offered in
+        assert order == ["cache-a", "cache-b", "cache-z"]
+        assert order == geo.nearest("client",
+                                    ["cache-a", "cache-z", "cache-b"])
+
+    def test_exclude_respected(self):
+        geo = GeoIPService(tie_topology())
+        assert geo.nearest("client", ["cache-a", "cache-b", "cache-z"],
+                           exclude=("cache-a",)) == ["cache-b", "cache-z"]
+
+
+class TestPolicyRegistry:
+    def test_make_ranking_policy(self):
+        assert isinstance(make_ranking_policy(None), StaticRankingPolicy)
+        assert isinstance(make_ranking_policy("probe"), ProbeRankingPolicy)
+        probe = ProbeRankingPolicy()
+        assert make_ranking_policy(probe) is probe
+        with pytest.raises(ValueError):
+            make_ranking_policy("nope")
+        assert set(RANKING_POLICIES) == {"static", "probe"}
+
+
+class TestProbeRanking:
+    def test_unprobed_caches_keep_static_rank(self):
+        geo = GeoIPService(tie_topology())
+        names = ["cache-a", "cache-b", "cache-z"]
+        assert ProbeRankingPolicy().order("client", names, geo) == \
+            StaticRankingPolicy().order("client", names, geo)
+
+    def test_failures_sink_a_cache_and_successes_restore_it(self):
+        geo = GeoIPService(tie_topology())
+        names = ["cache-a", "cache-b", "cache-z"]
+        probe = ProbeRankingPolicy()
+        # the nearest cache starts failing: after a couple of failures it
+        # ranks below the healthy remote cache
+        probe.on_failure("cache-a")
+        probe.on_failure("cache-a")
+        assert probe.order("client", names, geo)[0] == "cache-b"
+        assert probe.order("client", names, geo)[-1] == "cache-a"
+        # sustained successful probes decay the penalty back to 1.0
+        for _ in range(12):
+            probe.observe("cache-a", 0.05)
+        assert probe.order("client", names, geo)[0] == "cache-a"
+
+    def test_slowdown_reranks_without_failures(self):
+        geo = GeoIPService(tie_topology())
+        names = ["cache-a", "cache-b"]
+        probe = ProbeRankingPolicy()
+        probe.observe("cache-a", 0.05)
+        probe.observe("cache-b", 0.05)
+        # cache-a degrades to 10x its own baseline; scores are relative
+        # slowdowns so it sinks below b even though both were probed
+        for _ in range(20):
+            probe.observe("cache-a", 0.5)
+        assert probe.order("client", names, geo) == ["cache-b", "cache-a"]
+
+    def test_scores_are_relative_to_own_baseline(self):
+        # a cache that is *consistently* slow keeps score 1.0 — only
+        # getting slower than it used to be counts against it
+        probe = ProbeRankingPolicy()
+        for _ in range(5):
+            probe.observe("slow-but-steady", 2.0)
+        assert probe.score("slow-but-steady") == pytest.approx(1.0)
+
+
+class TestRankedCachesEdgeCases:
+    @pytest.fixture()
+    def fed(self):
+        return build_osg_federation(cache_replicas=2)
+
+    def test_limit_truncates_before_strays(self, fed):
+        client = fed.client("chicago", worker=0)
+        full = client._ranked_caches(path="/ligo/f1")
+        limited = client._ranked_caches(path="/ligo/f1", limit=3)
+        assert [c.name for c in limited] == [c.name for c in full[:3]]
+
+    def test_limit_with_stray_caches(self, fed):
+        # a registered cache that belongs to no HA group participates
+        # policy-ranked at the tail — and the limit still caps the total
+        donor = next(iter(fed.caches.values()))
+        node = fed.topology.add_node("stray/cache", Coord("stray"), 1e9)
+        extra = type(donor)("stray/cache", node, donor.capacity_bytes,
+                            redirectors=donor.redirectors, net=donor.net)
+        fed.caches["stray/cache"] = extra
+        client = fed.client("chicago", worker=0)
+        full = client._ranked_caches(path="/ligo/f1")
+        assert full[-1].name == "stray/cache"  # remote stray ranks last
+        n = len(full)
+        assert len(client._ranked_caches(path="/ligo/f1", limit=n - 1)) \
+            == n - 1
+        assert "stray/cache" not in \
+            [c.name for c in client._ranked_caches(path="/ligo/f1",
+                                                   limit=n - 1)]
+
+    def test_excluding_entire_nearest_group_falls_through(self, fed):
+        client = fed.client("chicago", worker=0)
+        full = client._ranked_caches(path="/ligo/f1")
+        nearest_group = {c.name for c in full
+                         if c.name.startswith("chicago/")}
+        assert nearest_group  # chicago hosts a 2-replica group
+        ranked = client._ranked_caches(path="/ligo/f1",
+                                       exclude=tuple(nearest_group))
+        # the whole nearest group is gone; the ranking falls through to
+        # the next group's ring order, preserving the remaining order
+        assert [c.name for c in ranked] == \
+            [c.name for c in full if c.name not in nearest_group]
+
+
+class TestNearestCache:
+    def test_nearest_cache_matches_client_ranking(self):
+        fed = build_osg_federation(cache_replicas=2)
+        client = fed.client("nebraska", worker=0)
+        ranked = client._ranked_caches(path="/des/f7")
+        assert fed.nearest_cache("nebraska/worker0", "/des/f7").name == \
+            ranked[0].name
+
+    def test_nearest_cache_skips_dead_ring_owner(self):
+        fed = build_osg_federation(cache_replicas=2)
+        client = fed.client("nebraska", worker=0)
+        ranked = client._ranked_caches(path="/des/f7")
+        owner = ranked[0]
+        for group in fed.groups.values():
+            if any(c.name == owner.name for c in group.members):
+                group.mark_down(owner.name)
+        got = fed.nearest_cache("nebraska/worker0", "/des/f7")
+        assert got.available
+        assert got.name == ranked[1].name
+
+    def test_nearest_cache_is_stats_neutral(self):
+        fed = build_osg_federation(cache_replicas=2)
+        fed.client("syracuse", worker=0)  # registers the worker node
+        before = {n: (g.stats.routes, g.stats.failovers)
+                  for n, g in fed.groups.items()}
+        fed.nearest_cache("syracuse/worker0", "/nova/f2")
+        after = {n: (g.stats.routes, g.stats.failovers)
+                 for n, g in fed.groups.items()}
+        assert after == before
+
+
+class TestScenarioRanking:
+    def _spec(self, ranking, engine):
+        return ScenarioSpec(
+            name=f"rank-{ranking}", engine=engine, ranking=ranking,
+            federation=FederationSpec.fleet(num_pods=2, hosts_per_pod=2),
+            workload=WorkloadSpec(kind="zipf", n_requests=24,
+                                  working_set=8, duration=300.0, seed=5))
+
+    @pytest.mark.parametrize("engine", ["analytic", "sim"])
+    def test_static_spec_equals_default(self, engine):
+        # ranking="static" must be byte-identical to the historical
+        # inline ranking (ranking=None) on both engines
+        by_static = run_scenario(self._spec("static", engine)).summary()
+        by_none = run_scenario(self._spec(None, engine)).summary()
+        for k in ("bytes_moved", "cache_hits", "cache_misses",
+                  "origin_egress_bytes", "hit_rate"):
+            assert by_static[k] == by_none[k], k
+
+    @pytest.mark.parametrize("engine", ["analytic", "sim"])
+    def test_probe_spec_runs(self, engine):
+        rep = run_scenario(self._spec("probe", engine)).summary()
+        assert rep["completed"] == rep["requests"] == 24
+
+    def test_unknown_ranking_rejected(self):
+        with pytest.raises(ValueError):
+            run_scenario(self._spec("nope", "analytic"))
+
+
+class TestRankedCachesFunction:
+    def test_groupless_ranking_is_pure_policy_order(self):
+        topo = tie_topology()
+        geo = GeoIPService(topo)
+
+        class FakeCache:
+            def __init__(self, name):
+                self.name = name
+                self.available = True
+
+        caches = {n: FakeCache(n) for n in ("cache-z", "cache-a", "cache-b")}
+        out = ranked_caches("client", caches, [], geo, path="/x")
+        assert [c.name for c in out] == ["cache-a", "cache-b", "cache-z"]
+        out = ranked_caches("client", caches, [], geo,
+                            exclude=("cache-a",), limit=1)
+        assert [c.name for c in out] == ["cache-b"]
