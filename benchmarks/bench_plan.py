@@ -1,0 +1,232 @@
+"""Predictive planner bench: fit once, predict a held-out grid, invert.
+
+Three phases, each priced and gated:
+
+* **fit** — one ``run_sweep(fit=True)`` over a ``cache_capacity ×
+  eviction_policy`` training grid.  The LRU models ride for free on the
+  stack-distance kernel calls the exact sweep makes anyway; FIFO
+  columns get a monotone interp model fitted to the training cells'
+  exact hit rates (:func:`~repro.kernels.cache_model.fit_interp_model`).
+* **forward** — a *held-out* sweep at the geometric midpoints of the
+  training capacities, never seen by any fit, replayed exactly and
+  compared against the model predictions cell by cell
+  (:meth:`~repro.core.monitoring.SweepAggregator.model_residuals`).
+  The LRU (differentiable) models must stay within 2% absolute
+  hit-rate error; FIFO hit curves are genuine staircases (whole hot
+  objects cross the capacity boundary at once), so their interp band
+  is wider on the quick profile's coarse grid.
+* **inverse** — fit a heterogeneous two-pod scenario (one hot skewed
+  pod, one cold diffuse pod), run :func:`~repro.core.planner.
+  plan_capacity` for a fleet hit-rate target, and ground-truth the
+  recommendation with :func:`~repro.core.planner.verify_plan` (exact
+  batched replay, bounded scale-up).  The plan must verify feasible
+  AND beat uniform sizing on total bytes — the whole point of per-site
+  capacity variables.
+
+**Artifact** ``artifacts/plan.json`` (see docs/BENCHMARKS.md): the
+training/held-out grids, per-policy max absolute forward error, the
+residual table, the plan (capacities, savings, telemetry) and its
+verification block.  The CI regression gate holds ``max_abs_error``
+≤ 2%, ``savings_vs_uniform`` above its floor and ``feasible`` == 1.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (FederationSpec, PlannerSpec, ScenarioSpec,
+                        SweepAggregator, SweepSpec, WorkloadSpec,
+                        generate_workload, groups_for_federation,
+                        plan_capacity, predict, run_sweep, verify_plan)
+from repro.kernels.cache_model import fit_interp_model, predict_hit_rate
+
+ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACT_FILES = ("plan.json",)
+
+CAP_AXIS = "federation.cache_capacity"
+POLICY_AXIS = "federation.eviction_policy"
+
+
+def _chunk_hit(summary) -> float:
+    refs = summary["cache_hits"] + summary["cache_misses"]
+    return summary["cache_hits"] / max(refs, 1)
+
+
+def forward_spec(quick: bool = False) -> ScenarioSpec:
+    """Homogeneous fleet for the forward-accuracy grid.  The full
+    profile uses a large working set so the FIFO staircase's individual
+    steps are small enough for the interp model's 2% band."""
+    return ScenarioSpec(
+        name="plan-forward", engine="analytic",
+        federation=FederationSpec.fleet(num_pods=2, hosts_per_pod=2,
+                                        cache_capacity=2e9),
+        workload=WorkloadSpec(kind="zipf",
+                              n_requests=260 if quick else 900,
+                              working_set=8 if quick else 64,
+                              duration=600.0, seed=5))
+
+
+def capacity_grids(quick: bool = False):
+    """Training capacities and their geometric midpoints (held out)."""
+    train = np.geomspace(4e8 if quick else 6e8,
+                         2e10 if quick else 6e10,
+                         7 if quick else 15)
+    held = np.sqrt(train[:-1] * train[1:])
+    return train, held
+
+
+def planner_scenario(quick: bool = False) -> ScenarioSpec:
+    """Two pods with very different locality — the configuration where
+    per-site sizing should crush uniform sizing."""
+    fed = FederationSpec.fleet(num_pods=2, hosts_per_pod=2,
+                               cache_capacity=2e9)
+    n0, n1 = (300, 80) if quick else (700, 150)
+    wl = (generate_workload([fed.sites[0].name], n0, seed=0,
+                            working_set=6, zipf_a=1.6)
+          + generate_workload([fed.sites[1].name], n1, seed=1,
+                              working_set=64, zipf_a=1.05))
+    wl.sort(key=lambda r: r.time)
+    return ScenarioSpec(name="plan-hetero", engine="analytic",
+                        federation=fed, workload=wl)
+
+
+TARGET_HIT_RATE = 0.5
+
+
+def run(quick: bool = False, verbose: bool = False):
+    train, held = capacity_grids(quick)
+    base = forward_spec(quick)
+
+    # --- fit: training sweep, models ride on the exact kernel calls
+    t0 = time.perf_counter()
+    train_rep = run_sweep(SweepSpec(name="plan-train", base=base, axes={
+        CAP_AXIS: list(train), POLICY_AXIS: ["lru", "fifo"],
+    }), fit=True)
+    t_fit = time.perf_counter() - t0
+    models = train_rep.fitted_models()
+    fifo_cells = [(c.params[CAP_AXIS], _chunk_hit(c.summary))
+                  for c in train_rep.cells
+                  if c.params[POLICY_AXIS] == "fifo"]
+    fifo_model = fit_interp_model([p[0] for p in fifo_cells],
+                                  [p[1] for p in fifo_cells])
+
+    # --- forward: exact replay of the held-out grid vs predictions
+    t0 = time.perf_counter()
+    held_rep = run_sweep(SweepSpec(name="plan-held", base=base, axes={
+        CAP_AXIS: list(held), POLICY_AXIS: ["lru", "fifo"],
+    }))
+    t_held = time.perf_counter() - t0
+
+    agg = SweepAggregator()
+    for c in held_rep.cells:
+        agg.add(c.params, {"hit_rate": _chunk_hit(c.summary)})
+
+    def model_value(params):
+        if params[POLICY_AXIS] == "lru":
+            return predict(models, params[CAP_AXIS])["hit_rate"]
+        return float(predict_hit_rate(fifo_model, params[CAP_AXIS]))
+
+    residuals = agg.model_residuals(model_value)
+    err = {"lru": 0.0, "fifo": 0.0}
+    for params, _, _, residual in residuals:
+        p = params[POLICY_AXIS]
+        err[p] = max(err[p], abs(residual))
+    max_abs_error = max(err.values())
+
+    # --- inverse: heterogeneous fit -> plan -> exact-replay verify
+    hetero = planner_scenario(quick)
+    t0 = time.perf_counter()
+    hetero_rep = run_sweep(SweepSpec(name="plan-hetero", base=hetero,
+                                     axes={}), fit=True)
+    t_hfit = time.perf_counter() - t0
+    hmodels = hetero_rep.fitted_models()
+    groups = groups_for_federation(hetero.federation.build(), hmodels)
+    t0 = time.perf_counter()
+    plan = plan_capacity(PlannerSpec(models=hmodels,
+                                     target_hit_rate=TARGET_HIT_RATE,
+                                     groups=groups))
+    t_solve = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    plan = verify_plan(plan, hetero)
+    t_verify = time.perf_counter() - t0
+    summary = plan.summary()
+
+    ARTIFACTS.mkdir(exist_ok=True, parents=True)
+    (ARTIFACTS / "plan.json").write_text(json.dumps({
+        "quick": quick,
+        "fit": {
+            "wall_seconds": t_fit,
+            "cells": len(train_rep.cells),
+            "fit_streams": train_rep.solver.get("fit_streams", 0),
+            "models": {k: m.kind for k, m in sorted(models.items())},
+        },
+        "forward": {
+            "train_capacities": [float(c) for c in train],
+            "held_capacities": [float(c) for c in held],
+            "wall_seconds": t_held,
+            "max_abs_error": max_abs_error,
+            "lru_max_abs_error": err["lru"],
+            "fifo_max_abs_error": err["fifo"],
+            "residuals": [
+                {"params": params, "observed": obs, "predicted": pred}
+                for params, obs, pred, _ in residuals],
+        },
+        "planner": {
+            "target_hit_rate": TARGET_HIT_RATE,
+            "fit_wall_seconds": t_hfit,
+            "solve_wall_seconds": t_solve,
+            "verify_wall_seconds": t_verify,
+            **summary,
+        },
+        "verification": summary["verification"],
+    }, indent=1))
+
+    # acceptance gates (the harness discards the artifact on raise)
+    if err["lru"] > 0.02:
+        raise AssertionError(
+            f"LRU forward model missed the 2% band on the held-out "
+            f"grid: max abs error {err['lru']:.4f}")
+    fifo_band = 0.06 if quick else 0.02
+    if err["fifo"] > fifo_band:
+        raise AssertionError(
+            f"FIFO interp model missed its {fifo_band:.0%} band: "
+            f"max abs error {err['fifo']:.4f}")
+    if not plan.verification["feasible"]:
+        raise AssertionError(
+            f"planner recommendation failed exact-replay verification: "
+            f"{plan.verification}")
+    if plan.savings_vs_uniform <= 0.15:
+        raise AssertionError(
+            f"planner did not beat uniform sizing meaningfully: "
+            f"savings {plan.savings_vs_uniform:.1%}")
+    if t_solve > 30.0:
+        raise AssertionError(
+            f"planner solve took {t_solve:.1f}s (> 30s budget)")
+
+    if verbose:
+        print(f"  forward: {len(residuals)} held-out cells, max abs "
+              f"error lru {err['lru']:.4f} / fifo {err['fifo']:.4f}")
+        print(f"  inverse: savings {plan.savings_vs_uniform:.1%} vs "
+              f"uniform, verified hit "
+              f"{plan.verification['achieved_hit_rate']:.4f} >= "
+              f"{TARGET_HIT_RATE} in {plan.verification['attempts']} "
+              f"attempt(s), solve {t_solve:.2f}s")
+
+    return [
+        ("plan.fit", t_fit * 1e6,
+         f"cells={len(train_rep.cells)},"
+         f"streams={train_rep.solver.get('fit_streams', 0)}"),
+        ("plan.forward", t_held * 1e6,
+         f"max_abs_err={max_abs_error:.4f}"),
+        ("plan.solve", t_solve * 1e6,
+         f"savings={plan.savings_vs_uniform:.1%},"
+         f"feasible={plan.verification['feasible']}"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(verbose=True):
+        print(f"{name},{us:.0f},{derived}")

@@ -74,6 +74,15 @@ EXTRACTORS: Dict[str, Tuple[str, Callable[[dict], float]]] = {
     "overload_p99_degradation_unthrottled": (
         "overload.json",
         lambda a: a["derived"]["p99_degradation_unthrottled"]),
+    "plan_lru_forward_error": (
+        "plan.json", lambda a: a["forward"]["lru_max_abs_error"]),
+    "plan_fifo_forward_error": (
+        "plan.json", lambda a: a["forward"]["fifo_max_abs_error"]),
+    "plan_savings_vs_uniform": (
+        "plan.json", lambda a: a["planner"]["savings_vs_uniform"]),
+    "plan_feasible": (
+        "plan.json",
+        lambda a: 1.0 if a["verification"]["feasible"] else 0.0),
 }
 
 

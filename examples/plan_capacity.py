@@ -1,0 +1,34 @@
+"""How much disk does each site need for a 95% fleet hit rate?
+
+One fit=True sweep distills each cache's reuse profile into a
+differentiable hit-rate curve; the planner then *minimizes total fleet
+capacity* subject to the target by gradient descent, and the
+recommendation is verified by an exact batched replay — no trial sweeps.
+
+Run:  PYTHONPATH=src python examples/plan_capacity.py
+"""
+from repro.core import (FederationSpec, PlannerSpec, ScenarioSpec, SweepSpec,
+                        WorkloadSpec, groups_for_federation, plan_capacity,
+                        run_sweep, verify_plan)
+
+
+def main():
+    base = ScenarioSpec(
+        name="zipf", engine="analytic",
+        federation=FederationSpec.fleet(num_pods=2, hosts_per_pod=2),
+        workload=WorkloadSpec(kind="zipf", n_requests=2000, working_set=4,
+                              duration=3600.0, seed=7))
+    report = run_sweep(SweepSpec(name="fit", base=base, axes={}), fit=True)
+    models = report.fitted_models()
+    groups = groups_for_federation(base.federation.build(), models)
+    plan = verify_plan(plan_capacity(PlannerSpec(
+        models=models, target_hit_rate=0.95, groups=groups)), base)
+    for site, cap in sorted(plan.capacities.items()):
+        print(f"{site}: {cap / 1e9:8.2f} GB")
+    print(f"fleet hit rate {plan.verification['achieved_hit_rate']:.3f} "
+          f"(exact replay), {plan.savings_vs_uniform:.1%} less disk than "
+          f"uniform sizing")
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,9 @@ from .monitoring import (CacheHealthMonitor, CacheUsagePacket, DecayGauge,
                          UsageAggregator, UserLogin, experiment_of)
 from .namespace import Namespace
 from .origin import ChunkStore, Origin
+from .planner import (PlannerSpec, PlanReport, apply_capacities,
+                      groups_for_federation, plan_capacity, predict,
+                      verify_plan)
 from .policies import (AdmissionPolicy, EVICTION_POLICIES, EvictionPolicy,
                        FIFOPolicy, LFUPolicy, LRUPolicy, SizeAwareAdmission,
                        TTLPolicy, make_eviction_policy)

@@ -933,6 +933,11 @@ class SweepCell:
     executor: str                     # "batched" | "serial"
     summary: Dict[str, object]
     pricing: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # ``fit=`` mode products (batched cells only; None otherwise).
+    # These ride on the cell, *not* inside ``summary``, so the
+    # batched-vs-serial parity comparisons stay byte-exact.
+    reuse_histogram: Optional[Dict[str, Dict]] = None   # cache -> buckets
+    models: Optional[Dict[str, object]] = None          # cache -> CacheModel
 
 
 @dataclasses.dataclass
@@ -965,6 +970,28 @@ class SweepReport:
         return [(v, sum(agg[v]) / len(agg[v]))
                 for v in self.axes.get(axis, sorted(agg))]
 
+    def fitted_models(self, **params) -> Dict[str, object]:
+        """Per-cache fitted :class:`~repro.kernels.cache_model.
+        CacheModel` objects from a ``fit=`` sweep — the cell matching
+        ``params``, else the first cell that carries models (cells of
+        one routing column share one model dict)."""
+        if params:
+            return self.cell(**params).models or {}
+        for c in self.cells:
+            if c.models:
+                return c.models
+        return {}
+
+    def reuse_histograms(self, **params) -> Dict[str, Dict]:
+        """Per-cache reuse-distance histograms (JSON-safe bucket dicts)
+        from a ``fit=`` sweep, resolved like :meth:`fitted_models`."""
+        if params:
+            return self.cell(**params).reuse_histogram or {}
+        for c in self.cells:
+            if c.reuse_histogram:
+                return c.reuse_histogram
+        return {}
+
     def summary(self) -> Dict:
         return {
             "name": self.name,
@@ -973,6 +1000,7 @@ class SweepReport:
             "wall_seconds": self.wall_seconds,
             "batched_cells": self.batched_cells,
             "serial_cells": self.serial_cells,
+            "fitted_cells": sum(1 for c in self.cells if c.models),
             "solver": dict(self.solver),
         }
 
@@ -2105,8 +2133,52 @@ def _plan_cell_vectorized(cspec: ScenarioSpec, routing_fed: FederationSpec,
     return _CellPlan(cspec, routing)
 
 
+def _fit_wanted(plan: "_CellPlan", wanted: List, l2: bool = False) -> None:
+    """Queue the *unfiltered* (all keys admitted) stack-distance
+    variant of every stream the plan touches — the capacity-free reuse
+    profile the differentiable cache models fit.  Rides the same
+    batched kernel call as the cells' own variants; streams that
+    already resolve through an all-admitted ``dist`` variant share it
+    byte for byte."""
+    order = ([(stream, None) for _q, stream, _m, _a in plan._l2_order]
+             if l2 else
+             [(plan.routing.streams[ci], None)
+              for ci, _m, _a in plan._order])
+    for stream, _ in order:
+        admitted = np.ones(stream.n_keys, bool)
+        wanted.append((stream, admitted.tobytes(), admitted))
+
+
+def _fit_products(stream: _CacheStream, fit, cache: Dict[int, Tuple]
+                  ) -> Tuple[Optional[Dict], Optional[object]]:
+    """(histogram dict, CacheModel) for one stream, built once per
+    stream object and shared by every cell of the routing column."""
+    got = cache.get(id(stream))
+    if got is not None:
+        return got
+    from repro.kernels.cache_model import (fit_histogram_model,
+                                           fit_lognormal_mixture,
+                                           reuse_histogram)
+    sig = np.ones(stream.n_keys, bool).tobytes()
+    v = stream.variants.get(sig)
+    if v is None:
+        return None, None
+    if stream.is_fill is not None:
+        of = 1.0   # merged parent streams miss straight to the origin
+    else:
+        tot = float(stream.size.sum())
+        of = (float(stream.size[stream.parent_ci < 0].sum()) / tot
+              if tot > 0 else 1.0)
+    hist = reuse_histogram(v["dist"], v["sizes"])
+    model = (fit_lognormal_mixture(hist, origin_fraction=of)
+             if fit == "mixture"
+             else fit_histogram_model(hist, origin_fraction=of))
+    cache[id(stream)] = (hist.to_dict(), model)
+    return cache[id(stream)]
+
+
 def run_sweep(spec: SweepSpec, batched: bool = True,
-              price_contention: bool = True) -> SweepReport:
+              price_contention: bool = True, fit=False) -> SweepReport:
     """Execute every cell of a sweep.
 
     ``batched=True`` routes eligible analytic cells through the
@@ -2123,6 +2195,17 @@ def run_sweep(spec: SweepSpec, batched: bool = True,
     :func:`run_scenario`, so a mixed sweep still completes with
     identical semantics.  ``batched=False`` is the all-serial baseline
     the benchmarks and parity tests compare against.
+
+    ``fit=True`` additionally returns *fitted models* alongside the
+    exact cells: every batched stream's unfiltered reuse-distance
+    profile is resolved in the same batched kernel calls, bucketed
+    into a per-cache ``reuse_histogram`` and fitted into a
+    differentiable :class:`~repro.kernels.cache_model.CacheModel`
+    (``fit="mixture"`` fits parametric lognormal mixtures instead of
+    the nonparametric smoothed-histogram curve).  Both ride on the
+    cells — ``cell.reuse_histogram`` / ``cell.models``,
+    :meth:`SweepReport.fitted_models` — never inside the summaries the
+    parity tests compare, and feed :mod:`repro.core.planner`.
     """
     t0 = time.perf_counter()
     shared = _SharedFederations()
@@ -2146,6 +2229,8 @@ def run_sweep(spec: SweepSpec, batched: bool = True,
             sim_problems.extend(plan.problems)
             fifo_problems.extend(plan.fifo_problems)
             dist_wanted.extend(plan.dist_wanted)
+            if fit:
+                _fit_wanted(plan, dist_wanted)
             batched_cells += 1
             entries.append((dict(params), cspec, plan, None))
         else:
@@ -2184,6 +2269,8 @@ def run_sweep(spec: SweepSpec, batched: bool = True,
             l2_sim_problems.extend(plan.l2_problems)
             l2_fifo_problems.extend(plan.l2_fifo_problems)
             l2_dist_wanted.extend(plan.l2_dist_wanted)
+            if fit:
+                _fit_wanted(plan, l2_dist_wanted, l2=True)
     if l2_dist_wanted:
         _resolve_distances(l2_dist_wanted, telemetry)
     l2_sim_results: List = []
@@ -2215,6 +2302,7 @@ def run_sweep(spec: SweepSpec, batched: bool = True,
     problems = []
     problem_bytes = []
     problem_cells: List[SweepCell] = []
+    fit_cache: Dict[int, Tuple] = {}
     for params, cspec, plan, report in entries:
         if plan is not None:
             report, (flow_specs, flow_bytes) = plan.finalize(
@@ -2227,12 +2315,29 @@ def run_sweep(spec: SweepSpec, batched: bool = True,
         cell = SweepCell(params=params, name=cspec.name,
                          engine=cspec.engine, executor=executor,
                          summary=report.summary())
+        if fit and plan is not None:
+            r = plan.routing
+            hists: Dict[str, Dict] = {}
+            mods: Dict[str, object] = {}
+            pairs = [(r.cache_names[ci], r.streams[ci])
+                     for ci, _m, _a in plan._order]
+            pairs += [(r.cache_names[q], stream)
+                      for q, stream, _m, _a in plan._l2_order]
+            for name, stream in pairs:
+                h, mdl = _fit_products(stream, fit, fit_cache)
+                if h is not None:
+                    hists[name] = h
+                    mods[name] = mdl
+            cell.reuse_histogram = hists
+            cell.models = mods
         if executor == "batched" and price_contention and flow_specs:
             problems.append(sparse_flow_problem(flow_specs))
             problem_bytes.append(np.asarray(flow_bytes))
             problem_cells.append(cell)
         cells.append(cell)
     solver: Dict[str, object] = {"solve_calls": 0, "priced_cells": 0}
+    if fit:
+        telemetry["fit_streams"] = len(fit_cache)
     solver.update(telemetry)
     if problems:
         from repro.kernels.batched_maxmin import maxmin_rates_batch

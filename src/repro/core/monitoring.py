@@ -311,6 +311,58 @@ class SweepAggregator:
                                        for m in self.POLICY_METRICS)
                 for value, cells, *_ in self.marginal(axis, "hit_rate")]
 
+    def hit_rate_curve(self, axis: Optional[str] = None,
+                       metric: str = "hit_rate") -> List[tuple]:
+        """``metric`` vs. capacity, one curve per sweep *column*.
+
+        A column is one combination of every axis except ``axis``
+        (default: the first observed axis whose name ends with
+        ``"cache_capacity"`` — the sweep executor's spelling is
+        ``"federation.cache_capacity"``).  Rows:
+        ``(column_params, [(capacity, value), ...])`` with the curve
+        sorted by capacity ascending — the validation table the
+        planner's fitted ``H(C)`` curves are held against
+        (``bench_plan``, notebooks)."""
+        if axis is None:
+            axis = next((a for a in self.axes()
+                         if a.endswith("cache_capacity")), None)
+            if axis is None:
+                return []
+        cols: Dict[tuple, List[tuple]] = {}
+        order: List[tuple] = []
+        for params, summary in self.rows:
+            if axis not in params:
+                continue
+            key = tuple((k, v) for k, v in params.items() if k != axis)
+            if key not in cols:
+                cols[key] = []
+                order.append(key)
+            cols[key].append((params[axis],
+                              float(summary.get(metric, 0.0))))
+        return [(dict(key), sorted(cols[key])) for key in order]
+
+    def model_residuals(self, predict: Callable[[Dict], Optional[float]],
+                        metric: str = "hit_rate") -> List[tuple]:
+        """Observed-vs-predicted validation table for a fitted model.
+
+        ``predict`` maps a cell's params dict to the model's value for
+        ``metric`` (return ``None`` to skip a cell — e.g. a policy the
+        model does not cover).  Rows: ``(params, observed, predicted,
+        residual)`` with ``residual = predicted − observed``; the
+        forward-model acceptance gate asserts
+        ``max(abs(residual)) <= 0.02`` over a held-out grid.  Plain
+        numpy-free plumbing — the model side stays in
+        :mod:`repro.kernels.cache_model`, monitoring only tabulates."""
+        rows: List[tuple] = []
+        for params, summary in self.rows:
+            pred = predict(params)
+            if pred is None:
+                continue
+            obs = float(summary.get(metric, 0.0))
+            rows.append((dict(params), obs, float(pred),
+                         float(pred) - obs))
+        return rows
+
 
 class UsageAggregator:
     """Builds Table 1 (usage by experiment) and Fig. 4 (usage over time)."""

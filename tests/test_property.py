@@ -226,3 +226,101 @@ class TestLoaderMapping:
                 key = (shard, t)
                 assert key not in seen
                 seen.add(key)
+
+
+class TestCacheModelInvariants:
+    """The planner's differentiable curves must stay physical for
+    *every* reuse profile, not just the swept ones."""
+
+    @staticmethod
+    def _histogram(thresholds, sizes, compulsory):
+        from repro.kernels.cache_model import reuse_histogram
+        dist = np.asarray(thresholds, float)
+        dist[:compulsory] = np.inf
+        return reuse_histogram(dist, np.asarray(sizes, float))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.floats(1e3, 1e13), min_size=4, max_size=120),
+           st.integers(0, 3), st.data())
+    def test_hist_curve_monotone_and_bounded(self, thresholds, compulsory,
+                                             data):
+        from repro.kernels.cache_model import (fit_histogram_model,
+                                               predict_hit_rate)
+        sizes = [data.draw(st.floats(1.0, t)) for t in thresholds]
+        hist = self._histogram(thresholds, sizes,
+                               min(compulsory, len(thresholds)))
+        model = fit_histogram_model(hist)
+        caps = np.geomspace(1.0, 1e15, 40)
+        h = np.array([float(predict_hit_rate(model, c)) for c in caps])
+        assert (h >= 0.0).all() and (h <= 1.0).all()
+        assert (np.diff(h) >= -1e-9).all()
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.lists(st.floats(1e3, 1e13), min_size=4, max_size=60),
+           st.data())
+    def test_mixture_curve_monotone_and_bounded(self, thresholds, data):
+        from repro.kernels.cache_model import (fit_lognormal_mixture,
+                                               predict_hit_rate)
+        sizes = [data.draw(st.floats(1.0, t)) for t in thresholds]
+        hist = self._histogram(thresholds, sizes, 0)
+        model = fit_lognormal_mixture(hist, steps=120)
+        caps = np.geomspace(1.0, 1e15, 30)
+        h = np.array([float(predict_hit_rate(model, c)) for c in caps])
+        assert (h >= 0.0).all() and (h <= 1.0).all()
+        assert (np.diff(h) >= -1e-9).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.floats(1e6, 1e12), st.floats(0.0, 1.0)),
+                    min_size=1, max_size=20))
+    def test_interp_curve_monotone_and_bounded(self, points):
+        from repro.kernels.cache_model import (fit_interp_model,
+                                               predict_hit_rate)
+        model = fit_interp_model([p[0] for p in points],
+                                 [p[1] for p in points])
+        caps = np.geomspace(1.0, 1e15, 30)
+        h = np.array([float(predict_hit_rate(model, c)) for c in caps])
+        assert (h >= 0.0).all() and (h <= 1.0).all()
+        assert (np.diff(h) >= -1e-9).all()
+
+
+class TestPlannerFeasibility:
+    """Whatever the workload, a plan the verifier returns is feasible
+    against the *exact* batched kernels whenever the target is
+    reachable at all — the model may smooth, the verification replay
+    may scale up, but the report never claims an infeasible point."""
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(0, 3), st.integers(4, 24),
+           st.floats(0.3, 0.9))
+    def test_verified_plan_is_replay_feasible(self, seed, working_set,
+                                              target_frac):
+        from repro.core import (FederationSpec, PlannerSpec, ScenarioSpec,
+                                SweepSpec, generate_workload,
+                                groups_for_federation, plan_capacity,
+                                predict, run_sweep, verify_plan)
+        fed = FederationSpec.fleet(num_pods=2, hosts_per_pod=2,
+                                   cache_capacity=1e9)
+        wl = (generate_workload([fed.sites[0].name], 120, seed=seed,
+                                working_set=working_set)
+              + generate_workload([fed.sites[1].name], 80, seed=seed + 7,
+                                  working_set=working_set * 2))
+        wl.sort(key=lambda r: r.time)
+        base = ScenarioSpec(name="prop", engine="analytic",
+                            federation=fed, workload=wl)
+        rep = run_sweep(SweepSpec(name="p", base=base, axes={}), fit=True)
+        models = rep.fitted_models()
+        if not models:
+            return
+        # aim inside the model's own ceiling so the target is reachable
+        ceiling = predict(models, 1e15)["hit_rate"]
+        target = max(ceiling * target_frac, 0.01)
+        groups = groups_for_federation(fed.build(), models)
+        plan = plan_capacity(PlannerSpec(models=models,
+                                         target_hit_rate=target,
+                                         groups=groups, steps=200))
+        ver = verify_plan(plan, base)
+        assert ver.verification["feasible"]
+        assert ver.verification["achieved_hit_rate"] >= target
+        # totals stay consistent after any verification scale-up
+        assert ver.total_capacity == pytest.approx(
+            sum(ver.per_cache.values()), rel=1e-9)
