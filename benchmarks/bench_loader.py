@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import build_fleet_federation
+from repro.core import AnalyticPlane, build_fleet_federation
 from repro.data import DatasetSpec, FederatedDataLoader, SyntheticTokens
 
 
@@ -19,8 +19,9 @@ def run(steps: int = 20, verbose: bool = False):
     spec = DatasetSpec("bench", vocab_size=32768,
                        tokens_per_shard=1 << 16, num_shards=16)
     SyntheticTokens(spec).publish(fed.origins[0])
-    loader = FederatedDataLoader(fed.client("pod0", 0), spec,
-                                 global_batch=8, seq_len=512)
+    loader = FederatedDataLoader(AnalyticPlane(fed), spec,
+                                 global_batch=8, seq_len=512,
+                                 site="pod0", worker=0)
     t0 = time.perf_counter()
     for s in range(steps):
         batch = loader.batch(s)

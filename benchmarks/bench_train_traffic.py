@@ -1,0 +1,193 @@
+"""Fleet benchmark — LM training/serving traffic through the federation.
+
+The api_redesign payoff measured end-to-end: the same model-derived
+``WorkloadSpec``s (``from_model_config``) that the loader/checkpointer/
+serve engine produce, executed as declarative ``ScenarioSpec``s on both
+engines.  The headline question: **which federation serves a 1000-pod
+training restart fastest, and at what origin-egress cost?**
+
+Arms:
+  * **restart storm** — every pod re-fetches a 33B checkpoint's manifest
+    plus its model-parallel rank's shards (``kind="restart"``), cached
+    (``stash``) vs cache-bypass (``direct``); reported as storm
+    completion time, origin egress, and the egress-reduction ratio the
+    regression gate holds;
+  * **engine parity** — the same quick restart spec on the analytic and
+    simulated planes must agree byte-for-byte (the redesign's core
+    invariant: one workload, two interchangeable engines);
+  * **federation shootout** — the identical restart traffic against the
+    flat fleet topology vs the hierarchical OSDF topology;
+  * **serve / dataloader** (quick) — Zipf shard serving and striped
+    dataset reads, the other two model-traffic kinds, so the artifact
+    schema carries all three.
+
+Profiles: ``run(quick=True)`` is the CI smoke (2 pods × 16 hosts);
+``run()`` is the full 8 × 125 = 1000-pod storm from the real
+deepseek-coder-33b byte total (~67 GB bf16) used by the weekly job.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.core import (FederationSpec, FetchResult, ScenarioSpec,
+                        WorkloadSpec, run_scenario)
+
+ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACT_FILES = ("train_traffic.json",)
+
+GB = 1 << 30
+PARITY_KEYS = ("bytes_moved", "cache_hits", "cache_misses",
+               "origin_egress")
+
+
+def _summary(rep) -> dict:
+    return {"seconds": rep.sim_seconds,
+            "bytes_moved": rep.bytes_moved,
+            "cache_hits": rep.cache_hits,
+            "cache_misses": rep.cache_misses,
+            "origin_egress": rep.origin_egress_bytes}
+
+
+def restart_spec(cfg, pods: int, hosts: int, tp_degree: int,
+                 method: str = "stash", engine: str = "sim",
+                 federation: FederationSpec = None) -> ScenarioSpec:
+    """The 1000-pod acceptance scenario (or its quick twin): a restart
+    workload derived from the model config's exact byte total."""
+    ws = WorkloadSpec.from_model_config(
+        cfg, kind="restart", shard_bytes=GB, workers_per_site=hosts,
+        tp_degree=tp_degree, jitter=5.0)
+    fed = federation or FederationSpec.fleet(num_pods=pods,
+                                             hosts_per_pod=hosts)
+    return ScenarioSpec(name=f"train_traffic/restart/{method}/{engine}",
+                        federation=fed, workload=ws, method=method,
+                        engine=engine)
+
+
+def _parity(cfg, pods: int, hosts: int, tp_degree: int) -> dict:
+    """The same restart spec on both engines: shared FetchResult schema
+    plus the aggregates that must agree exactly."""
+    out: dict = {"fetch_result_fields":
+                 sorted(f.name for f in dataclasses.fields(FetchResult)),
+                 "mismatches": []}
+    for engine in ("analytic", "sim"):
+        rep = run_scenario(restart_spec(cfg, pods, hosts, tp_degree,
+                                        engine=engine))
+        out[engine] = dict(_summary(rep),
+                           sample_result=dataclasses.asdict(rep.results[0]))
+    for key in PARITY_KEYS:
+        if out["analytic"][key] != out["sim"][key]:
+            out["mismatches"].append(
+                {"key": key, "analytic": out["analytic"][key],
+                 "sim": out["sim"][key]})
+    return out
+
+
+def _quick_kinds(cfg, pods: int, hosts: int) -> dict:
+    """The other two model-traffic kinds, quick scale, both engines."""
+    out: dict = {}
+    serve = WorkloadSpec.from_model_config(
+        cfg, kind="serve", shard_bytes=GB, n_requests=4 * pods * hosts,
+        duration=600.0, workers_per_site=hosts)
+    loader = WorkloadSpec(
+        kind="dataloader", path="/datasets/train", n_objects=32,
+        total_bytes=32 * (256 << 20), workers_per_site=hosts,
+        step_gap=1.0)
+    for label, ws in (("serve", serve), ("dataloader", loader)):
+        out[label] = {"mismatches": []}
+        for engine in ("analytic", "sim"):
+            rep = run_scenario(ScenarioSpec(
+                name=f"train_traffic/{label}/{engine}",
+                federation=FederationSpec.fleet(num_pods=pods,
+                                                hosts_per_pod=hosts),
+                workload=ws, engine=engine))
+            out[label][engine] = _summary(rep)
+        for key in PARITY_KEYS:
+            if out[label]["analytic"][key] != out[label]["sim"][key]:
+                out[label]["mismatches"].append(key)
+    return out
+
+
+def run(quick: bool = False, verbose: bool = False):
+    cfg = get_config("deepseek-coder-33b", smoke=False)
+    pods, hosts, tp = (2, 16, 8) if quick else (8, 125, 25)
+
+    def storm(method: str):
+        return run_scenario(restart_spec(cfg, pods, hosts, tp,
+                                         method=method))
+
+    rep_cached = storm("stash")
+    rep_direct = storm("direct")
+    egress_reduction = (rep_direct.origin_egress_bytes
+                        / max(rep_cached.origin_egress_bytes, 1))
+    speedup = rep_direct.sim_seconds / max(rep_cached.sim_seconds, 1e-9)
+
+    # Federation shootout: identical restart traffic, two topologies.
+    feds = {
+        "fleet": FederationSpec.fleet(num_pods=pods, hosts_per_pod=hosts),
+        "osdf": FederationSpec.osdf(
+            regions=tuple(f"region{i}" for i in range(pods)),
+            edges_per_region=2, workers_per_edge=max(1, hosts // 2)),
+    }
+    shootout = {}
+    for name, fspec in feds.items():
+        rep = run_scenario(restart_spec(cfg, pods, hosts, tp,
+                                        federation=fspec))
+        shootout[name] = _summary(rep)
+    winner = min(shootout, key=lambda n: shootout[n]["seconds"])
+
+    parity = _parity(cfg, *((2, 16, 8) if quick else (pods, hosts, tp)))
+    kinds = _quick_kinds(cfg, 2, 8)
+
+    ws = WorkloadSpec.from_model_config(cfg, kind="restart",
+                                        shard_bytes=GB,
+                                        workers_per_site=hosts,
+                                        tp_degree=tp)
+    ARTIFACTS.mkdir(exist_ok=True, parents=True)
+    (ARTIFACTS / "train_traffic.json").write_text(json.dumps({
+        "profile": "quick" if quick else "full",
+        "model": cfg.name,
+        "checkpoint_bytes": ws.total_bytes,
+        "n_shards": ws.n_objects,
+        "pods": pods * hosts,
+        "sites": pods,
+        "workers_per_site": hosts,
+        "tp_degree": tp,
+        "restart": {
+            "cached": _summary(rep_cached),
+            "direct": _summary(rep_direct),
+            "egress_reduction": egress_reduction,
+            "speedup": speedup,
+        },
+        "federations": dict(shootout, winner=winner),
+        "parity": parity,
+        "kinds": kinds}, indent=1))
+    if verbose:
+        print(f"  {cfg.name}: {ws.total_bytes / 1e9:.1f} GB over "
+              f"{ws.n_objects} shards, {pods * hosts} pods (tp={tp})")
+        print(f"  cached: {rep_cached.sim_seconds:8.1f}s, origin egress "
+              f"{rep_cached.origin_egress_bytes / 1e9:.1f} GB")
+        print(f"  direct: {rep_direct.sim_seconds:8.1f}s, origin egress "
+              f"{rep_direct.origin_egress_bytes / 1e12:.2f} TB")
+        print(f"  egress reduction {egress_reduction:.0f}x, "
+              f"storm speedup {speedup:.1f}x")
+        print(f"  shootout: {winner} wins "
+              f"({shootout[winner]['seconds']:.1f}s)")
+        print(f"  parity mismatches: {len(parity['mismatches'])}")
+    return [("train_traffic.restart_cached", rep_cached.sim_seconds * 1e6,
+             f"egress_reduction={egress_reduction:.0f}x"),
+            ("train_traffic.restart_direct", rep_direct.sim_seconds * 1e6,
+             f"pods={pods * hosts}"),
+            ("train_traffic.parity", float(len(parity["mismatches"])),
+             f"engines_agree_on={','.join(PARITY_KEYS)}"),
+            ("train_traffic.shootout",
+             shootout[winner]["seconds"] * 1e6, f"winner={winner}")]
+
+
+if __name__ == "__main__":
+    import sys
+    for name, us, derived in run(quick="--quick" in sys.argv,
+                                 verbose=True):
+        print(f"{name},{us:.1f},{derived}")

@@ -83,6 +83,12 @@ EXTRACTORS: Dict[str, Tuple[str, Callable[[dict], float]]] = {
     "plan_feasible": (
         "plan.json",
         lambda a: 1.0 if a["verification"]["feasible"] else 0.0),
+    "train_restart_storm_seconds": (
+        "train_traffic.json", lambda a: a["restart"]["cached"]["seconds"]),
+    "train_egress_reduction": (
+        "train_traffic.json", lambda a: a["restart"]["egress_reduction"]),
+    "train_parity_mismatches": (
+        "train_traffic.json", lambda a: len(a["parity"]["mismatches"])),
 }
 
 

@@ -1,10 +1,12 @@
-"""Serving example: weights distributed through the federation, then
-batched prefill/decode with the ServeEngine.
+"""Serving example: weights distributed through the federation's data
+plane, then batched prefill/decode with the ServeEngine.
 
 Weight distribution is the paper's sweet spot — multi-GB objects where
 StashCache beats HTTP proxies (Table 3): the first serving host pulls the
 checkpoint from the origin and warms the pod cache; the other hosts load
-at cache speed.
+at cache speed.  Publish and restore both go through the one
+AnalyticPlane (``DataPlane.store`` → write-back cache; ``fetch`` →
+cache tier), and every transfer lands in a per-consumer FetchRollup.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -14,7 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import build_fleet_federation
+from repro.core import AnalyticPlane, build_fleet_federation
 from repro.models import init_lm
 from repro.serve import Request, ServeEngine
 from repro.train import FederatedCheckpointer
@@ -25,25 +27,25 @@ def main():
                               dtype="float32")
     params, _ = init_lm(jax.random.PRNGKey(0), cfg)
 
-    # Publish weights through the write-back cache to the origin.
+    # Publish weights through the plane's write path to the origin.
     fed = build_fleet_federation(num_pods=1, hosts_per_pod=8)
-    ck0 = FederatedCheckpointer("serve-demo", fed.writeback("pod0/cache"),
-                                fed.client("pod0", 0))
+    plane = AnalyticPlane(fed)
+    ck0 = FederatedCheckpointer("serve-demo", plane, site="pod0", worker=0)
     ck0.save(0, params)
-    print(f"published {ck0.stats.leaves} weight objects "
-          f"({ck0.stats.save_bytes / 1e6:.1f} MB) to the federation")
+    print(f"published {ck0.leaves} weight objects "
+          f"({ck0.stats.bytes_stored / 1e6:.1f} MB) to the federation")
 
-    # Eight serving hosts load them; host 0 warms the cache.
+    # Serving hosts load them through the cache tier; host 0 warms it.
     for host in range(2):
-        ck = FederatedCheckpointer("serve-demo",
-                                   fed.writeback("pod0/cache"),
-                                   fed.client("pod0", host))
+        ck = FederatedCheckpointer("serve-demo", plane,
+                                   site="pod0", worker=host)
         loaded, st = ck.restore(0, like=params)
         print(f"host{host}: restored in {st.seconds:.3f}s federation-time, "
               f"misses={st.cache_misses} hits={st.cache_hits}")
     params = loaded
 
-    engine = ServeEngine(cfg, params, batch_size=4, max_seq=96)
+    engine = ServeEngine(cfg, params, batch_size=4, max_seq=96,
+                         plane=plane, site="pod0", worker=1)
     rng = np.random.default_rng(0)
     requests = [Request(rid=i,
                         prompt=rng.integers(0, cfg.vocab_size, size=8 + i),
@@ -55,6 +57,14 @@ def main():
     print(f"engine: {engine.stats.prefills} prefills, "
           f"{engine.stats.decode_steps} decode steps, "
           f"{engine.stats.tokens_out} tokens out")
+
+    # The KV/weight-shard read path: re-fetch a published shard object
+    # the way the serving workload does (Zipf-popular model shards).
+    shard = "/ckpt/serve-demo/step_00000000/manifest.json"
+    res = engine.fetch_shard(shard, method="cvmfs")
+    print(f"shard fetch: {res.bytes} B from {res.source or 'local'} "
+          f"(hit={res.cache_hit}); serve data-plane hit rate "
+          f"{engine.data_stats.hit_rate:.2f}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,12 @@
 """End-to-end driver: train a ~100M-parameter LM for a few hundred steps,
 fed by the federation, with checkpoint/restart fault tolerance.
 
-The full production path in miniature: synthetic token shards published to
-the origin → per-pod caches → CVMFS-style chunk reads → FederatedDataLoader
-→ jitted train step → write-back checkpoints → injected failure at step 60
-→ automatic restore + exact replay.
+The full production path in miniature: synthetic token shards published
+through the data plane → per-pod caches → ranged cvmfs FetchRequests →
+FederatedDataLoader → jitted train step → write-back checkpoint stores →
+injected failure at step 60 → automatic restore + exact replay.  Loader
+and checkpointer both talk only to the one AnalyticPlane; their unified
+FetchRollups roll up into the Table-1-style consumer table.
 
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--arch qwen2-7b]
 """
@@ -13,7 +15,7 @@ import dataclasses
 import time
 
 from repro.configs import get_config
-from repro.core import build_fleet_federation
+from repro.core import AnalyticPlane, build_fleet_federation, consumer_table
 from repro.data import DatasetSpec, FederatedDataLoader, SyntheticTokens
 from repro.train import (AdamWConfig, FailureInjector, FederatedCheckpointer,
                          Trainer)
@@ -42,13 +44,13 @@ def main():
     print(f"config: {cfg.name}: {cfg.param_count() / 1e6:.0f}M params")
 
     fed = build_fleet_federation(num_pods=2, hosts_per_pod=8)
+    plane = AnalyticPlane(fed)
     spec = DatasetSpec("train-demo", vocab_size=cfg.vocab_size,
                        tokens_per_shard=1 << 18, num_shards=32)
     SyntheticTokens(spec).publish(fed.origins[0])
-    loader = FederatedDataLoader(fed.client("pod0", 0), spec,
-                                 global_batch=args.batch, seq_len=args.seq)
-    ck = FederatedCheckpointer("train-demo", fed.writeback("pod0/cache"),
-                               fed.client("pod0", 1))
+    loader = FederatedDataLoader(plane, spec, global_batch=args.batch,
+                                 seq_len=args.seq, site="pod0", worker=0)
+    ck = FederatedCheckpointer("train-demo", plane, site="pod0", worker=1)
     trainer = Trainer(cfg, loader,
                       AdamWConfig(lr=3e-3, warmup_steps=20,
                                   total_steps=args.steps),
@@ -66,6 +68,9 @@ def main():
     print(f"data-plane cache hit rate: {report.cache_hit_rate:.2f}")
     print(f"origin egress: {fed.origins[0].stats.egress_bytes / 1e6:.1f} MB "
           f"for {loader.stats.bytes_fetched / 1e6:.1f} MB consumed")
+    for row in consumer_table([loader.stats, ck.stats]):
+        print(f"  {row['consumer']}: {row['fetches']} fetches / "
+              f"{row['stores']} stores, hit rate {row['hit_rate']:.2f}")
     assert report.final_loss < report.losses[0], "loss must improve"
 
 

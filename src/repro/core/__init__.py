@@ -11,10 +11,10 @@ plane (``repro.core.api``): ``DataPlane`` with ``AnalyticPlane`` /
 on top of this package; ``repro.train.checkpoint`` uses it for
 restart-storm checkpoint distribution.
 """
-from .api import (AnalyticPlane, DataPlane, FetchRequest, FetchResult,
-                  ScenarioReport, ScenarioSpec, SimulatedPlane, StatResult,
-                  SweepCell, SweepReport, SweepSpec, WorkloadSpec,
-                  run_scenario, run_sweep)
+from .api import (AnalyticPlane, ClientPlane, DataPlane, FetchRequest,
+                  FetchResult, ScenarioReport, ScenarioSpec, SimulatedPlane,
+                  StatResult, SweepCell, SweepReport, SweepSpec,
+                  WorkloadSpec, run_scenario, run_sweep)
 from .cache import CacheServer, CacheStats
 from .chunk import (DEFAULT_CHUNK_SIZE, ChunkRef, ObjectMeta, Payload,
                     chunk_object, fnv1a64, synthetic_object)
@@ -28,9 +28,10 @@ from .federation import (Federation, FederationSpec, SiteSpec, TierSpec,
                          OSG_SITE_PROFILES)
 from .indexer import Catalog, Indexer
 from .monitoring import (CacheHealthMonitor, CacheUsagePacket, DecayGauge,
-                         FileClose, FileOpen, MessageBus, MonitorCollector,
-                         SpaceSavingTopK, SweepAggregator, TransferRecord,
-                         UsageAggregator, UserLogin, experiment_of)
+                         FetchRollup, FileClose, FileOpen, MessageBus,
+                         MonitorCollector, SpaceSavingTopK, SweepAggregator,
+                         TransferRecord, UsageAggregator, UserLogin,
+                         consumer_table, experiment_of)
 from .namespace import Namespace
 from .origin import ChunkStore, Origin
 from .planner import (PlannerSpec, PlanReport, apply_capacities,
@@ -55,9 +56,11 @@ from .topology import BandwidthProfile, Coord, GeoIPService, Link, Node, Topolog
 from .transfer import NetworkModel, TransferStats
 from .workload import (FILESIZE_PERCENTILES, PAPER_TABLE3, PROBE_10GB,
                        USAGE_BY_EXPERIMENT, AccessRequest, PercentileSampler,
-                       abusive_workload, evaluation_fileset,
+                       abusive_workload, checkpoint_restart_workload,
+                       dataloader_workload, evaluation_fileset,
                        flash_crowd_workload, generate_workload,
-                       herd_workload, storm_workload)
+                       herd_workload, shard_serving_workload, split_bytes,
+                       storm_workload)
 from .writeback import WritebackCache
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -56,8 +56,11 @@ from .simclient import (OutageSchedule, ScenarioEngine, ScenarioReport,
 from .simulator import direct_download, proxy_download, sparse_flow_problem
 from .topology import Coord
 from .transfer import TransferStats
-from .workload import (AccessRequest, abusive_workload, flash_crowd_workload,
-                       generate_workload, herd_workload, storm_workload)
+from .workload import (AccessRequest, abusive_workload,
+                       checkpoint_restart_workload, dataloader_workload,
+                       flash_crowd_workload, generate_workload,
+                       herd_workload, shard_serving_workload, split_bytes,
+                       storm_workload)
 
 GB = 10**9
 
@@ -68,7 +71,16 @@ GB = 10**9
 @dataclasses.dataclass
 class FetchRequest:
     """One named-data fetch: *what* (path), *where from* (site/worker),
-    *how* (method) and *when* (arrival time, simulated plane)."""
+    *how* (method) and *when* (arrival time, simulated plane).
+
+    ``offset``/``length`` select a byte range (``length=-1`` = to EOF);
+    only the analytic ``cvmfs`` method moves partial objects — the
+    simulated plane and the whole-file methods account the full object.
+    ``want_data=True`` asks for the assembled bytes on
+    :attr:`FetchResult.data` (analytic plane; the simulator moves no
+    real bytes).  ``avoid`` names a cache to skip for this request —
+    the hedging hook consumers use to force the next-nearest replica.
+    """
 
     path: str
     site: str = ""          # requesting site; "" = first worker-bearing site
@@ -78,12 +90,20 @@ class FetchRequest:
     size: int = 0           # size hint for publishing synthetic objects
     streams: int = 0        # 0 = plane default
     tenant: str = ""        # fair-share / quota accounting unit
+    offset: int = 0         # byte-range start (cvmfs partial reads)
+    length: int = -1        # byte-range length; -1 = through EOF
+    want_data: bool = False  # attach assembled bytes to the result
+    avoid: str = ""         # cache name to skip (hedged refetch)
 
     METHODS = ("stash", "cvmfs", "proxy", "direct")
 
     def __post_init__(self) -> None:
         if self.method not in self.METHODS:
             raise ValueError(f"unknown fetch method {self.method!r}")
+        if self.offset < 0:
+            raise ValueError(f"negative offset {self.offset}")
+        if self.length < -1:
+            raise ValueError(f"bad length {self.length} (use -1 for EOF)")
 
 
 @dataclasses.dataclass
@@ -117,6 +137,8 @@ class FetchResult:
     error: str = ""
     shed: bool = False      # refused by an admission queue (load shedding)
     queue_seconds: float = 0.0  # time parked in admission queues
+    local_hits: int = 0     # chunks served by the worker-local CVMFS cache
+    data: Optional[bytes] = None  # assembled bytes (want_data, analytic)
 
     @classmethod
     def from_transfer(cls, path: str, stats: TransferStats, *,
@@ -129,6 +151,7 @@ class FetchResult:
                               and stats.cache_hits > 0),
                    cache_hits=stats.cache_hits,
                    cache_misses=stats.cache_misses,
+                   local_hits=stats.local_hits,
                    source=stats.source, start=start)
 
 
@@ -176,6 +199,13 @@ class DataPlane(Protocol):
                   schedule: Optional[OutageSchedule] = None,
                   sequential: bool = False) -> List[FetchResult]: ...
 
+    def store(self, path: str, data: Union[bytes, int], site: str = "",
+              worker: int = 0) -> FetchResult: ...
+
+    def drain(self, max_objects: Optional[int] = None) -> FetchResult: ...
+
+    def paths(self, prefix: str = "/") -> List[str]: ...
+
 
 class _PlaneBase:
     """Namespace-first resolution shared by both engines."""
@@ -184,6 +214,9 @@ class _PlaneBase:
 
     def __init__(self, fed: Federation) -> None:
         self.fed = fed
+        # Per-cache write-back overlays, minted on first store() to that
+        # cache (the write path of the unified API).
+        self._writebacks: Dict[str, "WritebackCache"] = {}
 
     def stat(self, path: str) -> StatResult:
         try:
@@ -219,6 +252,55 @@ class _PlaneBase:
         if not req.site:
             req = dataclasses.replace(req, site=self._default_site())
         return req
+
+    # -- the write path ------------------------------------------------------
+    def store(self, path: str, data: Union[bytes, int], site: str = "",
+              worker: int = 0) -> FetchResult:
+        """Write an object through the *write-back cache tier*: bytes land
+        (pinned, dirty) in the cache nearest the requesting worker and the
+        write acks against cache residency; :meth:`drain` pushes dirty
+        objects to their owning origin under the drain rate limit.
+
+        Writes are accounted with the uncontended network model on both
+        engines (the simulator contends reads, not writes).
+        """
+        site = site or self._default_site()
+        node = _worker_node(self.fed, site, worker)
+        cache = self.fed.nearest_cache(node, path)
+        wb = self._writebacks.get(cache.name)
+        if wb is None:
+            wb = self._writebacks[cache.name] = self.fed.writeback(cache.name)
+        meta, st = wb.write(node, path, data)
+        return FetchResult(path=path, size=meta.size, method="writeback",
+                           plane=self.name, seconds=st.seconds,
+                           bytes=st.bytes, chunks=st.chunks,
+                           source=cache.name)
+
+    def drain(self, max_objects: Optional[int] = None) -> FetchResult:
+        """Flush every dirty write-back object to its origin."""
+        agg = FetchResult(path="", method="writeback-drain",
+                          plane=self.name)
+        for name in sorted(self._writebacks):
+            st = self._writebacks[name].drain(max_objects)
+            agg.seconds += st.seconds
+            agg.bytes += st.bytes
+            agg.chunks += st.chunks
+        agg.size = agg.bytes
+        return agg
+
+    def paths(self, prefix: str = "/") -> List[str]:
+        """Every federation path under ``prefix``: origin catalogs plus
+        dirty (not-yet-drained) write-back objects — read-your-writes."""
+        out: Set[str] = set()
+        for origin in self.fed.origins:
+            for meta in origin.list_objects():
+                if meta.path.startswith(prefix):
+                    out.add(meta.path)
+        for wb in self._writebacks.values():
+            for p in wb.dirty_paths():
+                if p.startswith(prefix):
+                    out.add(p)
+        return sorted(out)
 
 
 # ---------------------------------------------------------------------------
@@ -265,11 +347,26 @@ class AnalyticPlane(_PlaneBase):
     def fetch(self, request: Union[str, FetchRequest]) -> FetchResult:
         req = self._req(request)
         try:
+            if req.avoid:
+                return self._fetch_avoiding(req)
             return self._fetch(req)
         except (FileNotFoundError, ConnectionError, KeyError) as e:
             return FetchResult(path=req.path, method=req.method,
                                plane=self.name, start=req.at,
                                ok=False, error=f"{type(e).__name__}: {e}")
+
+    def _fetch_avoiding(self, req: FetchRequest) -> FetchResult:
+        """Serve ``req`` as if ``req.avoid`` were down — the hedged-
+        refetch hook: consumers race a straggler against the
+        next-nearest replica without reaching into the cache tier."""
+        cache = self.fed.caches.get(req.avoid)
+        if cache is None or not cache.available:
+            return self._fetch(req)
+        cache.available = False
+        try:
+            return self._fetch(req)
+        finally:
+            cache.available = True
 
     def _fetch(self, req: FetchRequest) -> FetchResult:
         client = self.client(req.site, req.worker)
@@ -295,9 +392,11 @@ class AnalyticPlane(_PlaneBase):
                         start=req.at, ok=False, shed=True,
                         source=queue_name,
                         error="shed: admission queue full")
+        data: Optional[bytes] = None
         if req.method == "stash":
             try:
-                _, stats = client.copy(req.path, methods=("xrootd", "http"))
+                data, stats = client.copy(req.path,
+                                          methods=("xrootd", "http"))
             except (FileNotFoundError, ConnectionError):
                 # Every ranked cache failed: like the simulated client,
                 # the federation degrades to a direct origin pull — but
@@ -310,7 +409,9 @@ class AnalyticPlane(_PlaneBase):
                 res.start = req.at
                 return res
         elif req.method == "cvmfs":
-            _, stats = client.read(req.path)
+            data, stats = client.read(
+                req.path, offset=req.offset,
+                length=req.length if req.length >= 0 else None)
         elif req.method == "proxy":
             res = self._fetch_proxy(req, client)
             res.start = req.at
@@ -321,6 +422,8 @@ class AnalyticPlane(_PlaneBase):
             return res
         res = FetchResult.from_transfer(req.path, stats, method=req.method,
                                         start=req.at)
+        if req.want_data:
+            res.data = data
         if queue_name is not None and queue_start is not None:
             wait = self.control.queue(queue_name).commit(
                 req.at, queue_start, res.seconds, req.tenant)
@@ -445,6 +548,8 @@ class SimulatedPlane(_PlaneBase):
         if req.method in ("stash", "cvmfs"):
             # The simulator models no worker-local cache; cvmfs degrades
             # to the cache-served path (same chunks, same accounting).
+            # Byte ranges and want_data degrade likewise: the fluid-flow
+            # sim moves whole synthetic objects, never real bytes.
             sc = self.engine.client(req.site, req.worker)
             yield from sc.download(req.path, meta=meta, result=res,
                                    tenant=req.tenant)
@@ -508,6 +613,139 @@ class SimulatedPlane(_PlaneBase):
 
 
 # ---------------------------------------------------------------------------
+# Legacy adapter: a DataPlane facade over bare client/writeback objects
+# ---------------------------------------------------------------------------
+class ClientPlane:
+    """Deprecation adapter: the :class:`DataPlane` surface over a bare
+    :class:`~repro.core.client.StashClient` and/or
+    :class:`~repro.core.writeback.WritebackCache`.
+
+    Exists only so pre-redesign call sites
+    (``FederatedDataLoader(client=...)``,
+    ``FederatedCheckpointer(writeback=..., client=...)``) keep working;
+    new code should build an :class:`AnalyticPlane` /
+    :class:`SimulatedPlane` from a :class:`Federation` and let the plane
+    mint clients.  The adapter serves ``cvmfs``/``stash`` fetches through
+    the held client, stores through the held write-back cache, and has no
+    federation (``fed is None``) — ``publish`` is unsupported.
+    """
+
+    name = "client"
+
+    def __init__(self, client: Optional[StashClient] = None,
+                 writeback=None) -> None:
+        if client is None and writeback is None:
+            raise ValueError("ClientPlane needs a client or a writeback")
+        self.client = client
+        self.writeback = writeback
+        self.fed = None
+
+    # -- reads ---------------------------------------------------------------
+    def stat(self, path: str) -> StatResult:
+        meta = None
+        if self.client is not None:
+            meta = self.client._meta(path)
+        if meta is None and self.writeback is not None:
+            meta = self.writeback.cache.locate_meta(path)
+        if meta is None:
+            return StatResult(path=path, found=False)
+        return StatResult(path=path, found=True, size=meta.size,
+                          num_chunks=meta.num_chunks,
+                          chunk_size=meta.chunk_size)
+
+    def publish(self, path: str, data: Union[bytes, int],
+                mtime: float = 0.0) -> StatResult:
+        raise NotImplementedError(
+            "the legacy ClientPlane adapter holds no federation; "
+            "publish through an AnalyticPlane/SimulatedPlane")
+
+    def fetch(self, request: Union[str, FetchRequest]) -> FetchResult:
+        req = (FetchRequest(path=request) if isinstance(request, str)
+               else request)
+        if self.client is None:
+            return FetchResult(path=req.path, method=req.method,
+                               plane=self.name, ok=False,
+                               error="RuntimeError: adapter holds no client")
+        try:
+            if req.avoid:
+                cache = self.client.caches.get(req.avoid)
+                if cache is not None and cache.available:
+                    cache.available = False
+                    try:
+                        return self._fetch(req)
+                    finally:
+                        cache.available = True
+            return self._fetch(req)
+        except (FileNotFoundError, ConnectionError, KeyError,
+                RuntimeError) as e:
+            return FetchResult(path=req.path, method=req.method,
+                               plane=self.name, start=req.at,
+                               ok=False, error=f"{type(e).__name__}: {e}")
+
+    def _fetch(self, req: FetchRequest) -> FetchResult:
+        if req.method == "cvmfs":
+            data, stats = self.client.read(
+                req.path, offset=req.offset,
+                length=req.length if req.length >= 0 else None)
+        elif req.method == "stash":
+            data, stats = self.client.copy(req.path,
+                                           methods=("xrootd", "http"))
+        else:
+            raise RuntimeError(
+                f"legacy adapter serves stash/cvmfs only, not "
+                f"{req.method!r}")
+        res = FetchResult.from_transfer(req.path, stats, method=req.method,
+                                        start=req.at)
+        if req.want_data:
+            res.data = data
+        res.plane = self.name
+        return res
+
+    def fetch_all(self, requests: Sequence[FetchRequest],
+                  schedule: Optional[OutageSchedule] = None,
+                  sequential: bool = False) -> List[FetchResult]:
+        if schedule is not None and len(schedule):
+            raise NotImplementedError(
+                "the legacy ClientPlane adapter cannot apply outages")
+        return [self.fetch(r) for r in requests]
+
+    # -- writes --------------------------------------------------------------
+    def store(self, path: str, data: Union[bytes, int], site: str = "",
+              worker: int = 0) -> FetchResult:
+        if self.writeback is None:
+            raise RuntimeError("adapter holds no write-back cache")
+        node = (self.client.node.name if self.client is not None
+                else self.writeback.cache.node.name)
+        meta, st = self.writeback.write(node, path, data)
+        return FetchResult(path=path, size=meta.size, method="writeback",
+                           plane=self.name, seconds=st.seconds,
+                           bytes=st.bytes, chunks=st.chunks,
+                           source=self.writeback.cache.name)
+
+    def drain(self, max_objects: Optional[int] = None) -> FetchResult:
+        if self.writeback is None:
+            raise RuntimeError("adapter holds no write-back cache")
+        st = self.writeback.drain(max_objects)
+        return FetchResult(path="", size=st.bytes, method="writeback-drain",
+                           plane=self.name, seconds=st.seconds,
+                           bytes=st.bytes, chunks=st.chunks)
+
+    def paths(self, prefix: str = "/") -> List[str]:
+        if self.writeback is None:
+            raise RuntimeError("adapter holds no write-back cache")
+        out: Set[str] = set()
+        for r in self.writeback.redirectors.members:
+            for origin in r.origins.values():
+                for meta in origin.list_objects():
+                    if meta.path.startswith(prefix):
+                        out.add(meta.path)
+        for p in self.writeback.dirty_paths():
+            if p.startswith(prefix):
+                out.add(p)
+        return sorted(out)
+
+
+# ---------------------------------------------------------------------------
 # Declarative scenarios
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -515,9 +753,20 @@ class WorkloadSpec:
     """A declarative workload: a restart ``storm`` (every worker pulls
     the same object) or a production-shaped ``zipf`` trace (Table 2
     sizes, Table 1 experiment mix).  ``sites=None`` targets every
-    worker-bearing site of the federation."""
+    worker-bearing site of the federation.
 
-    kind: str = "zipf"   # "zipf" | "storm" | "herd" | "abusive" | "flash_crowd"
+    The model-traffic kinds turn LM training/serving into federation
+    workloads (see :meth:`from_model_config`): ``restart`` — every
+    worker re-fetches a sharded checkpoint's manifest plus its
+    model-parallel rank's shards; ``serve`` — Zipf-popular reads over a
+    model's weight shards; ``dataloader`` — sequential striped dataset
+    reads.  For those, ``path`` is the object prefix, ``n_objects`` the
+    shard count and ``total_bytes`` the exact byte total the shard
+    sizes sum to.
+    """
+
+    kind: str = "zipf"   # "zipf" | "storm" | "herd" | "abusive" |
+    #                      "flash_crowd" | "restart" | "serve" | "dataloader"
     sites: Optional[Sequence[str]] = None
     # zipf trace knobs
     n_requests: int = 100
@@ -551,17 +800,128 @@ class WorkloadSpec:
     crowd_factor: float = 3.0
     crowd_at: float = 0.0
     crowd_duration: float = 120.0
+    # model-traffic knobs (restart/serve/dataloader; ``path`` is the
+    # object prefix, ``n_objects`` the shard count, ``waves`` doubles as
+    # the dataloader epoch count)
+    total_bytes: int = 0             # exact checkpoint/model/dataset bytes
+    manifest_bytes: int = 64_000     # restart: the shard manifest object
+    tp_degree: int = 1               # restart: model-parallel shard fan-out
+    step_gap: float = 1.0            # dataloader: seconds between shards
+    model: str = ""                  # provenance (from_model_config)
 
-    KINDS = ("zipf", "storm", "herd", "abusive", "flash_crowd")
+    KINDS = ("zipf", "storm", "herd", "abusive", "flash_crowd",
+             "restart", "serve", "dataloader")
 
     def __post_init__(self) -> None:
         if self.kind not in self.KINDS:
             raise ValueError(f"unknown workload kind {self.kind!r}")
 
+    @classmethod
+    def from_model_config(cls, cfg, kind: str = "restart", *,
+                          dataset=None, shard_bytes: int = GB,
+                          **overrides) -> "WorkloadSpec":
+        """Build a model-traffic workload from an
+        :class:`~repro.configs.base.ArchConfig` — scenario authors never
+        hand-compute shard sizes.
+
+        ``restart``/``serve`` size the shard set from
+        ``cfg.param_count()`` × the parameter dtype width (bfloat16 = 2
+        bytes), split into ``ceil(total / shard_bytes)`` shards;
+        ``dataloader`` sizes it from a
+        :class:`~repro.data.dataset.DatasetSpec` (a default one is
+        derived from the config when not given).  The generated shard
+        sizes are validated to sum *exactly* to the byte total, and a
+        restart workload is additionally checked for full checkpoint
+        coverage per site.
+        """
+        if kind not in ("restart", "serve", "dataloader"):
+            raise ValueError(
+                f"from_model_config builds restart/serve/dataloader "
+                f"workloads, not {kind!r}")
+        if kind == "dataloader":
+            if dataset is None:
+                from ..data.dataset import DatasetSpec
+                dataset = DatasetSpec(cfg.name, vocab_size=cfg.vocab_size)
+            total = dataset.shard_bytes * dataset.num_shards
+            defaults = dict(kind=kind, path=dataset.prefix,
+                            total_bytes=total,
+                            n_objects=dataset.num_shards, model=cfg.name)
+        else:
+            width = {"bfloat16": 2, "float16": 2, "float32": 4,
+                     "float64": 8, "int8": 1}.get(cfg.dtype)
+            if width is None:
+                raise ValueError(f"unknown parameter dtype {cfg.dtype!r}")
+            total = cfg.param_count() * width
+            n_shards = max(1, -(-total // int(shard_bytes)))
+            prefix = (f"/ckpt/{cfg.name}/step_00000000" if kind == "restart"
+                      else f"/models/{cfg.name}")
+            defaults = dict(kind=kind, path=prefix, total_bytes=total,
+                            n_objects=n_shards, model=cfg.name)
+        defaults.update(overrides)
+        spec = cls(**defaults)
+        # The invariant the satellite asks for: generated request sizes
+        # reconcile against the config's byte totals, exactly.
+        sizes = split_bytes(spec.total_bytes, max(spec.n_objects, 1))
+        if sum(sizes) != spec.total_bytes:
+            raise ValueError(
+                f"shard sizes sum to {sum(sizes)}, expected "
+                f"{spec.total_bytes}")
+        if spec.kind == "restart" and \
+                spec.workers_per_site >= spec.tp_degree:
+            per_site = sum(sz for p, sz in spec.object_bytes().items()
+                           if not p.endswith("manifest.json"))
+            if per_site != spec.total_bytes:
+                raise ValueError(
+                    f"restart workload covers {per_site} bytes per site, "
+                    f"expected the full checkpoint ({spec.total_bytes})")
+        return spec
+
+    def object_bytes(self) -> Dict[str, int]:
+        """Distinct object sizes this workload touches (single-site dry
+        run; paths and sizes are site-independent) — what the byte-total
+        validation and synthetic publishing reconcile against."""
+        out: Dict[str, int] = {}
+        for r in self._trace(["probe-site"]):
+            out[r.path] = max(out.get(r.path, 0), r.size)
+        return out
+
     def build(self, fed: Federation, method: str = "stash"
               ) -> List[FetchRequest]:
         sites = (list(self.sites) if self.sites
                  else [s.name for s in fed.sites if s.workers > 0])
+        trace = self._trace(sites)
+        hosts = {s.name: max(1, s.workers) for s in fed.sites}
+        return [FetchRequest(path=r.path, site=r.site,
+                             worker=r.worker % hosts.get(r.site, 1),
+                             method=method, at=r.time, size=r.size,
+                             tenant=(self.tenant or r.tenant
+                                     or r.experiment))
+                for r in trace]
+
+    def _trace(self, sites: Sequence[str]) -> List[AccessRequest]:
+        if self.kind == "restart":
+            return checkpoint_restart_workload(
+                sites, prefix=self.path, total_bytes=self.total_bytes,
+                n_shards=max(self.n_objects, 1),
+                workers_per_site=self.workers_per_site,
+                tp_degree=self.tp_degree, at=self.at, jitter=self.jitter,
+                seed=self.seed, manifest_bytes=self.manifest_bytes,
+                tenant=self.tenant or "restart")
+        if self.kind == "serve":
+            return shard_serving_workload(
+                sites, prefix=self.path, total_bytes=self.total_bytes,
+                n_shards=max(self.n_objects, 1),
+                n_requests=self.n_requests, duration=self.duration,
+                zipf_a=self.zipf_a, seed=self.seed,
+                tenant=self.tenant or "serving")
+        if self.kind == "dataloader":
+            return dataloader_workload(
+                sites, prefix=self.path, total_bytes=self.total_bytes,
+                n_shards=max(self.n_objects, 1),
+                workers_per_site=self.workers_per_site,
+                epochs=max(self.waves, 1), at=self.at,
+                step_gap=self.step_gap,
+                tenant=self.tenant or "dataloader")
         if self.kind == "storm":
             trace = storm_workload(sites, path=self.path, size=self.size,
                                    at=self.at,
@@ -606,13 +966,7 @@ class WorkloadSpec:
                                       working_set=self.working_set,
                                       zipf_a=self.zipf_a,
                                       tenants=self.tenants)
-        hosts = {s.name: max(1, s.workers) for s in fed.sites}
-        return [FetchRequest(path=r.path, site=r.site,
-                             worker=r.worker % hosts.get(r.site, 1),
-                             method=method, at=r.time, size=r.size,
-                             tenant=(self.tenant or r.tenant
-                                     or r.experiment))
-                for r in trace]
+        return trace
 
 
 @dataclasses.dataclass
@@ -902,8 +1256,13 @@ def _apply_axis(spec: ScenarioSpec, axis: str, value) -> ScenarioSpec:
 
 def _workload_horizon(workload) -> float:
     if isinstance(workload, WorkloadSpec):
-        if workload.kind == "zipf":
+        if workload.kind in ("zipf", "abusive", "flash_crowd", "serve"):
             return workload.duration
+        if workload.kind == "dataloader":
+            shards_per_worker = -(-max(workload.n_objects, 1)
+                                  // max(workload.workers_per_site, 1))
+            return (workload.at + max(workload.waves, 1)
+                    * shards_per_worker * workload.step_gap + 60.0)
         return workload.at + workload.jitter + 60.0
     times = [r.at if isinstance(r, FetchRequest) else r.time
              for r in workload]
@@ -1035,8 +1394,11 @@ def _sweep_batchable(spec: ScenarioSpec) -> bool:
         return False
     if not isinstance(spec.workload, WorkloadSpec):
         for r in spec.workload:
-            if isinstance(r, FetchRequest) and r.method not in ("stash",
-                                                                "direct"):
+            if isinstance(r, FetchRequest) and (
+                    r.method not in ("stash", "direct")
+                    or r.offset or r.length >= 0 or r.avoid):
+                # ranged / cache-avoiding requests move partial objects
+                # the whole-object kernels don't model
                 return False
     for s in spec.federation.sites:
         if s.has_cache and s.eviction_policy not in ("lru", "fifo"):

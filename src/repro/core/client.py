@@ -256,6 +256,7 @@ class StashClient:
             local = self.local.get(path, ref.index)
             if local is not None:
                 self.stats.local_hits += 1
+                stats.local_hits += 1
                 payload = local
             else:
                 self.stats.local_misses += 1

@@ -104,6 +104,116 @@ def experiment_of(path: str) -> str:
     return parts[0] if parts else "unknown"
 
 
+@dataclasses.dataclass
+class FetchRollup:
+    """Per-consumer rollup over :class:`~repro.core.api.FetchResult`s —
+    the unified stats model for data-plane consumers (data loader,
+    checkpointer, serve engine).
+
+    Every result a consumer sees goes through :meth:`add`; the rollup
+    keeps the aggregate the consumer used to account privately
+    (``bytes_fetched`` / ``fetch_seconds`` / ``hit_rate`` ...) plus a
+    per-method breakdown, so :func:`consumer_table` can build the
+    training/serving analogue of the paper's Table-1 usage table.
+    ``local_hits`` (worker-local CVMFS chunks) count toward
+    :attr:`hit_rate` — the best hit of all — but stay separate from
+    ``cache_hits`` so site-tier accounting still reconciles against the
+    federation's own counters.
+    """
+
+    consumer: str = ""
+    fetches: int = 0
+    stores: int = 0
+    steps: int = 0               # consumer-defined unit (loader batches)
+    bytes_fetched: int = 0
+    bytes_stored: int = 0
+    fetch_seconds: float = 0.0
+    store_seconds: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    local_hits: int = 0
+    chunks: int = 0
+    hedged: int = 0
+    sheds: int = 0
+    errors: int = 0
+    queue_seconds: float = 0.0
+    by_method: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, res) -> "FetchRollup":
+        """Fold one FetchResult (store results — method ``writeback*`` —
+        land in the store lanes, everything else in the fetch lanes)."""
+        method = res.method or "unknown"
+        bucket = self.by_method.setdefault(
+            method, {"count": 0, "bytes": 0, "seconds": 0.0})
+        bucket["count"] += 1
+        bucket["bytes"] += res.bytes
+        bucket["seconds"] += res.seconds
+        if method.startswith("writeback"):
+            self.stores += 1
+            self.bytes_stored += res.bytes
+            self.store_seconds += res.seconds
+        else:
+            self.fetches += 1
+            self.bytes_fetched += res.bytes
+            self.fetch_seconds += res.seconds
+        self.cache_hits += res.cache_hits
+        self.cache_misses += res.cache_misses
+        self.local_hits += getattr(res, "local_hits", 0)
+        self.chunks += res.chunks
+        if getattr(res, "hedged", False):
+            self.hedged += 1
+        if getattr(res, "shed", False):
+            self.sheds += 1
+        if not res.ok:
+            self.errors += 1
+        self.queue_seconds += getattr(res, "queue_seconds", 0.0)
+        return self
+
+    def tick(self) -> None:
+        self.steps += 1
+
+    @property
+    def hit_rate(self) -> float:
+        served = self.cache_hits + self.local_hits
+        total = served + self.cache_misses
+        return served / total if total else 0.0
+
+    def merge(self, other: "FetchRollup") -> "FetchRollup":
+        for f in ("fetches", "stores", "steps", "bytes_fetched",
+                  "bytes_stored", "fetch_seconds", "store_seconds",
+                  "cache_hits", "cache_misses", "local_hits", "chunks",
+                  "hedged", "sheds", "errors", "queue_seconds"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        for m, b in other.by_method.items():
+            mine = self.by_method.setdefault(
+                m, {"count": 0, "bytes": 0, "seconds": 0.0})
+            for k in mine:
+                mine[k] += b[k]
+        return self
+
+
+def consumer_table(rollups) -> List[Dict[str, object]]:
+    """Per-consumer usage rows (most bytes first) — the training/serving
+    analogue of the paper's Table-1 per-experiment usage table."""
+    rows = []
+    for r in sorted(rollups, key=lambda r: -(r.bytes_fetched
+                                             + r.bytes_stored)):
+        rows.append({
+            "consumer": r.consumer,
+            "fetches": r.fetches,
+            "stores": r.stores,
+            "bytes_fetched": r.bytes_fetched,
+            "bytes_stored": r.bytes_stored,
+            "seconds": r.fetch_seconds + r.store_seconds,
+            "hit_rate": round(r.hit_rate, 6),
+            "hedged": r.hedged,
+            "sheds": r.sheds,
+            "errors": r.errors,
+        })
+    return rows
+
+
 class MessageBus:
     """The OSG message bus: fan-out to subscribed databases/aggregators."""
 

@@ -27,13 +27,21 @@ DEFAULT_TCP_WINDOW = 16 * 2**20  # 16 MiB
 
 @dataclasses.dataclass
 class TransferStats:
-    """Accounting for one logical transfer (possibly many chunks)."""
+    """Accounting for one logical transfer (possibly many chunks).
+
+    ``local_hits`` counts chunks served from the *worker-local* CVMFS
+    cache — those never reach the site cache tier, so they are kept out
+    of ``cache_hits`` (which the engine-parity tests hold equal across
+    planes) but still matter to consumers like the data loader whose
+    hit-rate includes the best hit of all.
+    """
 
     bytes: int = 0
     seconds: float = 0.0
     chunks: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
+    local_hits: int = 0
     method: str = ""
     source: str = ""
 
@@ -43,6 +51,7 @@ class TransferStats:
         self.chunks += other.chunks
         self.cache_hits += other.cache_hits
         self.cache_misses += other.cache_misses
+        self.local_hits += other.local_hits
         if other.source:
             self.source = other.source
         return self

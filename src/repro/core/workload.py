@@ -108,6 +108,114 @@ class AccessRequest:
     tenant: str = ""  # fair-share accounting unit; defaults to experiment
 
 
+def split_bytes(total: int, n: int) -> List[int]:
+    """``n`` shard sizes summing *exactly* to ``total`` (the remainder is
+    spread one byte each over the first ``total % n`` shards) — the
+    canonical sizing every model-traffic generator uses, so request sizes
+    always reconcile against the checkpoint/dataset byte total."""
+    if n <= 0:
+        raise ValueError(f"need at least one shard, got {n}")
+    base, rem = divmod(int(total), n)
+    return [base + (1 if i < rem else 0) for i in range(n)]
+
+
+def checkpoint_restart_workload(sites: Sequence[str], prefix: str,
+                                total_bytes: int, n_shards: int,
+                                workers_per_site: int = 1,
+                                tp_degree: int = 1,
+                                at: float = 0.0, jitter: float = 0.0,
+                                seed: int = 0,
+                                manifest_bytes: int = 64 * KB,
+                                tenant: str = "restart"
+                                ) -> List[AccessRequest]:
+    """A training restart storm over a *sharded* checkpoint.
+
+    After a preemption every worker re-fetches the shard manifest, then
+    the parameter shards its model-parallel rank owns (shard ``i`` is
+    owned by rank ``i % tp_degree``; worker ``w`` holds rank
+    ``w % tp_degree``).  With ``tp_degree=1`` every worker re-reads the
+    whole checkpoint — the classic every-pod-refetches-a-33B-checkpoint
+    storm; with ``tp_degree=k`` each shard is pulled ``workers/k`` times
+    per site, the fan-in a pod cache collapses to one origin read.
+    """
+    if tp_degree <= 0:
+        raise ValueError(f"tp_degree must be positive, got {tp_degree}")
+    rng = random.Random(seed)
+    sizes = split_bytes(total_bytes, n_shards)
+    out: List[AccessRequest] = []
+    for s in sites:
+        for w in range(workers_per_site):
+            t = at + (rng.uniform(0.0, jitter) if jitter > 0 else 0.0)
+            out.append(AccessRequest(
+                time=t, site=s, worker=w,
+                path=f"{prefix}/manifest.json", size=manifest_bytes,
+                experiment="checkpoint-restart", tenant=tenant))
+            rank = w % tp_degree
+            for i in range(rank, n_shards, tp_degree):
+                out.append(AccessRequest(
+                    time=t, site=s, worker=w,
+                    path=f"{prefix}/shard_{i:05d}", size=sizes[i],
+                    experiment="checkpoint-restart", tenant=tenant))
+    out.sort(key=lambda r: r.time)
+    return out
+
+
+def shard_serving_workload(sites: Sequence[str], prefix: str,
+                           total_bytes: int, n_shards: int,
+                           n_requests: int = 256,
+                           duration: float = 3600.0,
+                           zipf_a: float = 1.2, seed: int = 0,
+                           tenant: str = "serving"
+                           ) -> List[AccessRequest]:
+    """Model-shard serving traffic: Zipf-popular reads over the shards of
+    one model (hot layers / embedding shards dominate), sized so the
+    shard set sums exactly to the model's byte total."""
+    rng = random.Random(seed)
+    sizes = split_bytes(total_bytes, n_shards)
+    ranks = [1.0 / (k + 1) ** zipf_a for k in range(n_shards)]
+    site_list = list(sites)
+    out: List[AccessRequest] = []
+    for _ in range(n_requests):
+        k = rng.choices(range(n_shards), weights=ranks)[0]
+        out.append(AccessRequest(
+            time=rng.uniform(0.0, duration),
+            site=rng.choice(site_list),
+            worker=rng.randrange(0, 1 << 16),
+            path=f"{prefix}/shard_{k:05d}", size=sizes[k],
+            experiment="shard-serving", tenant=tenant))
+    out.sort(key=lambda r: r.time)
+    return out
+
+
+def dataloader_workload(sites: Sequence[str], prefix: str,
+                        total_bytes: int, n_shards: int,
+                        workers_per_site: int = 1, epochs: int = 1,
+                        at: float = 0.0, step_gap: float = 1.0,
+                        tenant: str = "dataloader"
+                        ) -> List[AccessRequest]:
+    """Sequential striped dataset reads: worker ``w`` of each site walks
+    shards ``w, w+W, w+2W, ...`` in order (one shard per ``step_gap``
+    seconds), so a site's workers collectively sweep the whole dataset
+    once per epoch — the training data path's access pattern.
+    Deterministic (no randomness): restart-safe like the loader itself."""
+    sizes = split_bytes(total_bytes, n_shards)
+    stride = max(workers_per_site, 1)
+    per_worker = -(-n_shards // stride)  # ceil: epoch length in steps
+    out: List[AccessRequest] = []
+    for e in range(epochs):
+        for s in sites:
+            for w in range(workers_per_site):
+                owned = range(w % stride, n_shards, stride)
+                for k, i in enumerate(owned):
+                    out.append(AccessRequest(
+                        time=at + (e * per_worker + k) * step_gap,
+                        site=s, worker=w,
+                        path=f"{prefix}/shard_{i:05d}", size=sizes[i],
+                        experiment="dataloader", tenant=tenant))
+    out.sort(key=lambda r: r.time)
+    return out
+
+
 def storm_workload(sites: Sequence[str], path: str = "/ckpt/step/params",
                    size: int = 2 * GB, at: float = 0.0,
                    workers_per_site: int = 1, jitter: float = 0.0,

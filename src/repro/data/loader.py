@@ -2,57 +2,74 @@
 
 Each training step needs ``(global_batch × seq_len)`` tokens.  The loader
 maps ``step → (shard, offset)`` deterministically (restart-safe: resuming
-at step k re-reads exactly the right slice), fetches the covering chunks
-from the *nearest pod cache* via the CVMFS-style client (partial reads —
-only the chunks overlapping the slice move), and assembles the batch.
+at step k re-reads exactly the right slice), issues ranged ``cvmfs``
+:class:`~repro.core.api.FetchRequest`s against the federation's
+:class:`~repro.core.api.DataPlane` (partial reads — only the chunks
+overlapping the slice move), and assembles the batch.
 
-Fleet behaviours layered on the paper's client:
+Fleet behaviours layered on the paper's data plane:
   * **prefetch** — a sliding window of future steps is fetched eagerly so
     the accelerator never waits on the federation (double buffering);
-  * **straggler mitigation / hedging** — if the nearest cache is down or
-    a fetch estimate exceeds ``hedge_after`` × the median, the fetch is
-    retried against the next-nearest cache (the client's failover chain);
-  * **locality accounting** — per-step TransferStats feed the monitoring
-    pipeline, so cache hit rates during training are observable exactly
-    like paper Fig. 4.
+  * **straggler mitigation / hedging** — if a fetch is a straggler vs the
+    recent median (``hedge_after``×), it is re-issued with
+    ``FetchRequest.avoid`` naming the cache that served it, racing the
+    next-nearest replica;
+  * **locality accounting** — every :class:`~repro.core.api.FetchResult`
+    folds into a :class:`~repro.core.monitoring.FetchRollup`, the unified
+    per-consumer stats model the monitoring pipeline aggregates (paper
+    Fig. 4 / Table 1, but for training traffic).
+
+Migration from the pre-DataPlane API:
+
+    ===============================  =====================================
+    before (deprecated)              after
+    ===============================  =====================================
+    ``FederatedDataLoader(          ``plane = AnalyticPlane(fed)``
+    client, spec, ...)``             ``FederatedDataLoader(plane, spec,
+                                     ..., site="pod0", worker=0)``
+    ``loader.stats`` (LoaderStats)   ``loader.stats`` (FetchRollup —
+                                     same field names plus per-method
+                                     breakdown)
+    ===============================  =====================================
+
+Passing a bare ``StashClient`` still works — it is wrapped in a
+:class:`~repro.core.api.ClientPlane` with a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, Dict, Iterator, List, Optional, Tuple
+import warnings
+from typing import Deque, Dict, Iterator, List, Tuple
 
 import numpy as np
 
-from ..core.client import StashClient
-from ..core.transfer import TransferStats
+from ..core.api import ClientPlane, DataPlane, FetchRequest
+from ..core.monitoring import FetchRollup
 from .dataset import DatasetSpec, TOKEN_DTYPE, decode_tokens
 
-
-@dataclasses.dataclass
-class LoaderStats:
-    steps: int = 0
-    bytes_fetched: int = 0
-    fetch_seconds: float = 0.0
-    cache_hits: int = 0
-    cache_misses: int = 0
-    hedged: int = 0
-
-    @property
-    def hit_rate(self) -> float:
-        tot = self.cache_hits + self.cache_misses
-        return self.cache_hits / tot if tot else 0.0
+# The loader's stats *are* the unified rollup now; the old name stays
+# importable for pre-redesign call sites.
+LoaderStats = FetchRollup
 
 
 class FederatedDataLoader:
     """Deterministic step→tokens mapping over federation shard objects."""
 
-    def __init__(self, client: StashClient, spec: DatasetSpec,
+    def __init__(self, plane: DataPlane, spec: DatasetSpec,
                  global_batch: int, seq_len: int,
                  rank: int = 0, world: int = 1,
                  prefetch: int = 2,
-                 hedge_after: float = 4.0) -> None:
-        self.client = client
+                 hedge_after: float = 4.0,
+                 site: str = "", worker: int = 0) -> None:
+        if not hasattr(plane, "fetch"):
+            # Legacy call site: first argument was a bare StashClient.
+            warnings.warn(
+                "FederatedDataLoader(client=...) is deprecated; pass a "
+                "DataPlane (e.g. AnalyticPlane(fed)) and site/worker",
+                DeprecationWarning, stacklevel=2)
+            plane = ClientPlane(client=plane)
+        self.plane = plane
         self.spec = spec
         self.global_batch = global_batch
         self.seq_len = seq_len
@@ -60,7 +77,9 @@ class FederatedDataLoader:
         self.world = world
         self.prefetch_depth = prefetch
         self.hedge_after = hedge_after
-        self.stats = LoaderStats()
+        self.site = site
+        self.worker = worker
+        self.stats = FetchRollup("loader")
         self._buffer: Dict[int, np.ndarray] = {}
         self._fetch_times: Deque[float] = collections.deque(maxlen=32)
 
@@ -93,43 +112,35 @@ class FederatedDataLoader:
     # -- fetching -----------------------------------------------------------
     def _fetch_slice(self, shard: int, tok_off: int,
                      tok_count: int) -> np.ndarray:
-        path = self.spec.shard_path(shard)
-        byte_off = tok_off * TOKEN_DTYPE().itemsize
-        byte_len = tok_count * TOKEN_DTYPE().itemsize
-        local_before = self.client.stats.local_hits
-        raw, st = self.client.read(path, offset=byte_off, length=byte_len)
-        self._account(st)
-        # the worker-local (CVMFS) cache is the best hit of all
-        self.stats.cache_hits += self.client.stats.local_hits - local_before
+        itemsize = TOKEN_DTYPE().itemsize
+        req = FetchRequest(
+            path=self.spec.shard_path(shard), site=self.site,
+            worker=self.worker, method="cvmfs",
+            offset=tok_off * itemsize, length=tok_count * itemsize,
+            want_data=True, tenant="loader")
+        res = self.plane.fetch(req)
+        self.stats.add(res)
+        if not res.ok:
+            raise RuntimeError(f"shard fetch failed: {res.error}")
         # Hedge: if this fetch is a straggler vs the recent median,
-        # retry against the next-nearest cache and take the fast copy.
-        if self._fetch_times and st.seconds > self.hedge_after * \
-                float(np.median(self._fetch_times)):
+        # re-issue avoiding the cache that served it and take the fast
+        # copy (the next-nearest replica races the straggler).
+        if self._fetch_times and res.source and res.seconds > \
+                self.hedge_after * float(np.median(self._fetch_times)):
             self.stats.hedged += 1
-            self.client.stats.hedged_fetches = getattr(
-                self.client.stats, "hedged_fetches", 0) + 1
-            primary = self.client.geoip.nearest(
-                self.client.node.name, list(self.client.caches))[0]
-            backup = self.client.caches.get(primary)
-            if backup is not None:
-                backup_was = backup.available
-                backup.available = False       # force next-nearest
-                try:
-                    raw2, st2 = self.client.read(path, offset=byte_off,
-                                                 length=byte_len)
-                    self._account(st2)
-                    if st2.seconds < st.seconds and raw2 is not None:
-                        raw = raw2
-                finally:
-                    backup.available = backup_was
-        self._fetch_times.append(st.seconds)
-        return decode_tokens(raw)
-
-    def _account(self, st: TransferStats) -> None:
-        self.stats.bytes_fetched += st.bytes
-        self.stats.fetch_seconds += st.seconds
-        self.stats.cache_hits += st.cache_hits
-        self.stats.cache_misses += st.cache_misses
+            res2 = self.plane.fetch(
+                dataclasses.replace(req, avoid=res.source))
+            self.stats.add(res2)
+            if res2.ok and res2.seconds < res.seconds and \
+                    res2.data is not None:
+                res = res2
+        self._fetch_times.append(res.seconds)
+        if res.data is None:
+            raise RuntimeError(
+                f"plane {self.plane.name!r} returned no bytes for "
+                f"{req.path!r}; the loader needs a byte-bearing plane "
+                f"(analytic)")
+        return decode_tokens(res.data)
 
     def fetch_step(self, step: int) -> np.ndarray:
         if step in self._buffer:
@@ -151,7 +162,7 @@ class FederatedDataLoader:
     # -- the train-loop interface ----------------------------------------------
     def batch(self, step: int) -> Dict[str, np.ndarray]:
         arr = self.fetch_step(step)
-        self.stats.steps += 1
+        self.stats.tick()
         self.prefetch(step + 1)
         return {"tokens": arr[:, :-1].astype(np.int32),
                 "labels": arr[:, 1:].astype(np.int32)}

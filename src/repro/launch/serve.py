@@ -12,7 +12,7 @@ import jax
 import numpy as np
 
 from ..configs import get_config
-from ..core import build_fleet_federation
+from ..core import AnalyticPlane, build_fleet_federation
 from ..models import init_lm
 from ..serve import Request, ServeEngine
 from ..train import FederatedCheckpointer
@@ -31,19 +31,19 @@ def main(argv=None) -> int:
                               dtype="float32")
     params, _ = init_lm(jax.random.PRNGKey(0), cfg)
 
-    # Publish → restore through the pod cache (weight distribution).
+    # Publish → restore through the data plane (weight distribution).
     fed = build_fleet_federation(num_pods=1, hosts_per_pod=4)
-    ck = FederatedCheckpointer("serve", fed.writeback("pod0/cache"),
-                               fed.client("pod0", 0))
+    plane = AnalyticPlane(fed)
+    ck = FederatedCheckpointer("serve", plane, site="pod0", worker=0)
     ck.save(0, params)
     params, st = FederatedCheckpointer(
-        "serve", fed.writeback("pod0/cache"),
-        fed.client("pod0", 1)).restore(0, like=params)
+        "serve", plane, site="pod0", worker=1).restore(0, like=params)
     print(f"weights via federation: {st.bytes / 1e6:.1f} MB, "
           f"hits={st.cache_hits} misses={st.cache_misses}")
 
     engine = ServeEngine(cfg, params, batch_size=args.batch,
-                         max_seq=args.max_seq)
+                         max_seq=args.max_seq, plane=plane,
+                         site="pod0", worker=1)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size, size=8),

@@ -12,7 +12,7 @@ from __future__ import annotations
 import argparse
 
 from ..configs import get_config
-from ..core import build_fleet_federation
+from ..core import AnalyticPlane, build_fleet_federation
 from ..data import DatasetSpec, FederatedDataLoader, SyntheticTokens
 from ..train import (AdamWConfig, FailureInjector, FederatedCheckpointer,
                      Trainer)
@@ -40,11 +40,11 @@ def main(argv=None) -> int:
     spec = DatasetSpec("launch", vocab_size=cfg.vocab_size,
                        tokens_per_shard=1 << 16, num_shards=16)
     SyntheticTokens(spec).publish(fed.origins[0])
-    loader = FederatedDataLoader(fed.client("pod0", 0), spec,
-                                 global_batch=args.batch, seq_len=args.seq)
-    ck = FederatedCheckpointer(f"launch-{args.arch}",
-                               fed.writeback("pod0/cache"),
-                               fed.client("pod0", 1))
+    plane = AnalyticPlane(fed)
+    loader = FederatedDataLoader(plane, spec, global_batch=args.batch,
+                                 seq_len=args.seq, site="pod0", worker=0)
+    ck = FederatedCheckpointer(f"launch-{args.arch}", plane,
+                               site="pod0", worker=1)
     trainer = Trainer(cfg, loader,
                       AdamWConfig(lr=args.lr, warmup_steps=5,
                                   total_steps=max(args.steps, 10)),

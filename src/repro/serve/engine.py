@@ -6,10 +6,13 @@ A deliberately small but real continuous-batching-lite engine:
   * prefill uses :func:`forward_with_cache` (one pass, cache populated);
   * decode advances all active slots one token per step with the shared
     ``decode_step`` (ring-buffer KV for windowed layers);
-  * model weights can be *distributed to serving hosts through the
-    federation* (see ``examples/serve_lm.py``) — weight distribution is a
-    large-file problem, exactly the regime where the paper shows StashCache
-    beats HTTP proxies.
+  * model weights are *distributed to serving hosts through the
+    federation's data plane* (:meth:`ServeEngine.from_federation`, weight
+    shards via :meth:`ServeEngine.fetch_shard`) — weight distribution is
+    a large-file problem, exactly the regime where the paper shows
+    StashCache beats HTTP proxies.  Every fetch folds into
+    ``engine.data_stats`` (the unified
+    :class:`~repro.core.monitoring.FetchRollup`).
 """
 from __future__ import annotations
 
@@ -21,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
+from ..core.api import DataPlane, FetchRequest, FetchResult
+from ..core.monitoring import FetchRollup
 from ..models import decode_step, forward_with_cache
 
 
@@ -46,7 +51,8 @@ class ServeEngine:
 
     def __init__(self, cfg: ArchConfig, params, batch_size: int = 4,
                  max_seq: int = 256, greedy: bool = True,
-                 seed: int = 0) -> None:
+                 seed: int = 0, plane: Optional[DataPlane] = None,
+                 site: str = "", worker: int = 0) -> None:
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -54,8 +60,50 @@ class ServeEngine:
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
+        self.plane = plane
+        self.site = site
+        self.worker = worker
+        self.data_stats = FetchRollup("serve")
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
+
+    # -- federation weight path ----------------------------------------
+    @classmethod
+    def from_federation(cls, cfg: ArchConfig, plane: DataPlane, run: str,
+                        step: Optional[int] = None, *, site: str = "",
+                        worker: int = 0, like=None,
+                        **engine_kw) -> "ServeEngine":
+        """Build an engine whose weights arrive through the data plane:
+        restore the newest (or given) checkpoint of ``run`` via the
+        federation's cache tier and account the fetches on
+        ``engine.data_stats``.  ``like`` is the parameter-tree template;
+        omitted, a fresh :func:`~repro.models.init_lm` tree is used."""
+        from ..train.checkpoint import FederatedCheckpointer
+        ck = FederatedCheckpointer(run, plane, site=site, worker=worker)
+        if step is None:
+            step = ck.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint for run {run!r}")
+        if like is None:
+            from ..models import init_lm
+            like, _ = init_lm(jax.random.PRNGKey(0), cfg)
+        params, _ = ck.restore(step, like=like)
+        eng = cls(cfg, params, plane=plane, site=site, worker=worker,
+                  **engine_kw)
+        eng.data_stats.merge(ck.stats)
+        return eng
+
+    def fetch_shard(self, path: str, method: str = "stash") -> FetchResult:
+        """Pull one weight/KV shard object through the data plane (the
+        serving-traffic read path — Zipf-popular shard objects under
+        ``/models/<name>``)."""
+        if self.plane is None:
+            raise RuntimeError("engine was built without a data plane")
+        res = self.plane.fetch(FetchRequest(
+            path=path, site=self.site, worker=self.worker, method=method,
+            tenant="serving"))
+        self.data_stats.add(res)
+        return res
 
     # ------------------------------------------------------------------
     def _prefill_batch(self, prompts: np.ndarray):

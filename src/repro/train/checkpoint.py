@@ -1,9 +1,10 @@
 """Federation-backed checkpointing — restart storms through pod caches.
 
-Saves go through the **write-back cache** (the paper's §6 future work):
-the training job acks as soon as bytes land in the pod cache; the drain to
-the origin is rate-limited so a 512-host synchronous save cannot melt the
-storage fabric.
+Saves go through the data plane's **write path** (``DataPlane.store``,
+the paper's §6 write-back future work): the training job acks as soon as
+bytes land in the pod cache; ``DataPlane.drain`` pushes dirty objects to
+the origin under a rate limit so a 512-host synchronous save cannot melt
+the storage fabric.
 
 Restores are the paper's headline scenario inverted onto the fleet: after
 a preemption, every host of a pod re-reads the same checkpoint objects —
@@ -16,20 +17,40 @@ Layout: one federation object per parameter leaf (so a host restoring a
 
     /ckpt/<run>/step_<k>/manifest.json
     /ckpt/<run>/step_<k>/<leaf.path>.npy
+
+Migration from the pre-DataPlane API:
+
+    ===================================  =================================
+    before (deprecated)                  after
+    ===================================  =================================
+    ``FederatedCheckpointer(run,         ``plane = AnalyticPlane(fed)``
+    writeback, client)``                 ``FederatedCheckpointer(run,
+                                         plane, site="pod0", worker=0)``
+    ``save(...) -> TransferStats``       ``save(...) -> FetchResult``
+    ``restore(...) ->                    ``restore(...) ->
+    (tree, TransferStats)``              (tree, FetchResult)``
+    ``ck.stats`` (CheckpointStats)       ``ck.stats`` (FetchRollup:
+                                         ``bytes_stored``/``bytes_fetched``
+                                         replace ``save_bytes``/
+                                         ``restore_bytes``)
+    ===================================  =================================
+
+The legacy ``(run, writeback, client)`` form still works — the pair is
+wrapped in a :class:`~repro.core.api.ClientPlane` with a
+``DeprecationWarning``.
 """
 from __future__ import annotations
 
-import dataclasses
 import io
 import json
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-from ..core.client import StashClient
-from ..core.transfer import TransferStats
-from ..core.writeback import WritebackCache
+from ..core.api import ClientPlane, DataPlane, FetchRequest, FetchResult
+from ..core.monitoring import FetchRollup
 
 
 def _leaf_paths(tree) -> List[Tuple[str, Any]]:
@@ -59,32 +80,47 @@ def _decode_array(raw: bytes) -> np.ndarray:
     return np.load(io.BytesIO(raw), allow_pickle=False)
 
 
-@dataclasses.dataclass
-class CheckpointStats:
-    save_bytes: int = 0
-    save_seconds: float = 0.0
-    restore_bytes: int = 0
-    restore_seconds: float = 0.0
-    leaves: int = 0
+def _fold(agg: FetchResult, res: FetchResult) -> None:
+    agg.seconds += res.seconds
+    agg.bytes += res.bytes
+    agg.chunks += res.chunks
+    agg.cache_hits += res.cache_hits
+    agg.cache_misses += res.cache_misses
+    agg.local_hits += res.local_hits
+    agg.size = agg.bytes
 
 
 class FederatedCheckpointer:
-    def __init__(self, run: str, writeback: WritebackCache,
-                 client: StashClient) -> None:
+    """Checkpoint save/restore through a :class:`DataPlane`."""
+
+    def __init__(self, run: str, plane: DataPlane, client=None, *,
+                 site: str = "", worker: int = 0) -> None:
+        if not hasattr(plane, "fetch"):
+            # Legacy call site: (run, writeback, client).
+            warnings.warn(
+                "FederatedCheckpointer(run, writeback, client) is "
+                "deprecated; pass a DataPlane (e.g. AnalyticPlane(fed)) "
+                "and site/worker", DeprecationWarning, stacklevel=2)
+            plane = ClientPlane(client=client, writeback=plane)
         self.run = run
-        self.writeback = writeback
-        self.client = client
-        self.stats = CheckpointStats()
+        self.plane = plane
+        self.site = site
+        self.worker = worker
+        self.stats = FetchRollup("checkpointer")
+        self.leaves = 0
 
     def prefix(self, step: int) -> str:
         return f"/ckpt/{self.run}/step_{step:08d}"
 
     # -- save ---------------------------------------------------------------
-    def save(self, step: int, state, drain: bool = True) -> TransferStats:
-        """Write state via the write-back cache; optionally drain now."""
-        agg = TransferStats(method="checkpoint-save")
+    def save(self, step: int, state, drain: bool = True) -> FetchResult:
+        """Write state through the plane's write-back path; optionally
+        drain to the origin now.  Returns the aggregate store result
+        (drain time is accounted in ``stats``, not the return — acks
+        happen at cache residency)."""
+        agg = FetchResult(path=self.prefix(step), method="checkpoint-save",
+                          plane=getattr(self.plane, "name", ""))
         manifest = {"step": step, "leaves": []}
-        node = self.client.node.name
         for name, leaf in _leaf_paths(state):
             arr = np.asarray(leaf)
             if arr.dtype == jax.numpy.bfloat16:
@@ -92,53 +128,60 @@ class FederatedCheckpointer:
                 stored_dtype = "bfloat16"
             else:
                 stored_dtype = str(arr.dtype)
-            raw = _encode_array(arr)
             path = f"{self.prefix(step)}/{name}.npy"
-            _, st = self.writeback.write(node, path, raw)
-            agg.add(st)
+            res = self.plane.store(path, _encode_array(arr),
+                                   site=self.site, worker=self.worker)
+            self.stats.add(res)
+            _fold(agg, res)
             manifest["leaves"].append(
                 {"name": name, "path": path, "dtype": stored_dtype,
                  "shape": list(arr.shape)})
-        _, st = self.writeback.write(
-            node, f"{self.prefix(step)}/manifest.json",
-            json.dumps(manifest).encode())
-        agg.add(st)
+        res = self.plane.store(f"{self.prefix(step)}/manifest.json",
+                               json.dumps(manifest).encode(),
+                               site=self.site, worker=self.worker)
+        self.stats.add(res)
+        _fold(agg, res)
         if drain:
-            self.writeback.drain()
-        self.stats.save_bytes += agg.bytes
-        self.stats.save_seconds += agg.seconds
-        self.stats.leaves = len(manifest["leaves"])
+            self.stats.add(self.plane.drain())
+        self.leaves = len(manifest["leaves"])
         return agg
 
     # -- restore --------------------------------------------------------------
     def latest_step(self) -> Optional[int]:
-        """Scan the origin catalog for the newest complete checkpoint."""
+        """Newest checkpoint the plane can see (origin catalogs plus
+        not-yet-drained write-back objects — read-your-writes)."""
         best = None
-        for origin in self.writeback.redirectors.members[0].origins.values():
-            for meta in origin.list_objects():
-                p = meta.path
-                if p.startswith(f"/ckpt/{self.run}/") and \
-                        p.endswith("manifest.json"):
-                    step = int(p.split("step_")[1].split("/")[0])
-                    best = step if best is None else max(best, step)
+        for p in self.plane.paths(f"/ckpt/{self.run}/"):
+            if p.endswith("manifest.json"):
+                step = int(p.split("step_")[1].split("/")[0])
+                best = step if best is None else max(best, step)
         return best
 
-    def restore(self, step: int, like=None) -> Tuple[Any, TransferStats]:
+    def _fetch(self, path: str) -> FetchResult:
+        res = self.plane.fetch(FetchRequest(
+            path=path, site=self.site, worker=self.worker,
+            method="cvmfs", want_data=True, tenant="checkpoint"))
+        self.stats.add(res)
+        if not res.ok or res.data is None:
+            raise FileNotFoundError(res.error or path)
+        return res
+
+    def restore(self, step: int, like=None) -> Tuple[Any, FetchResult]:
         """Fetch a checkpoint through the nearest cache."""
-        agg = TransferStats(method="checkpoint-restore")
-        raw, st = self.client.read(f"{self.prefix(step)}/manifest.json")
-        agg.add(st)
-        manifest = json.loads(raw.decode())
+        agg = FetchResult(path=self.prefix(step),
+                          method="checkpoint-restore",
+                          plane=getattr(self.plane, "name", ""))
+        res = self._fetch(f"{self.prefix(step)}/manifest.json")
+        _fold(agg, res)
+        manifest = json.loads(res.data.decode())
         leaves: Dict[str, np.ndarray] = {}
         for entry in manifest["leaves"]:
-            raw, st = self.client.read(entry["path"])
-            agg.add(st)
-            arr = _decode_array(raw)
+            res = self._fetch(entry["path"])
+            _fold(agg, res)
+            arr = _decode_array(res.data)
             if entry["dtype"] == "bfloat16":
                 arr = arr.astype(jax.numpy.bfloat16)
             leaves[entry["name"]] = arr
-        self.stats.restore_bytes += agg.bytes
-        self.stats.restore_seconds += agg.seconds
         if like is None:
             return leaves, agg
         named = _leaf_paths(like)

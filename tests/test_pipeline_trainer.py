@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import build_fleet_federation
+from repro.core import AnalyticPlane, build_fleet_federation
 from repro.data import DatasetSpec, FederatedDataLoader, SyntheticTokens
 from repro.models import init_lm
 from repro.serve import Request, ServeEngine
@@ -25,9 +25,9 @@ def make_stack(vocab, batch=4, seq=16, shards=8):
     spec = DatasetSpec("toy", vocab_size=vocab, tokens_per_shard=1 << 12,
                        num_shards=shards)
     SyntheticTokens(spec).publish(fed.origins[0])
-    client = fed.client("pod0", 0)
-    loader = FederatedDataLoader(client, spec, global_batch=batch,
-                                 seq_len=seq)
+    plane = AnalyticPlane(fed)
+    loader = FederatedDataLoader(plane, spec, global_batch=batch,
+                                 seq_len=seq, site="pod0", worker=0)
     return fed, spec, loader
 
 
@@ -53,10 +53,12 @@ class TestLoader:
         assert loader.stats.hit_rate > 0.3  # prefetch + reuse → hits
 
     def test_rank_partitioning_disjoint(self):
-        fed, spec, _ = make_stack(vocab=256)
-        c0, c1 = fed.client("pod0", 1), fed.client("pod1", 1)
-        l0 = FederatedDataLoader(c0, spec, 4, 16, rank=0, world=2)
-        l1 = FederatedDataLoader(c1, spec, 4, 16, rank=1, world=2)
+        fed, spec, loader = make_stack(vocab=256)
+        plane = loader.plane
+        l0 = FederatedDataLoader(plane, spec, 4, 16, rank=0, world=2,
+                                 site="pod0", worker=1)
+        l1 = FederatedDataLoader(plane, spec, 4, 16, rank=1, world=2,
+                                 site="pod1", worker=1)
         b0, b1 = l0.batch(0), l1.batch(0)
         assert b0["tokens"].shape == (2, 16)
         assert not np.array_equal(b0["tokens"], b1["tokens"])
@@ -64,8 +66,8 @@ class TestLoader:
 
 class TestTrainerFaultTolerance:
     def _trainer(self, fed, loader, cfg, every=4):
-        wb = fed.writeback("pod0/cache")
-        ck = FederatedCheckpointer("run1", wb, fed.client("pod0", 2))
+        ck = FederatedCheckpointer("run1", loader.plane,
+                                   site="pod0", worker=2)
         return Trainer(cfg, loader,
                        AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100),
                        checkpointer=ck, checkpoint_every=every)
@@ -107,13 +109,13 @@ class TestTrainerFaultTolerance:
         tr = self._trainer(fed, loader, cfg, every=2)
         tr.run(2)
         origin_before = fed.origins[0].stats.egress_bytes
-        c1 = fed.client("pod0", 5)
-        ck1 = FederatedCheckpointer("run1", fed.writeback("pod0/cache"), c1)
+        ck1 = FederatedCheckpointer("run1", AnalyticPlane(fed),
+                                    site="pod0", worker=5)
         ck1.restore(2, like=tr.state)
         egress_first = fed.origins[0].stats.egress_bytes - origin_before
         mid = fed.origins[0].stats.egress_bytes
-        c2 = fed.client("pod0", 6)
-        ck2 = FederatedCheckpointer("run1", fed.writeback("pod0/cache"), c2)
+        ck2 = FederatedCheckpointer("run1", AnalyticPlane(fed),
+                                    site="pod0", worker=6)
         _, st = ck2.restore(2, like=tr.state)
         egress_second = fed.origins[0].stats.egress_bytes - mid
         assert st.cache_misses == 0          # all from pod cache

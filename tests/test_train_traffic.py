@@ -1,0 +1,353 @@
+"""LM training/serving traffic through the federation DataPlane.
+
+The api_redesign's test surface: model-derived WorkloadSpecs hold
+engine parity, checkpoints round-trip byte-exactly through the plane,
+the loader's unified FetchRollup reconciles against the raw
+FetchResults it folded, and the pre-redesign call sites keep working
+behind DeprecationWarnings.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (AnalyticPlane, ClientPlane, FederationSpec,
+                        FetchRollup, ScenarioSpec, WorkloadSpec,
+                        build_fleet_federation, consumer_table,
+                        run_scenario, split_bytes)
+from repro.data import DatasetSpec, FederatedDataLoader, SyntheticTokens
+from repro.train import FederatedCheckpointer
+
+GB = 1 << 30
+PARITY_FIELDS = ("bytes_moved", "cache_hits", "cache_misses",
+                 "origin_egress_bytes")
+
+
+def _fleet(pods=2, hosts=4):
+    return FederationSpec.fleet(num_pods=pods, hosts_per_pod=hosts)
+
+
+class TestWorkloadGeneration:
+    def test_split_bytes_sums_exactly(self):
+        for total, n in ((10, 3), (1, 1), (0, 4), (68_506_296_320, 64)):
+            sizes = split_bytes(total, n)
+            assert len(sizes) == n
+            assert sum(sizes) == total
+            assert max(sizes) - min(sizes) <= 1
+
+    def test_from_model_config_restart_byte_total(self):
+        cfg = get_config("deepseek-coder-33b", smoke=False)
+        ws = WorkloadSpec.from_model_config(cfg, kind="restart",
+                                            shard_bytes=GB)
+        assert ws.total_bytes == cfg.param_count() * 2   # bf16
+        assert ws.n_objects == -(-ws.total_bytes // GB)
+        shards = {p: b for p, b in ws.object_bytes().items()
+                  if not p.endswith("manifest.json")}
+        assert sum(shards.values()) == ws.total_bytes
+        assert ws.model == cfg.name
+
+    def test_from_model_config_rejects_other_kinds(self):
+        cfg = get_config("qwen2-7b", smoke=True)
+        with pytest.raises(ValueError, match="restart/serve/dataloader"):
+            WorkloadSpec.from_model_config(cfg, kind="storm")
+
+    def test_restart_covers_full_checkpoint_per_site(self):
+        """With workers >= tp_degree every site pulls every shard."""
+        cfg = get_config("qwen2-7b", smoke=True)
+        ws = WorkloadSpec.from_model_config(
+            cfg, kind="restart", shard_bytes=1 << 20,
+            workers_per_site=8, tp_degree=4)
+        fed = _fleet(pods=1, hosts=8).build()
+        reqs = ws.build(fed)
+        fetched = {r.path: r.size for r in reqs
+                   if not r.path.endswith("manifest.json")}
+        assert sum(fetched.values()) == ws.total_bytes
+
+    def test_thousand_pod_restart_spec(self):
+        """The acceptance-scenario spec: 8 sites x 125 workers, tp=25,
+        from the real 33B byte total."""
+        cfg = get_config("deepseek-coder-33b", smoke=False)
+        ws = WorkloadSpec.from_model_config(
+            cfg, kind="restart", shard_bytes=GB,
+            workers_per_site=125, tp_degree=25)
+        fed = _fleet(pods=8, hosts=125).build()
+        reqs = ws.build(fed)
+        # every one of the 1000 workers fetches the manifest once
+        manifests = [r for r in reqs if r.path.endswith("manifest.json")]
+        assert len(manifests) == 8 * 125
+        # shard i is pulled by the 125/25 = 5 rank-sharers per site
+        by_path: dict = {}
+        for r in reqs:
+            if not r.path.endswith("manifest.json"):
+                by_path[r.path] = by_path.get(r.path, 0) + 1
+        assert set(by_path.values()) == {8 * (125 // 25)}
+        assert len(by_path) == ws.n_objects
+
+    def test_dataloader_kind_is_deterministic(self):
+        ws = WorkloadSpec(kind="dataloader", path="/datasets/d",
+                          n_objects=8, total_bytes=8 << 20,
+                          workers_per_site=4)
+        fed = _fleet(pods=1, hosts=4).build()
+        a = [(r.path, r.at, r.worker) for r in ws.build(fed)]
+        b = [(r.path, r.at, r.worker) for r in ws.build(fed)]
+        assert a == b
+
+
+class TestEngineParity:
+    """One workload, two interchangeable engines — the redesign's core
+    invariant, held for all three model-traffic kinds."""
+
+    def _both(self, ws):
+        reps = {}
+        for engine in ("analytic", "sim"):
+            reps[engine] = run_scenario(ScenarioSpec(
+                name=f"parity/{ws.kind}/{engine}", federation=_fleet(),
+                workload=ws, engine=engine))
+        return reps
+
+    @pytest.mark.parametrize("kind", ["restart", "serve"])
+    def test_model_kinds_parity(self, kind):
+        cfg = get_config("qwen2-7b", smoke=True)
+        ws = WorkloadSpec.from_model_config(
+            cfg, kind=kind, shard_bytes=1 << 20, workers_per_site=4,
+            tp_degree=2, n_requests=64)
+        reps = self._both(ws)
+        for f in PARITY_FIELDS:
+            assert getattr(reps["analytic"], f) == \
+                getattr(reps["sim"], f), (kind, f)
+        assert reps["sim"].bytes_moved > 0
+
+    def test_dataloader_parity(self):
+        ws = WorkloadSpec(kind="dataloader", path="/datasets/d",
+                          n_objects=16, total_bytes=16 << 20,
+                          workers_per_site=4, step_gap=1.0)
+        reps = self._both(ws)
+        for f in PARITY_FIELDS:
+            assert getattr(reps["analytic"], f) == \
+                getattr(reps["sim"], f), f
+
+    def test_restart_cache_collapses_egress(self):
+        """tp rank-sharers per shard -> cached egress is 1/sharers of
+        direct (plus the shared manifest), deterministically."""
+        cfg = get_config("qwen2-7b", smoke=True)
+        ws = WorkloadSpec.from_model_config(
+            cfg, kind="restart", shard_bytes=1 << 20,
+            workers_per_site=8, tp_degree=4)
+        cached = run_scenario(ScenarioSpec(
+            name="e/c", federation=_fleet(pods=1, hosts=8), workload=ws,
+            method="stash", engine="analytic"))
+        direct = run_scenario(ScenarioSpec(
+            name="e/d", federation=_fleet(pods=1, hosts=8), workload=ws,
+            method="direct", engine="analytic"))
+        assert direct.origin_egress_bytes > \
+            1.5 * cached.origin_egress_bytes
+
+
+class TestCheckpointRoundtrip:
+    def _plane(self):
+        return AnalyticPlane(_fleet().build())
+
+    def test_save_restore_byte_exact(self):
+        plane = self._plane()
+        ck = FederatedCheckpointer("rt", plane, site="pod0", worker=0)
+        rng = np.random.default_rng(0)
+        state = {"params": {"w": rng.normal(size=(33, 7))
+                            .astype(np.float32),
+                            "b": rng.integers(0, 99, size=(11,))
+                            .astype(np.int32)},
+                 "step": np.asarray(3, np.int64)}
+        ck.save(3, state)
+        ck2 = FederatedCheckpointer("rt", plane, site="pod1", worker=0)
+        tree, res = ck2.restore(3, like=state)
+        assert res.ok
+        np.testing.assert_array_equal(tree["params"]["w"],
+                                      state["params"]["w"])
+        np.testing.assert_array_equal(tree["params"]["b"],
+                                      state["params"]["b"])
+        assert tree["params"]["w"].dtype == np.float32
+        assert tree["params"]["b"].dtype == np.int32
+
+    def test_latest_step_scans_plane_paths(self):
+        plane = self._plane()
+        ck = FederatedCheckpointer("rt", plane, site="pod0", worker=0)
+        assert ck.latest_step() is None
+        st = {"w": np.zeros((4,), np.float32)}
+        ck.save(2, st)
+        ck.save(8, st)
+        assert ck.latest_step() == 8
+
+    def test_stats_split_store_and_fetch_lanes(self):
+        plane = self._plane()
+        ck = FederatedCheckpointer("rt", plane, site="pod0", worker=0)
+        st = {"w": np.ones((128,), np.float32)}
+        ck.save(1, st)
+        assert ck.stats.stores > 0
+        assert ck.stats.fetches == 0
+        assert ck.stats.bytes_stored >= st["w"].nbytes
+        ck.restore(1, like=st)
+        assert ck.stats.fetches > 0
+        rows = consumer_table([ck.stats])
+        assert rows[0]["consumer"] == "checkpointer"
+        assert rows[0]["bytes_fetched"] > 0
+
+
+class TestLoaderRollup:
+    def _stack(self):
+        fed = build_fleet_federation(num_pods=1, hosts_per_pod=4)
+        spec = DatasetSpec("toy", vocab_size=128,
+                           tokens_per_shard=1 << 12, num_shards=4)
+        SyntheticTokens(spec).publish(fed.origins[0])
+        return AnalyticPlane(fed), spec
+
+    def test_rollup_matches_fetch_results(self):
+        """loader.stats must be exactly the fold of every FetchResult
+        the plane returned — no private accounting on the side."""
+        plane, spec = self._stack()
+        captured = []
+        inner = plane.fetch
+
+        def spy(req):
+            res = inner(req)
+            captured.append(res)
+            return res
+
+        plane.fetch = spy
+        loader = FederatedDataLoader(plane, spec, global_batch=4,
+                                     seq_len=16, site="pod0", worker=0)
+        for s in range(4):
+            loader.batch(s)
+        st = loader.stats
+        assert st.fetches == len(captured)
+        assert st.bytes_fetched == sum(r.bytes for r in captured)
+        assert st.cache_hits == sum(r.cache_hits for r in captured)
+        assert st.cache_misses == sum(r.cache_misses for r in captured)
+        assert st.local_hits == sum(r.local_hits for r in captured)
+        assert st.steps == 4
+        want_hits = st.cache_hits + st.local_hits
+        want_total = want_hits + st.cache_misses
+        assert st.hit_rate == pytest.approx(want_hits / want_total)
+
+    def test_by_method_breakdown(self):
+        plane, spec = self._stack()
+        loader = FederatedDataLoader(plane, spec, global_batch=4,
+                                     seq_len=16, site="pod0", worker=0)
+        loader.batch(0)
+        assert set(loader.stats.by_method) == {"cvmfs"}
+
+
+class TestDeprecationShims:
+    def _fed(self):
+        fed = build_fleet_federation(num_pods=1, hosts_per_pod=4)
+        spec = DatasetSpec("toy", vocab_size=128,
+                           tokens_per_shard=1 << 12, num_shards=4)
+        SyntheticTokens(spec).publish(fed.origins[0])
+        return fed, spec
+
+    def test_loader_accepts_bare_client_with_warning(self):
+        fed, spec = self._fed()
+        with pytest.warns(DeprecationWarning, match="DataPlane"):
+            loader = FederatedDataLoader(fed.client("pod0", 0), spec,
+                                         global_batch=4, seq_len=16)
+        assert isinstance(loader.plane, ClientPlane)
+        b = loader.batch(0)
+        assert b["tokens"].shape == (4, 16)
+        assert loader.stats.fetches > 0
+
+    def test_checkpointer_accepts_writeback_with_warning(self):
+        fed, _ = self._fed()
+        st = {"w": np.arange(64, dtype=np.float32)}
+        with pytest.warns(DeprecationWarning, match="DataPlane"):
+            ck = FederatedCheckpointer("legacy", fed.writeback("pod0/cache"),
+                                       fed.client("pod0", 0))
+        ck.save(1, st)
+        tree, res = ck.restore(1, like=st)
+        assert res.ok
+        np.testing.assert_array_equal(tree["w"], st["w"])
+
+    def test_legacy_and_plane_paths_agree(self):
+        """Same dataset, same step: the shim must produce the same batch
+        as the first-class plane path."""
+        fed, spec = self._fed()
+        plane_loader = FederatedDataLoader(AnalyticPlane(fed), spec,
+                                           global_batch=4, seq_len=16,
+                                           site="pod0", worker=1)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            legacy_loader = FederatedDataLoader(fed.client("pod0", 2),
+                                                spec, global_batch=4,
+                                                seq_len=16)
+        np.testing.assert_array_equal(plane_loader.batch(5)["tokens"],
+                                      legacy_loader.batch(5)["tokens"])
+
+
+class TestNoDirectClientRefs:
+    """Acceptance: the consumers hold no concrete transport types —
+    only the DataPlane protocol."""
+
+    @pytest.mark.parametrize("modname", ["repro.data.loader",
+                                         "repro.train.checkpoint",
+                                         "repro.serve.engine"])
+    def test_no_stash_client_or_writeback_imports(self, modname):
+        import importlib
+        mod = importlib.import_module(modname)
+        names = set(vars(mod))
+        assert "StashClient" not in names, modname
+        assert "WritebackCache" not in names, modname
+
+
+class TestServeEngineFetchPath:
+    def test_from_federation_restores_and_serves(self):
+        import dataclasses as dc
+
+        import jax
+
+        from repro.serve import Request, ServeEngine
+        cfg = dc.replace(get_config("qwen2-7b", smoke=True),
+                         dtype="float32")
+        from repro.models import init_lm
+        params, _ = init_lm(jax.random.PRNGKey(0), cfg)
+        fed = _fleet(pods=1, hosts=4).build()
+        plane = AnalyticPlane(fed)
+        ck = FederatedCheckpointer("srv", plane, site="pod0", worker=0)
+        ck.save(0, params)
+        eng = ServeEngine.from_federation(cfg, plane, "srv", step=0,
+                                          site="pod0", worker=1,
+                                          like=params,
+                                          batch_size=1, max_seq=64)
+        assert eng.data_stats.fetches > 0
+        out = eng.generate([Request(0, np.arange(6), max_new_tokens=3)])
+        assert out[0].done
+
+    def test_fetch_shard_folds_into_data_stats(self):
+        import dataclasses as dc
+
+        import jax
+
+        from repro.models import init_lm
+        from repro.serve import ServeEngine
+        cfg = dc.replace(get_config("qwen2-7b", smoke=True),
+                         dtype="float32")
+        params, _ = init_lm(jax.random.PRNGKey(0), cfg)
+        fed = _fleet(pods=1, hosts=4).build()
+        plane = AnalyticPlane(fed)
+        ck = FederatedCheckpointer("srv", plane, site="pod0", worker=0)
+        ck.save(0, {"params": params})
+        eng = ServeEngine(cfg, params, batch_size=1, max_seq=64,
+                          plane=plane, site="pod0", worker=2)
+        res = eng.fetch_shard(ck.prefix(0) + "/manifest.json",
+                              method="cvmfs")
+        assert res.ok
+        assert eng.data_stats.fetches == 1
+        assert eng.data_stats.by_method.get("cvmfs")
+
+
+def test_fetch_rollup_merge_is_total():
+    a, b = FetchRollup("x"), FetchRollup("x")
+    r = dataclasses.replace  # noqa: F841  (kept for symmetry with api)
+    a.fetches, a.bytes_fetched, a.cache_hits = 2, 100, 1
+    b.fetches, b.bytes_fetched, b.cache_misses = 3, 50, 2
+    a.merge(b)
+    assert (a.fetches, a.bytes_fetched) == (5, 150)
+    assert (a.cache_hits, a.cache_misses) == (1, 2)
