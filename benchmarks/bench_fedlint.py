@@ -1,0 +1,61 @@
+"""fedlint gate profile: strict analysis counts + sanitizer smoke.
+
+Runs the static analyzer over ``src/repro`` with the committed
+``fedlint.toml`` baseline and the determinism sanitizer's quick
+profile, then writes ``artifacts/fedlint.json`` so
+``check_regression.py`` can pin the numbers like any perf metric:
+``fedlint_violations`` at 0 (a new unsuppressed violation fails CI) and
+``fedlint_suppressions`` at the reviewed baseline count (suppression
+creep fails CI until the baseline is re-reviewed and re-baselined).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.analysis import run_analysis
+from repro.analysis.sanitize import run_sanitizer
+
+HERE = Path(__file__).parent
+REPO = HERE.parent
+ARTIFACTS = HERE / "artifacts"
+ARTIFACT_FILES = ("fedlint.json",)
+
+
+def run(quick: bool = True, verbose: bool = False):
+    t0 = time.perf_counter()
+    violations, entries = run_analysis(
+        [REPO / "src" / "repro"], root=REPO,
+        baseline=REPO / "fedlint.toml")
+    lint_us = (time.perf_counter() - t0) * 1e6
+    active = [v for v in violations if not v.suppressed]
+
+    t0 = time.perf_counter()
+    sanitizer_rows = run_sanitizer(quick=quick)
+    sanitize_us = (time.perf_counter() - t0) * 1e6
+
+    ARTIFACTS.mkdir(exist_ok=True, parents=True)
+    (ARTIFACTS / "fedlint.json").write_text(json.dumps({
+        "violations": len(active),
+        "suppressed": len(violations) - len(active),
+        "baseline_entries": len(entries),
+        "active": [v.to_json() for v in active],
+        "sanitizer": {
+            "checks": len(sanitizer_rows),
+            "rows": [{"check": c, "scenario": s, **stats}
+                     for c, s, stats in sanitizer_rows],
+        },
+    }, indent=1))
+
+    rows = [
+        ("fedlint.strict", lint_us,
+         f"violations={len(active)} suppressed="
+         f"{len(violations) - len(active)}"),
+        ("fedlint.sanitize", sanitize_us,
+         f"checks={len(sanitizer_rows)}"),
+    ]
+    if verbose:
+        for name, us, derived in rows:
+            print(f"  {name}: {us / 1e6:.2f}s  {derived}")
+    return rows

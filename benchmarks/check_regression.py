@@ -89,6 +89,12 @@ EXTRACTORS: Dict[str, Tuple[str, Callable[[dict], float]]] = {
         "train_traffic.json", lambda a: a["restart"]["egress_reduction"]),
     "train_parity_mismatches": (
         "train_traffic.json", lambda a: len(a["parity"]["mismatches"])),
+    "fedlint_violations": (
+        "fedlint.json", lambda a: a["violations"]),
+    "fedlint_suppressions": (
+        "fedlint.json", lambda a: a["suppressed"]),
+    "fedlint_sanitizer_checks": (
+        "fedlint.json", lambda a: a["sanitizer"]["checks"]),
 }
 
 

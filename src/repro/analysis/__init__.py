@@ -1,0 +1,43 @@
+"""fedlint: repo-native static invariant analysis for the federation stack.
+
+Nearly every hard bug in this repo's history was an *invariant*
+violation, not a logic error: ``OutageSchedule`` lacking a usable
+``__eq__``/``__hash__`` silently broke federation sharing keys (PR 5),
+shared eviction-policy instances cross-contaminated replicas (PR 5),
+and engine-parity gaps only surfaced through the expensive 220-trace
+differential fuzz (PR 6).  ``fedlint`` turns those invariants into AST
+checks that fail in seconds at lint time:
+
+* ``spec-hygiene``      — sharing-key value types must hash like values
+* ``jit-purity``        — no host side effects inside jitted functions
+* ``parity-surface``    — report counters written by both engines
+* ``x64-scoping``       — float64 in kernels/ only under enable_x64
+* ``deprecation-hygiene`` — no internal callers of deprecated shims
+
+Run it::
+
+    PYTHONPATH=src python -m repro.analysis --strict src/repro
+
+The runtime companion (``repro.analysis.sanitize``) replays seeded
+scenarios twice per engine and checks byte-identical reports; see
+``python -m repro.analysis.sanitize``.
+"""
+from .core import (  # noqa: F401
+    Checker,
+    ModuleInfo,
+    Violation,
+    all_rules,
+    load_baseline,
+    register,
+    run_analysis,
+)
+
+__all__ = [
+    "Checker",
+    "ModuleInfo",
+    "Violation",
+    "all_rules",
+    "load_baseline",
+    "register",
+    "run_analysis",
+]

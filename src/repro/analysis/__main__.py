@@ -1,0 +1,84 @@
+"""CLI entry point: ``python -m repro.analysis [--strict] [paths...]``.
+
+Exit codes: 0 clean (or only suppressed findings), 1 unsuppressed
+violations under ``--strict``, 2 usage/parse errors.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from .core import all_rules, report_json, run_analysis
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis",
+        description="fedlint: static invariant analysis for the "
+                    "federation stack")
+    ap.add_argument("targets", nargs="*", default=["src/repro"],
+                    help="files or directories to analyze "
+                         "(default: src/repro)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any unsuppressed violation")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit machine-readable JSON instead of the "
+                         "human listing")
+    ap.add_argument("--rule", action="append", dest="rules", default=None,
+                    metavar="RULE",
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline suppression file "
+                         "(default: fedlint.toml next to the first "
+                         "target's repo root, if present)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list registered rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, cls in sorted(all_rules().items()):
+            print(f"{name:<22} {cls.description}")
+        return 0
+
+    targets = [Path(t) for t in (args.targets or ["src/repro"])]
+    for t in targets:
+        if not t.exists():
+            print(f"repro.analysis: no such path: {t}", file=sys.stderr)
+            return 2
+
+    baseline = args.baseline
+    if baseline is None:
+        # walk up from the first target looking for fedlint.toml
+        probe = targets[0].resolve()
+        for parent in [probe] + list(probe.parents):
+            cand = parent / "fedlint.toml"
+            if cand.exists():
+                baseline = cand
+                break
+
+    try:
+        violations, entries = run_analysis(
+            targets, root=Path.cwd(), rules=args.rules, baseline=baseline)
+    except ValueError as exc:
+        print(f"repro.analysis: {exc}", file=sys.stderr)
+        return 2
+
+    active = [v for v in violations if not v.suppressed]
+    if args.as_json:
+        print(report_json(violations, entries))
+    else:
+        for v in violations:
+            print(v.render())
+        n_sup = len(violations) - len(active)
+        print(f"fedlint: {len(active)} violation(s), "
+              f"{n_sup} suppressed"
+              + (f" (baseline: {baseline})" if baseline else ""))
+    if args.strict and active:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,8 @@
+"""fedlint checkers — importing this package registers every rule."""
+from . import (  # noqa: F401
+    deprecation,
+    jit_purity,
+    parity_surface,
+    spec_hygiene,
+    x64_scoping,
+)

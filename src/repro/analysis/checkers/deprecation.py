@@ -1,0 +1,110 @@
+"""deprecation-hygiene: shims warn properly and stay external-only.
+
+PR 9 kept the legacy client/writeback call sites alive behind
+``ClientPlane`` deprecation shims in ``core/api.py``.  Two invariants
+keep that debt from re-rooting:
+
+* No *internal* call site constructs ``ClientPlane`` — the shim exists
+  for out-of-tree callers.  The only in-tree functions allowed to
+  touch it are the compat fallbacks that themselves emit a
+  ``DeprecationWarning`` (the shims in ``data/loader.py`` /
+  ``train/checkpoint.py``), plus its defining module and tests.
+* Every ``DeprecationWarning`` is raised with ``stacklevel>=2`` so the
+  warning points at the *caller*, not at the shim's own line —
+  a stacklevel-1 warning is undebuggable noise.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..core import Checker, ModuleInfo, Violation, register
+
+DEPRECATED_NAMES = ("ClientPlane",)
+# modules allowed to reference the shim freely
+_DEFINING_SUFFIXES = ("core/api.py", "core/__init__.py")
+
+
+def _dotted(node: ast.expr) -> str:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _emits_deprecation_warning(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) \
+                and _dotted(node.func).split(".")[-1] == "warn":
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                if "DeprecationWarning" in _dotted(arg):
+                    return True
+    return False
+
+
+@register
+class DeprecationHygieneChecker(Checker):
+    rule = "deprecation-hygiene"
+    description = ("no internal ClientPlane shim call sites outside the "
+                   "compat fallbacks; DeprecationWarning needs "
+                   "stacklevel>=2")
+
+    def check_module(self, mod: ModuleInfo) -> Iterable[Violation]:
+        p = mod.relpath.replace("\\", "/")
+        out: List[Violation] = []
+        is_test = "/tests/" in f"/{p}" or p.startswith("tests/") \
+            or p.split("/")[-1].startswith("test_")
+        is_defining = any(p.endswith(s) for s in _DEFINING_SUFFIXES)
+
+        # map each node id to its innermost enclosing function
+        enclosing = {}
+        for fn in ast.walk(mod.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for sub in ast.walk(fn):
+                    enclosing[id(sub)] = fn  # innermost wins (walk order)
+
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func)
+            last = name.split(".")[-1]
+            # stacklevel audit applies everywhere, tests included
+            if last == "warn":
+                is_dep = any(
+                    "DeprecationWarning" in _dotted(a)
+                    for a in list(node.args)
+                    + [k.value for k in node.keywords])
+                if is_dep:
+                    level = None
+                    if len(node.args) >= 3 and isinstance(
+                            node.args[2], ast.Constant):
+                        level = node.args[2].value
+                    for kw in node.keywords:
+                        if kw.arg == "stacklevel" \
+                                and isinstance(kw.value, ast.Constant):
+                            level = kw.value.value
+                    if not isinstance(level, int) or level < 2:
+                        out.append(self.violation(
+                            mod, node,
+                            "DeprecationWarning raised with "
+                            f"stacklevel={level!r} — must be >=2 so the "
+                            "warning points at the caller, not the shim"))
+                continue
+            if is_test or is_defining:
+                continue
+            if last in DEPRECATED_NAMES:
+                fn = enclosing.get(id(node))
+                if fn is not None and _emits_deprecation_warning(fn):
+                    continue  # this IS a compat shim: it warns
+                where = f" in {fn.name}()" if fn is not None else ""
+                out.append(self.violation(
+                    mod, node,
+                    f"internal call site constructs deprecated {last}"
+                    f"{where} without emitting a DeprecationWarning — "
+                    f"route through DataPlane.for_federation instead of "
+                    f"the PR 9 compat shim",
+                    symbol=getattr(fn, "name", "")))
+        return out

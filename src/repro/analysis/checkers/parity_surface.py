@@ -1,0 +1,145 @@
+"""parity-surface: every counter must be written by *both* engines.
+
+The repo's core guarantee is analytic-vs-simulated engine parity on
+the accounting surface (bytes, hits, egress, per-tier counters).  A
+counter field declared on one of the report/stats classes but assigned
+in only one engine path is a latent parity gap: the differential fuzz
+(PR 6) eventually finds it, hours later.  This rule finds it at lint
+time.
+
+Mechanics: collect the numeric (``int``/``float``-annotated) fields
+declared on the target classes, then collect every assignment to a
+matching attribute name — plain writes (``r.outages = n``), augmented
+writes (``stats.bytes += n``) and constructor keywords
+(``ScenarioReport(bytes_moved=...)``) — partitioned into the analytic
+file set (``core/api.py``, ``core/client.py``), the simulated file set
+(``core/simclient.py``, ``core/simulator.py``), and shared modules
+(everything else, e.g. ``core/ring.py``; a shared write counts for
+both engines because both route through it).  A field with writes in
+one engine set but not the other is a violation, anchored at the field
+declaration.
+
+Matching is by attribute *name*, not by tracked type — field names on
+these classes are distinctive enough (``bytes_moved``,
+``origin_egress_bytes``) that name-matching is the right
+cost/precision trade for a repo-native linter.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Set, Tuple
+
+from ..core import Checker, ModuleInfo, Violation, register
+
+TARGET_CLASSES = ("ScenarioReport", "TransferStats", "GroupStats",
+                  "FetchRollup", "CacheUsagePacket")
+ANALYTIC_FILES = ("core/api.py", "core/client.py")
+SIM_FILES = ("core/simclient.py", "core/simulator.py")
+_NUMERIC_ANNOTATIONS = {"int", "float"}
+
+
+def _file_set(relpath: str) -> str:
+    p = relpath.replace("\\", "/")
+    if any(p.endswith(s) for s in ANALYTIC_FILES):
+        return "analytic"
+    if any(p.endswith(s) for s in SIM_FILES):
+        return "sim"
+    return "shared"
+
+
+def _is_numeric_field(stmt: ast.AnnAssign) -> bool:
+    ann = stmt.annotation
+    if isinstance(ann, ast.Name):
+        return ann.id in _NUMERIC_ANNOTATIONS
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value in _NUMERIC_ANNOTATIONS
+    return False
+
+
+@dataclass
+class _FieldDecl:
+    cls: str
+    name: str
+    mod: ModuleInfo
+    node: ast.AST
+
+
+@register
+class ParitySurfaceChecker(Checker):
+    rule = "parity-surface"
+    description = ("numeric counters on report/stats classes must be "
+                   "assigned by both the analytic and simulated engine "
+                   "paths")
+
+    def __init__(self) -> None:
+        self._decls: List[_FieldDecl] = []
+        # attr name -> set of engine sides that write it
+        self._writes: Dict[str, Set[str]] = {}
+        self._saw_engine_file = {"analytic": False, "sim": False}
+
+    def check_module(self, mod: ModuleInfo) -> Iterable[Violation]:
+        side = _file_set(mod.relpath)
+        if side in self._saw_engine_file:
+            self._saw_engine_file[side] = True
+        sides = ("analytic", "sim") if side == "shared" else (side,)
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef) \
+                    and node.name in TARGET_CLASSES:
+                for stmt in node.body:
+                    if isinstance(stmt, ast.AnnAssign) \
+                            and isinstance(stmt.target, ast.Name) \
+                            and _is_numeric_field(stmt):
+                        self._decls.append(_FieldDecl(
+                            cls=node.name, name=stmt.target.id,
+                            mod=mod, node=stmt))
+            # attribute writes: r.field = / r.field += ...
+            targets: List[ast.expr] = []
+            if isinstance(node, ast.Assign):
+                targets = list(node.targets)
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            for tgt in targets:
+                if isinstance(tgt, ast.Attribute):
+                    self._mark(tgt.attr, sides)
+            # constructor keywords: ScenarioReport(bytes_moved=...)
+            if isinstance(node, ast.Call):
+                fname = node.func
+                cname = fname.attr if isinstance(fname, ast.Attribute) \
+                    else fname.id if isinstance(fname, ast.Name) else ""
+                if cname in TARGET_CLASSES or cname == "replace":
+                    for kw in node.keywords:
+                        if kw.arg:
+                            self._mark(kw.arg, sides)
+        return ()
+
+    def _mark(self, attr: str, sides: Tuple[str, ...]) -> None:
+        self._writes.setdefault(attr, set()).update(sides)
+
+    def finalize(self) -> Iterable[Violation]:
+        # Only meaningful when both engine files were in the analyzed
+        # set — linting a lone fixture module must not claim the whole
+        # engine is missing.
+        if not (self._saw_engine_file["analytic"]
+                and self._saw_engine_file["sim"]):
+            return []
+        out: List[Violation] = []
+        for d in self._decls:
+            sides = self._writes.get(d.name, set())
+            missing = {"analytic", "sim"} - sides
+            if missing and len(missing) < 2:
+                present = next(iter(sides & {"analytic", "sim"}))
+                out.append(self.violation(
+                    d.mod, d.node,
+                    f"counter {d.cls}.{d.name} is assigned on the "
+                    f"{present} engine path but never on the "
+                    f"{next(iter(missing))} path — latent engine-parity "
+                    f"gap", symbol=f"{d.cls}.{d.name}"))
+            elif len(missing) == 2:
+                out.append(self.violation(
+                    d.mod, d.node,
+                    f"counter {d.cls}.{d.name} is declared but never "
+                    f"assigned by either engine path — dead parity "
+                    f"surface", symbol=f"{d.cls}.{d.name}"))
+        return out

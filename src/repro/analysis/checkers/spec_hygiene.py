@@ -1,0 +1,171 @@
+"""spec-hygiene: sharing-key value types must behave like values.
+
+Federation sharing (``_SharedFederations``) and sweep-axis dedup
+compare ``*Spec`` objects with ``==``; a spec that is mutable, or that
+defines ``__eq__`` without ``__hash__`` (Python then sets
+``__hash__ = None``), silently breaks those keys — the exact PR 5
+``OutageSchedule`` bug.  For every class whose name ends in ``Spec``
+or ``Schedule`` this rule requires one of:
+
+* ``@dataclass(frozen=True)`` (eq/hash generated consistently), or
+* an explicit ``__eq__`` **and** a real ``__hash__`` (``__hash__ =
+  None`` does not count: unhashable specs cannot move to set/dict
+  sharing keys later).
+
+Additionally, *mutable defaults* are flagged everywhere they can
+cross-contaminate instances: ``field(default_factory=list)`` is fine,
+but a class-level ``x = []`` / ``= {}`` / ``= set()`` literal, or a
+dataclass default that is a shared mutable instance, is an error (the
+PR 5 shared-eviction-policy bug generalized).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from ..core import Checker, ModuleInfo, Violation, register
+
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp)
+# constructor-call defaults that are fine to share across instances
+_IMMUTABLE_CALLS = {"tuple", "frozenset", "field"}
+
+
+def _is_spec_class(node: ast.ClassDef) -> bool:
+    return node.name.endswith("Spec") or node.name.endswith("Schedule")
+
+
+def _dataclass_decorator(node: ast.ClassDef) -> Optional[ast.expr]:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = None
+        if isinstance(target, ast.Name):
+            name = target.id
+        elif isinstance(target, ast.Attribute):
+            name = target.attr
+        if name == "dataclass":
+            return dec
+    return None
+
+
+def _dataclass_is_frozen(dec: ast.expr) -> bool:
+    if not isinstance(dec, ast.Call):
+        return False
+    for kw in dec.keywords:
+        if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+            return bool(kw.value.value)
+    return False
+
+
+def _dataclass_eq_disabled(dec: ast.expr) -> bool:
+    if not isinstance(dec, ast.Call):
+        return False
+    for kw in dec.keywords:
+        if kw.arg == "eq" and isinstance(kw.value, ast.Constant):
+            return not kw.value.value
+    return False
+
+
+def _call_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+@register
+class SpecHygieneChecker(Checker):
+    rule = "spec-hygiene"
+    description = ("*Spec/*Schedule classes must be frozen dataclasses or "
+                   "define consistent __eq__/__hash__; no mutable defaults")
+
+    def check_module(self, mod: ModuleInfo) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef) and _is_spec_class(node):
+                out.extend(self._check_class(mod, node))
+        return out
+
+    def _check_class(self, mod: ModuleInfo,
+                     node: ast.ClassDef) -> Iterable[Violation]:
+        out: List[Violation] = []
+        dec = _dataclass_decorator(node)
+        frozen = dec is not None and _dataclass_is_frozen(dec)
+
+        methods = {n.name for n in node.body
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        hash_assigned_none = False
+        hash_assigned_real = False
+        for stmt in node.body:
+            if isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == "__hash__":
+                        if isinstance(stmt.value, ast.Constant) \
+                                and stmt.value.value is None:
+                            hash_assigned_none = True
+                        else:
+                            hash_assigned_real = True
+        has_eq = "__eq__" in methods or (
+            dec is not None and not _dataclass_eq_disabled(dec))
+        has_hash = ("__hash__" in methods or hash_assigned_real
+                    or frozen)
+
+        if not frozen:
+            if "__eq__" in methods and not has_hash:
+                msg = ("defines __eq__ without a usable __hash__ "
+                       + ("(__hash__ = None makes it unhashable) "
+                          if hash_assigned_none else "")
+                       + "— sharing-key lookups that move to dict/set "
+                         "keys will break; freeze the class or add a "
+                         "__hash__ consistent with __eq__")
+                out.append(self.violation(mod, node, msg, symbol=node.name))
+            elif dec is not None and not has_hash:
+                # plain @dataclass: __eq__ generated, __hash__ set to None
+                out.append(self.violation(
+                    mod, node,
+                    "non-frozen dataclass generates __eq__ but sets "
+                    "__hash__ = None; use @dataclass(frozen=True) so the "
+                    "spec is a true value type for federation sharing "
+                    "keys and sweep axes", symbol=node.name))
+            elif dec is None and not has_eq:
+                out.append(self.violation(
+                    mod, node,
+                    "plain class with neither dataclass machinery nor "
+                    "__eq__ — sharing-key comparison falls back to "
+                    "identity, so equal specs will not share a "
+                    "federation", symbol=node.name))
+
+        # mutable defaults: class-level literals and shared call instances
+        for stmt in node.body:
+            target_name, value = None, None
+            if isinstance(stmt, ast.AnnAssign) and stmt.value is not None \
+                    and isinstance(stmt.target, ast.Name):
+                target_name, value = stmt.target.id, stmt.value
+            elif isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                target_name, value = stmt.targets[0].id, stmt.value
+            if value is None or target_name is None \
+                    or target_name.startswith("__"):
+                continue
+            if isinstance(value, _MUTABLE_LITERALS):
+                out.append(self.violation(
+                    mod, value,
+                    f"field {target_name!r} has a mutable literal default "
+                    f"shared by every instance; use "
+                    f"field(default_factory=...) or a tuple",
+                    symbol=node.name))
+            elif dec is not None and isinstance(value, ast.Call):
+                name = _call_name(value)
+                if name and name not in _IMMUTABLE_CALLS \
+                        and name[0].isupper():
+                    # Uppercase call = constructing an instance shared by
+                    # every spec (the PR 5 shared-policy bug shape).
+                    out.append(self.violation(
+                        mod, value,
+                        f"field {target_name!r} defaults to a shared "
+                        f"{name}() instance; every spec will alias one "
+                        f"object — use field(default_factory={name})",
+                        symbol=node.name))
+        return out

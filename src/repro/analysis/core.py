@@ -1,0 +1,346 @@
+"""fedlint framework: rule registry, suppressions, module walking.
+
+The pieces:
+
+* :class:`Violation` — one finding (rule, file, line, message).
+* :class:`Checker` — base class; subclasses visit each module's AST
+  and/or do a project-wide pass in :meth:`Checker.finalize`.
+* :func:`register` — class decorator adding a checker to the registry.
+* :func:`run_analysis` — walk ``*.py`` files, parse, run every
+  checker, apply inline + baseline suppressions.
+
+Suppression layers (both count as *suppressed*, never deleted — the
+JSON output carries them so the CI floor can gate suppression creep):
+
+* inline: ``# fedlint: disable=rule-a,rule-b`` on the flagged line or
+  on a comment-only line directly above it;
+* baseline: ``fedlint.toml`` ``[[suppress]]`` entries with a required
+  ``reason`` (reviewed, justified debt — e.g. analytic-engine fields
+  documented as zeroed).
+
+``fedlint.toml`` is parsed by a tiny TOML-subset reader because the
+container's Python 3.10 predates :mod:`tomllib`; see
+:func:`load_baseline` for the accepted grammar.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Type
+
+__all__ = [
+    "BaselineEntry",
+    "Checker",
+    "ModuleInfo",
+    "Violation",
+    "all_rules",
+    "load_baseline",
+    "register",
+    "run_analysis",
+]
+
+# `# fedlint: disable=rule-a, rule-b` — the only inline directive.
+_DIRECTIVE = re.compile(r"#\s*fedlint:\s*disable=([\w\-, ]+)")
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One finding. ``suppressed_by`` names the layer that silenced it
+    (``"inline"`` or ``"baseline"``) or is ``None`` when it gates."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    symbol: str = ""
+    suppressed_by: Optional[str] = None
+
+    @property
+    def suppressed(self) -> bool:
+        return self.suppressed_by is not None
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+            "symbol": self.symbol,
+            "suppressed_by": self.suppressed_by,
+        }
+
+    def render(self) -> str:
+        tag = f" [suppressed:{self.suppressed_by}]" if self.suppressed else ""
+        sym = f" ({self.symbol})" if self.symbol else ""
+        return f"{self.path}:{self.line}: {self.rule}{sym}: " \
+               f"{self.message}{tag}"
+
+
+@dataclass
+class ModuleInfo:
+    """A parsed source module plus its inline-suppression map."""
+
+    path: Path
+    relpath: str
+    source: str
+    tree: ast.Module
+    # line number -> set of rule names disabled on that line
+    suppressions: Dict[int, frozenset] = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, path: Path, root: Path) -> "ModuleInfo":
+        source = path.read_text()
+        tree = ast.parse(source, filename=str(path))
+        try:
+            rel = str(path.relative_to(root))
+        except ValueError:
+            rel = str(path)
+        sup = _parse_suppressions(source)
+        # A directive above (or on) a decorator also covers the
+        # decorated `class`/`def` line the checkers anchor at.
+        for node in ast.walk(tree):
+            decs = getattr(node, "decorator_list", None)
+            if decs:
+                merged = sup.get(node.lineno, frozenset())
+                for line in range(decs[0].lineno, node.lineno):
+                    merged = merged | sup.get(line, frozenset())
+                if merged:
+                    sup[node.lineno] = merged
+        return cls(path=path, relpath=rel, source=source, tree=tree,
+                   suppressions=sup)
+
+    def disabled_rules(self, line: int) -> frozenset:
+        """Rules inline-disabled for ``line`` (same line, or a
+        comment-only line directly above)."""
+        return self.suppressions.get(line, frozenset())
+
+
+def _parse_suppressions(source: str) -> Dict[int, frozenset]:
+    """Map each source line to the rules disabled there.
+
+    A directive on a code line applies to that line.  A directive on a
+    comment-only line applies to the next line instead (the idiomatic
+    "annotate above" placement), chaining across consecutive
+    comment-only lines.
+    """
+    out: Dict[int, frozenset] = {}
+    pending: frozenset = frozenset()
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        m = _DIRECTIVE.search(text)
+        rules = frozenset(
+            r.strip() for r in m.group(1).split(",") if r.strip()
+        ) if m else frozenset()
+        stripped = text.strip()
+        if stripped.startswith("#"):
+            pending = pending | rules
+            continue
+        if not stripped:
+            pending = frozenset()
+            continue
+        here = rules | pending
+        pending = frozenset()
+        if here:
+            out[lineno] = here
+    return out
+
+
+@dataclass(frozen=True)
+class BaselineEntry:
+    """One reviewed ``[[suppress]]`` entry from ``fedlint.toml``."""
+
+    rule: str
+    file: str
+    reason: str
+    symbol: str = ""
+
+    def matches(self, v: Violation) -> bool:
+        if self.rule != v.rule:
+            return False
+        if Path(v.path).as_posix() != Path(self.file).as_posix() \
+                and not Path(v.path).as_posix().endswith(
+                    "/" + Path(self.file).as_posix()):
+            return False
+        if self.symbol and self.symbol != v.symbol:
+            return False
+        return True
+
+
+def load_baseline(path: Path) -> List[BaselineEntry]:
+    """Parse the ``fedlint.toml`` baseline-suppression file.
+
+    Python 3.10 has no :mod:`tomllib`, so this reads the narrow subset
+    the file actually uses: ``[[suppress]]`` table headers followed by
+    ``key = "string value"`` pairs.  Anything else (nesting, arrays,
+    multi-line strings) is a parse error — the baseline should stay
+    simple enough to review by eye.
+    """
+    entries: List[BaselineEntry] = []
+    current: Optional[Dict[str, str]] = None
+
+    def flush() -> None:
+        nonlocal current
+        if current is None:
+            return
+        missing = {"rule", "file", "reason"} - set(current)
+        if missing:
+            raise ValueError(
+                f"{path}: [[suppress]] entry missing {sorted(missing)}: "
+                f"{current}")
+        if not current["reason"].strip():
+            raise ValueError(
+                f"{path}: [[suppress]] for {current['rule']} in "
+                f"{current['file']} has an empty reason — every baseline "
+                f"suppression must be justified")
+        entries.append(BaselineEntry(
+            rule=current["rule"], file=current["file"],
+            reason=current["reason"], symbol=current.get("symbol", "")))
+        current = None
+
+    for lineno, raw in enumerate(path.read_text().splitlines(), start=1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line == "[[suppress]]":
+            flush()
+            current = {}
+            continue
+        m = re.fullmatch(r'(\w+)\s*=\s*"((?:[^"\\]|\\.)*)"\s*(?:#.*)?', line)
+        if m and current is not None:
+            current[m.group(1)] = m.group(2).replace('\\"', '"')
+            continue
+        raise ValueError(f"{path}:{lineno}: unparseable line {raw!r} "
+                         f"(fedlint.toml supports only [[suppress]] tables "
+                         f"of string keys)")
+    flush()
+    return entries
+
+
+class Checker:
+    """Base class for fedlint rules.
+
+    Subclasses set :attr:`rule` (the suppression name) and
+    :attr:`description`, then override :meth:`check_module` for
+    per-file findings and/or :meth:`finalize` for project-wide ones
+    (e.g. parity-surface, which needs writes from *several* files
+    before it can call a field single-sided).
+    """
+
+    rule: str = ""
+    description: str = ""
+
+    def check_module(self, mod: ModuleInfo) -> Iterable[Violation]:
+        return ()
+
+    def finalize(self) -> Iterable[Violation]:
+        return ()
+
+    # helper for subclasses
+    def violation(self, mod: ModuleInfo, node: ast.AST, message: str,
+                  symbol: str = "") -> Violation:
+        return Violation(rule=self.rule, path=mod.relpath,
+                         line=getattr(node, "lineno", 0), message=message,
+                         symbol=symbol)
+
+
+_REGISTRY: Dict[str, Type[Checker]] = {}
+
+
+def register(cls: Type[Checker]) -> Type[Checker]:
+    """Class decorator adding a checker to the global registry."""
+    if not cls.rule:
+        raise ValueError(f"{cls.__name__} has no rule name")
+    if cls.rule in _REGISTRY:
+        raise ValueError(f"duplicate fedlint rule {cls.rule!r}")
+    _REGISTRY[cls.rule] = cls
+    return cls
+
+
+def all_rules() -> Dict[str, Type[Checker]]:
+    # Import for the registration side effect; cheap and idempotent.
+    from . import checkers  # noqa: F401
+    return dict(_REGISTRY)
+
+
+def _iter_sources(targets: Sequence[Path]) -> List[Path]:
+    files: List[Path] = []
+    for t in targets:
+        if t.is_dir():
+            files.extend(sorted(p for p in t.rglob("*.py")
+                                if "__pycache__" not in p.parts))
+        elif t.suffix == ".py":
+            files.append(t)
+    return files
+
+
+def run_analysis(
+    targets: Sequence[Path],
+    root: Optional[Path] = None,
+    rules: Optional[Sequence[str]] = None,
+    baseline: Optional[Path] = None,
+) -> Tuple[List[Violation], List[BaselineEntry]]:
+    """Run the selected checkers over ``targets``.
+
+    Returns ``(violations, baseline_entries)`` — violations carry
+    their suppression state; callers decide what gates (``--strict``
+    fails on any unsuppressed finding).
+    """
+    root = root or Path.cwd()
+    registry = all_rules()
+    names = list(rules) if rules else sorted(registry)
+    unknown = sorted(set(names) - set(registry))
+    if unknown:
+        raise ValueError(f"unknown fedlint rule(s): {', '.join(unknown)}; "
+                         f"known: {', '.join(sorted(registry))}")
+    checkers = [registry[n]() for n in names]
+
+    modules: List[ModuleInfo] = []
+    findings: List[Violation] = []
+    for path in _iter_sources([Path(t) for t in targets]):
+        try:
+            mod = ModuleInfo.parse(path, root)
+        except SyntaxError as exc:
+            findings.append(Violation(
+                rule="parse-error", path=str(path),
+                line=exc.lineno or 0,
+                message=f"could not parse: {exc.msg}"))
+            continue
+        modules.append(mod)
+
+    per_module: Dict[str, ModuleInfo] = {m.relpath: m for m in modules}
+    for checker in checkers:
+        for mod in modules:
+            findings.extend(checker.check_module(mod))
+        findings.extend(checker.finalize())
+
+    entries = load_baseline(baseline) if baseline and baseline.exists() \
+        else []
+    out: List[Violation] = []
+    for v in findings:
+        mod = per_module.get(v.path)
+        if mod is not None and v.rule in mod.disabled_rules(v.line):
+            v = Violation(**{**v.__dict__, "suppressed_by": "inline"})
+        elif any(e.matches(v) for e in entries):
+            v = Violation(**{**v.__dict__, "suppressed_by": "baseline"})
+        out.append(v)
+    out.sort(key=lambda v: (v.path, v.line, v.rule))
+    return out, entries
+
+
+def report_json(violations: List[Violation],
+                entries: List[BaselineEntry]) -> str:
+    active = [v for v in violations if not v.suppressed]
+    return json.dumps({
+        "violations": [v.to_json() for v in violations],
+        "counts": {
+            "total": len(violations),
+            "active": len(active),
+            "suppressed_inline": sum(
+                1 for v in violations if v.suppressed_by == "inline"),
+            "suppressed_baseline": sum(
+                1 for v in violations if v.suppressed_by == "baseline"),
+            "baseline_entries": len(entries),
+        },
+    }, indent=2, sort_keys=True)

@@ -748,7 +748,7 @@ class ClientPlane:
 # ---------------------------------------------------------------------------
 # Declarative scenarios
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class WorkloadSpec:
     """A declarative workload: a restart ``storm`` (every worker pulls
     the same object) or a production-shaped ``zipf`` trace (Table 2
@@ -969,7 +969,7 @@ class WorkloadSpec:
         return trace
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class ScenarioSpec:
     """One scenario, declaratively: federation + workload + outages +
     solver + engine.  Executed by :func:`run_scenario`; the same spec
@@ -1132,7 +1132,7 @@ def _report(spec: ScenarioSpec, fed: Federation, plane: DataPlane,
 # ---------------------------------------------------------------------------
 # Batched scenario sweeps
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class SweepSpec:
     """A ScenarioSpec template crossed with parameter axes.
 

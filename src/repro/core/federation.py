@@ -34,7 +34,7 @@ GB = 1e9
 TB = 1e12
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class SiteSpec:
     """One site (university / I2 PoP / pod).
 
@@ -78,7 +78,7 @@ class SiteSpec:
                 for i in range(max(1, self.cache_replicas))]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class TierSpec:
     """One level of a cache hierarchy: the sites at that level and the
     parent site they all fill from.
@@ -313,7 +313,7 @@ def _build(sites: Sequence[SiteSpec], origin_site: str,
                       groups, proxies, monitor, bus, aggregator, list(sites))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class FederationSpec:
     """Declarative federation description — the deployment half of a
     :class:`~repro.core.api.ScenarioSpec`.

@@ -49,7 +49,7 @@ from repro.kernels.cache_model import (CacheModel, StackedModels,
                                        stack_models)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class PlannerSpec:
     """One inverse-planning problem.
 

@@ -422,8 +422,8 @@ class OutageSchedule:
     cares about."""
 
     def __init__(self, events: Iterable[OutageEvent] = ()) -> None:
-        self.events: List[OutageEvent] = sorted(
-            events, key=lambda e: (e.time, e.cache, e.action))
+        self.events: Tuple[OutageEvent, ...] = tuple(sorted(
+            events, key=lambda e: (e.time, e.cache, e.action)))
 
     def __iter__(self):
         return iter(self.events)
@@ -439,7 +439,12 @@ class OutageSchedule:
             return NotImplemented
         return self.events == other.events
 
-    __hash__ = None  # mutable value type, like a list
+    def __hash__(self) -> int:
+        # Consistent with __eq__ (the canonical sorted event tuple):
+        # lets schedules graduate from the linear sharing-key scan to
+        # dict/set keys without the silent identity-fallback bug PR 5
+        # fixed for equality.
+        return hash(self.events)
 
     def merge(self, other: "OutageSchedule") -> "OutageSchedule":
         return OutageSchedule([*self.events, *other.events])

@@ -86,7 +86,12 @@ class ServeEngine:
                 raise FileNotFoundError(f"no checkpoint for run {run!r}")
         if like is None:
             from ..models import init_lm
-            like, _ = init_lm(jax.random.PRNGKey(0), cfg)
+            # Template init must track the engine's own seed: a
+            # hard-coded PRNGKey(0) here meant two engines built with
+            # different seeds silently shared init weights whenever the
+            # checkpoint restore fell back to the template values.
+            like, _ = init_lm(
+                jax.random.PRNGKey(engine_kw.get("seed", 0)), cfg)
         params, _ = ck.restore(step, like=like)
         eng = cls(cfg, params, plane=plane, site=site, worker=worker,
                   **engine_kw)

@@ -1,0 +1,16 @@
+"""Bad fixture: deprecation-hygiene — silent shim use + lazy warning."""
+import warnings
+
+
+class ClientPlane:
+    pass
+
+
+def sneaky_internal_caller(fed):
+    # constructs the deprecated shim without any DeprecationWarning
+    return ClientPlane()
+
+
+def lazy_warner():
+    # stacklevel=1 (the default): the warning points at the shim itself
+    warnings.warn("old API", DeprecationWarning)

@@ -1,0 +1,18 @@
+"""Good fixture: deprecation-hygiene — a proper compat shim."""
+import warnings
+
+
+class ClientPlane:
+    pass
+
+
+def modern_path(plane, path):
+    return plane.fetch(path)
+
+
+def compat_fallback(fed):
+    # a shim is allowed to construct the deprecated surface because it
+    # warns, with stacklevel pointing at the caller
+    warnings.warn("use DataPlane.for_federation instead",
+                  DeprecationWarning, stacklevel=2)
+    return ClientPlane()

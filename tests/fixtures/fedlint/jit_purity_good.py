@@ -1,0 +1,34 @@
+"""Good fixture: jit-purity — pure traced functions, effects outside."""
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def pure_kernel(x):
+    return jnp.cumsum(x) * 2.0
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def pure_partial(x, n):
+    return x.reshape(n, -1).sum(axis=0)
+
+
+def seeded_helper(seed):
+    # seeded constructors are deterministic factories, not draws
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=4)
+
+
+def scan_body(carry, x):
+    return carry + x, carry
+
+
+def run(xs):
+    t0 = time.time()  # host timing OUTSIDE the traced function is fine
+    total, _ = jax.lax.scan(scan_body, 0.0, xs)
+    print("elapsed", time.time() - t0)  # ditto printing
+    return total

@@ -1,0 +1,14 @@
+"""Bad fixture: x64-scoping — unscoped JAX float64 + a global flip."""
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)  # process-wide precision flip
+
+
+def exact_distances(refs):
+    xs = jnp.asarray(refs, jnp.float64)  # outside any enable_x64 scope
+    return jnp.cumsum(xs)
+
+
+def stringly(refs):
+    return jnp.zeros(len(refs), dtype="float64")

@@ -1,0 +1,14 @@
+"""Bad fixture (analytic side): two counters this engine never writes."""
+from dataclasses import dataclass
+
+
+@dataclass
+class ScenarioReport:
+    name: str = ""
+    bytes_moved: int = 0
+    sim_only_counter: int = 0      # only the sim side writes this
+    never_written: float = 0.0     # nobody writes this at all
+
+
+def report(total):
+    return ScenarioReport(name="analytic", bytes_moved=total)

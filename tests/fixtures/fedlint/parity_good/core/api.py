@@ -1,0 +1,14 @@
+"""Good fixture (analytic side): every counter written by this engine."""
+from dataclasses import dataclass
+
+
+@dataclass
+class ScenarioReport:
+    name: str = ""
+    bytes_moved: int = 0
+    cache_hits: int = 0
+
+
+def report(hits, total):
+    return ScenarioReport(name="analytic", bytes_moved=total,
+                          cache_hits=hits)

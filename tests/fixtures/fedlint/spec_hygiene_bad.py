@@ -1,0 +1,40 @@
+"""Bad fixture: spec-hygiene — every way a sharing key goes wrong."""
+from dataclasses import dataclass
+
+
+class EvictionPolicy:
+    pass
+
+
+@dataclass
+class MutableSpec:  # non-frozen dataclass: __eq__ yes, __hash__ = None
+    capacity: float = 1.0
+
+
+class LopsidedSchedule:  # __eq__ without __hash__ (Python sets it None)
+    def __init__(self, events=()):
+        self.events = list(events)
+
+    def __eq__(self, other):
+        return self.events == other.events
+
+
+class IdentitySpec:  # no eq machinery at all: identity comparison
+    def __init__(self, capacity):
+        self.capacity = capacity
+
+
+@dataclass(frozen=True)
+class SharedDefaultSpec:
+    # frozen, but the default policy instance is shared by every spec
+    policy: EvictionPolicy = EvictionPolicy()
+
+
+class LiteralDefaultSpec:
+    tags = []  # class-level mutable literal shared by every instance
+
+    def __eq__(self, other):
+        return self.tags == other.tags
+
+    def __hash__(self):
+        return 0

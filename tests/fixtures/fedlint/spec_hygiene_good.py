@@ -1,0 +1,38 @@
+"""Good fixture: spec-hygiene — value types that behave like values."""
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class FrozenSpec:
+    capacity: float = 1.0
+    policies: Tuple[str, ...] = ("lru",)
+    tags: list = field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class DottedFrozenSpec:
+    ttl: float = 3600.0
+
+
+class HandRolledSchedule:
+    """Explicit __eq__ with a consistent __hash__ is fine."""
+
+    def __init__(self, events=()):
+        self.events = tuple(events)
+
+    def __eq__(self, other):
+        if not isinstance(other, HandRolledSchedule):
+            return NotImplemented
+        return self.events == other.events
+
+    def __hash__(self):
+        return hash(self.events)
+
+
+class NotASpecHolder:
+    """Not *Spec/*Schedule-named: out of the rule's scope entirely."""
+
+    def __eq__(self, other):
+        return True

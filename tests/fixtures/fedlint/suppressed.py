@@ -1,0 +1,18 @@
+"""Fixture: inline suppressions silence named rules, same or prior line."""
+from dataclasses import dataclass
+
+
+@dataclass
+class QuietSpec:  # fedlint: disable=spec-hygiene
+    capacity: float = 1.0
+
+
+# fedlint: disable=spec-hygiene
+@dataclass
+class AboveLineSpec:
+    capacity: float = 2.0
+
+
+@dataclass
+class LoudSpec:  # fedlint: disable=some-other-rule
+    capacity: float = 3.0
